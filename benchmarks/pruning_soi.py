@@ -1,0 +1,99 @@
+"""Paper Fig. 6 — SOI composes with pruning: global magnitude pruning applied
+to baseline vs SOI U-Nets; at matched quality the SOI+pruned model needs fewer
+MACs than pruning alone (the two techniques cut different axes: SOI removes
+*temporal* recomputation, pruning removes weights)."""
+
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.soi import SOIConvCfg
+from repro.data.synthetic import si_snr, speech_mixture
+from repro.models import unet
+
+KW = dict(in_channels=24, out_channels=24, enc_channels=(16, 20, 24, 32))
+
+
+def _train(cfg, steps, seed=0):
+    rng = np.random.default_rng(seed)
+    params, ns = unet.init(jax.random.PRNGKey(seed), cfg)
+    from repro.optim import adamw_init, adamw_update
+
+    def loss_fn(p, noisy, clean):
+        y, _ = unet.apply_offline(p, ns, noisy, cfg)
+        return jnp.mean(jnp.square(y - clean))
+
+    @jax.jit
+    def step(p, o, noisy, clean):
+        l, g = jax.value_and_grad(loss_fn)(p, noisy, clean)
+        p, o = adamw_update(g, o, p, lr=2e-3, weight_decay=0.0)
+        return p, o, l
+
+    opt = adamw_init(params)
+    for i in range(steps):
+        noisy, clean = speech_mixture(rng, 8, 64, cfg.in_channels)
+        params, opt, _ = step(params, opt, jnp.asarray(noisy),
+                              jnp.asarray(clean))
+    return params, ns
+
+
+def _eval(params, ns, cfg, seed=123):
+    rng = np.random.default_rng(seed)
+    noisy, clean = speech_mixture(rng, 16, 64, cfg.in_channels)
+    y, _ = unet.apply_offline(params, ns, jnp.asarray(noisy), cfg)
+    return float(np.mean(si_snr(np.asarray(y), clean)
+                         - si_snr(noisy, clean)))
+
+
+def _prune_global(params, frac):
+    """Unstructured global magnitude pruning of conv kernels."""
+    leaves, tdef = jax.tree_util.tree_flatten_with_path(params)
+    weights = [(p, v) for p, v in leaves
+               if v.ndim >= 2]                      # conv kernels only
+    allw = jnp.concatenate([jnp.abs(v).reshape(-1) for _, v in weights])
+    thresh = jnp.quantile(allw, frac)
+    out = []
+    for p, v in leaves:
+        if v.ndim >= 2:
+            v = jnp.where(jnp.abs(v) < thresh, 0.0, v)
+        out.append(v)
+    return tdef.unflatten(out)
+
+
+def run(csv=False, steps=200):
+    variants = [
+        ("STMC", unet.UNetConfig(**KW)),
+        ("SOI 2", unet.UNetConfig(soi=SOIConvCfg(pairs=(2,)), **KW)),
+    ]
+    fracs = (0.0, 0.3, 0.6)
+    rows = []
+    for label, cfg in variants:
+        t0 = time.time()
+        params, ns = _train(cfg, steps)
+        rep = unet.complexity_report(cfg)
+        for f in fracs:
+            pp = _prune_global(params, f) if f else params
+            s = _eval(pp, ns, cfg)
+            macs = rep.mmacs_per_s * (1 - f)   # dense-equivalent effective
+            rows.append((label, f, s, macs, time.time() - t0))
+    if csv:
+        for label, f, s, m, dt in rows:
+            print(f"pruning_soi/{label.replace(' ', '_')}_p{int(f*100)},"
+                  f"{dt*1e6/steps:.0f},sisnri={s:.2f},mmacs={m:.0f}")
+    else:
+        print("\n== Fig. 6 (pruning x SOI) ==")
+        print(f"{'model':8s} {'pruned %':>8s} {'SI-SNRi dB':>10s} "
+              f"{'eff MMAC/s':>11s}")
+        for label, f, s, m, _ in rows:
+            print(f"{label:8s} {100*f:8.0f} {s:10.2f} {m:11.1f}")
+        print("SOI+pruning reaches a given SI-SNRi at lower effective MACs "
+              "than pruning alone (paper: ~300 MMAC/s saved at 6 dB)")
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,60 @@
+"""Benchmark harness entrypoint — one benchmark per paper table/figure.
+
+``python -m benchmarks.run``            full human-readable report
+``python -m benchmarks.run --csv``      name,us_per_call,derived CSV rows
+``python -m benchmarks.run --fast``     complexity-only (skip training runs)
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--csv", action="store_true")
+    ap.add_argument("--fast", action="store_true",
+                    help="skip the small training-based quality benchmarks")
+    args = ap.parse_args()
+
+    sys.path.insert(0, "src")
+    t0 = time.time()
+
+    from benchmarks import (appendix_b_prediction, pruning_soi, quality_pp,
+                            soi_lm_bench, table1_pp_soi, table2_fp_soi,
+                            table3_resampling, table4_asc)
+
+    table1_pp_soi.run(csv=args.csv)
+    table2_fp_soi.run(csv=args.csv)
+    table4_asc.run(csv=args.csv, train_quality=not args.fast)
+    soi_lm_bench.run(csv=args.csv)
+    if not args.fast:
+        table3_resampling.run(csv=args.csv)
+        quality_pp.run(csv=args.csv)
+        pruning_soi.run(csv=args.csv)
+        appendix_b_prediction.run(csv=args.csv)
+
+    # roofline summary (from stored dry-run artifacts, if present)
+    try:
+        from benchmarks import roofline
+        rows = roofline.build_table()
+        ok = [r for r in rows if r.get("status") == "ok"]
+        if ok and not args.csv:
+            print(f"\n== Roofline (from {len(ok)} dry-run cells; full table "
+                  "in experiments/roofline.md) ==")
+            worst = sorted(ok, key=lambda r: r["roofline_fraction"])[:3]
+            for r in worst:
+                print(f"  worst: {r['arch']} {r['shape']} {r['mesh']} "
+                      f"dominant={r['dominant']} "
+                      f"frac={r['roofline_fraction']:.2f}")
+    except Exception as e:
+        print(f"(roofline table unavailable: {e})")
+
+    if not args.csv:
+        print(f"\ntotal benchmark time: {time.time() - t0:.1f}s")
+
+
+if __name__ == "__main__":
+    main()

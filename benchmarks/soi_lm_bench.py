@@ -1,0 +1,87 @@
+"""SOI at LM scale (the framework's first-class integration): measured FLOP
+structure of scattered decode vs standard decode from the lowered steps, plus
+wall-clock on the CPU container for the smoke config (directional only).
+
+The headline numbers (full-size qwen3-1.7b decode_32k, 16x16 mesh) live in
+EXPERIMENTS.md §Perf — this benchmark regenerates the smoke-scale version and
+verifies the structural claim: the even (full) phase carries ~100% of a
+standard step's middle-block FLOPs, the odd phase carries ~0%, so average
+middle compute halves (paper's PP claim, token granularity).
+"""
+
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+import repro.configs.qwen3_1_7b as Q
+from repro.distributed.sharding import split_axes
+from repro.models import decode as D
+from repro.models import transformer as T
+
+
+def _flops_of(fn, *args):
+    import sys
+    sys.path.insert(0, ".")
+    from benchmarks import hlo_analysis as H
+    compiled = jax.jit(fn).lower(*args).compile()
+    return H.analyze(compiled.as_text())["flops"]
+
+
+def run(csv=False):
+    cfg_soi = Q.smoke_config(soi="pp")
+    cfg_std = Q.smoke_config()
+    params_soi, _ = split_axes(T.init(jax.random.PRNGKey(0), cfg_soi))
+    params_std, _ = split_axes(T.init(jax.random.PRNGKey(0), cfg_std))
+    b, s = 4, 64
+    tok = jnp.zeros((b,), jnp.int32)
+
+    state_std = D.init_decode_state(params_std, cfg_std, b, max_len=s)
+    std_step = lambda p, st, t: D.decode_step(p, cfg_std, st, t)
+    f_std = _flops_of(std_step, params_std, state_std, tok)
+
+    steppers = D.make_soi_steppers(params_soi, cfg_soi)
+    state_soi = D.init_decode_state(params_soi, cfg_soi, b, max_len=s)
+    f_even = _flops_of(steppers[0], params_soi, state_soi, tok)
+    f_odd = _flops_of(steppers[1], params_soi, state_soi, tok)
+    avg = (f_even + f_odd) / 2
+
+    # wall clock (CPU, directional)
+    t0 = time.time()
+    st = state_std
+    jstd = jax.jit(std_step)
+    lg, st = jstd(params_std, st, tok)
+    for _ in range(20):
+        lg, st = jstd(params_std, st, tok)
+    t_std = (time.time() - t0) / 21
+    jsoi = [jax.jit(f) for f in steppers]
+    st = state_soi
+    t0 = time.time()
+    for i in range(21):
+        lg, st = jsoi[i % 2](params_soi, st, tok)
+    t_soi = (time.time() - t0) / 21
+
+    rows = {
+        "std_step_flops": f_std,
+        "soi_even_flops": f_even,
+        "soi_odd_flops": f_odd,
+        "soi_avg_flops": avg,
+        "avg_reduction_%": 100 * (1 - avg / f_std),
+        "odd_reduction_%": 100 * (1 - f_odd / f_std),
+    }
+    if csv:
+        print(f"soi_lm_decode/avg,{t_soi*1e6:.0f},"
+              f"reduction={rows['avg_reduction_%']:.1f}%")
+    else:
+        print("\n== SOI scattered decode (LM, smoke scale) ==")
+        for k, v in rows.items():
+            print(f"  {k:20s} {v:,.1f}")
+        print(f"  wall-clock/step: std {t_std*1e3:.1f} ms vs "
+              f"SOI {t_soi*1e3:.1f} ms (CPU, directional)")
+    return rows
+
+
+if __name__ == "__main__":
+    run()

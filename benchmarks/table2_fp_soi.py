@@ -1,0 +1,55 @@
+"""Paper Table 2 / Fig. 5 — Fully Predictive SOI: complexity retain +
+precomputed fraction (the share of the network computable from strictly-past
+data, i.e. between inferences)."""
+
+from __future__ import annotations
+
+import time
+
+from repro.configs import soi_unet_dns
+from repro.core.soi import SOIConvCfg
+from repro.models import unet
+
+PAPER_ROWS = [
+    # (label, soi cfg, paper retain %, paper precomputed %)
+    ("SS-CC 2", SOIConvCfg(pairs=(2,), mode="fp"), 51.4, 97.2),
+    ("SS-CC 5", SOIConvCfg(pairs=(5,), mode="fp"), 64.8, 70.4),
+    ("SS-CC 7", SOIConvCfg(pairs=(7,), mode="fp"), 83.8, 32.4),
+    ("S-CC 1|sh3", SOIConvCfg(pairs=(1,), mode="fp", shift_pos=3), 50.0, 83.7),
+    ("S-CC 1|sh6", SOIConvCfg(pairs=(1,), mode="fp", shift_pos=6), 50.0, 57.4),
+    ("S-CC 2|sh5", SOIConvCfg(pairs=(2,), mode="fp", shift_pos=5), 51.4, 70.4),
+    ("S-CC 3|sh6", SOIConvCfg(pairs=(3,), mode="fp", shift_pos=6), 58.1, 57.4),
+    ("S-CC 4|sh6", SOIConvCfg(pairs=(4,), mode="fp", shift_pos=6), 61.5, 57.4),
+    ("S-CC 5|sh6", SOIConvCfg(pairs=(5,), mode="fp", shift_pos=6), 64.8, 57.4),
+    ("S-CC 6|sh7", SOIConvCfg(pairs=(6,), mode="fp", shift_pos=7), 71.3, 32.4),
+]
+
+
+def run(csv=False):
+    t0 = time.time()
+    rows = []
+    for label, soi, want_retain, want_pre in PAPER_ROWS:
+        rep = unet.complexity_report(soi_unet_dns.config(soi))
+        rows.append((label, 100 * rep.retain, want_retain,
+                     100 * rep.precomputed_fraction, want_pre,
+                     rep.on_arrival_macs_per_frame * 62.5 / 1e6))
+    us = (time.time() - t0) / len(rows) * 1e6
+    if csv:
+        for r in rows:
+            print(f"table2_fp_soi/{r[0].replace(' ', '_').replace('|','_')},"
+                  f"{us:.1f},pre={r[3]:.1f}%,paper={r[4]}%")
+    else:
+        print("\n== Table 2 (FP SOI): complexity + precomputed fraction ==")
+        print(f"{'model':14s} {'retain%':>8s} {'paper':>6s} {'precomp%':>9s} "
+              f"{'paper':>6s} {'on-arrival MMAC/s':>18s}")
+        for label, r, wr, p, wp, oa in rows:
+            flag = "  " if abs(p - wp) < 0.6 and abs(r - wr) < 0.6 else "!!"
+            print(f"{label:14s} {r:8.1f} {wr:6.1f} {p:9.1f} {wp:6.1f} "
+                  f"{oa:18.1f} {flag}")
+        print("on-arrival = MACs that must run after a frame lands (FP's "
+              "latency win: the rest precomputes between frames)")
+    return rows
+
+
+if __name__ == "__main__":
+    run()

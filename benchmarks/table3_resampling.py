@@ -1,0 +1,100 @@
+"""Paper Table 3 — SOI vs input resampling at matched complexity.
+
+Quality side runs REAL (small) training on the synthetic separation task:
+baseline U-Net, SOI variants, and a 2x-downsampled-input baseline (the
+resampling strategy: halve the model's input rate, upsample outputs). The
+paper's claim to reproduce: at equal MACs, SOI retains far more quality than
+resampling, because resampling destroys input information while SOI only
+coarsens *internal* states.
+"""
+
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.soi import SOIConvCfg
+from repro.data.synthetic import si_snr, speech_mixture
+from repro.models import unet
+
+
+def _train(cfg, steps=220, b=8, t=64, lr=2e-3, seed=0, resample=False):
+    rng = np.random.default_rng(seed)
+    params, ns = unet.init(jax.random.PRNGKey(seed), cfg)
+
+    def loss_fn(p, noisy, clean):
+        y, _ = unet.apply_offline(p, ns, noisy, cfg, train=False)
+        return jnp.mean(jnp.square(y - clean))
+
+    @jax.jit
+    def step(p, opt, noisy, clean):
+        from repro.optim import adamw_update, clip_by_global_norm
+        l, g = jax.value_and_grad(loss_fn)(p, noisy, clean)
+        g, _ = clip_by_global_norm(g, 1.0)
+        p, opt = adamw_update(g, opt, p, lr=lr, weight_decay=0.0)
+        return p, opt, l
+
+    from repro.optim import adamw_init
+    opt = adamw_init(params)
+    for i in range(steps):
+        noisy, clean = speech_mixture(rng, b, t, cfg.in_channels)
+        noisy, clean = jnp.asarray(noisy), jnp.asarray(clean)
+        if resample:     # decimate input 2x, model runs at half rate
+            noisy_in = noisy[:, ::2]
+            clean_t = clean[:, ::2]
+        else:
+            noisy_in, clean_t = noisy, clean
+        params, opt, l = step(params, opt, noisy_in, clean_t)
+
+    # eval
+    rng_e = np.random.default_rng(10_000 + seed)
+    noisy, clean = speech_mixture(rng_e, 16, t, cfg.in_channels)
+    xin = jnp.asarray(noisy[:, ::2] if resample else noisy)
+    y, _ = unet.apply_offline(params, ns, xin, cfg, train=False)
+    y = np.asarray(y)
+    if resample:         # nearest-neighbor upsample back to full rate
+        y = np.repeat(y, 2, axis=1)[:, :noisy.shape[1]]
+    base = float(np.mean(si_snr(noisy, clean)))
+    out = float(np.mean(si_snr(y, clean)))
+    return out - base    # SI-SNR improvement
+
+
+def run(csv=False, steps=220):
+    kw = dict(in_channels=24, out_channels=24,
+              enc_channels=(16, 20, 24, 32), fps=62.5)
+    variants = [
+        ("baseline", unet.UNetConfig(**kw), False),
+        ("resample-2x", unet.UNetConfig(**kw), True),
+        ("SOI S-CC 2", unet.UNetConfig(soi=SOIConvCfg(pairs=(2,)), **kw), False),
+        ("SOI S-CC 1", unet.UNetConfig(soi=SOIConvCfg(pairs=(1,)), **kw), False),
+    ]
+    rows = []
+    for label, cfg, resample in variants:
+        t0 = time.time()
+        snr_i = _train(cfg, steps=steps, resample=resample)
+        rep = unet.complexity_report(cfg)
+        macs = rep.mmacs_per_s * (0.5 if resample else 1.0)
+        rows.append((label, snr_i, macs, time.time() - t0))
+    if csv:
+        for label, s, m, dt in rows:
+            print(f"table3_resampling/{label.replace(' ', '_')},"
+                  f"{dt * 1e6 / steps:.0f},sisnri={s:.2f}dB,mmacs={m:.0f}")
+    else:
+        print("\n== Table 3 (SOI vs resampling, synthetic separation) ==")
+        print(f"{'method':14s} {'SI-SNRi dB':>10s} {'MMAC/s':>8s}")
+        for label, s, m, dt in rows:
+            print(f"{label:14s} {s:10.2f} {m:8.1f}")
+        base = rows[0][1]
+        res = rows[1][1]
+        soi = max(rows[2][1], rows[3][1])
+        print(f"SOI retains {100 * soi / base:.0f}% of baseline SI-SNRi vs "
+              f"{100 * res / base:.0f}% for resampling at comparable MACs "
+              f"(paper: 94-97% vs 45-76%)")
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,76 @@
+"""SOI as a first-class LM serving feature: scattered decode.
+
+Loads a (reduced) qwen3-family model with the SOI middle block, streams a
+prompt through the per-phase steppers, keeps decoding, and verifies against
+the offline forward pass. Prints the per-phase FLOP structure: the odd phase
+omits the middle block entirely (the paper's MAC saving, token granularity);
+with --mode fp the middle runs one token ahead (precomputable between
+arrivals — the paper's latency win).
+
+    PYTHONPATH=src python examples/scattered_decode.py [--mode pp|fp]
+"""
+
+import argparse
+import sys
+
+sys.path.insert(0, "src")
+sys.path.insert(0, ".")
+
+import jax
+import jax.numpy as jnp
+
+import repro.configs.qwen3_1_7b as Q
+from repro.distributed.sharding import split_axes
+from repro.models import decode as D
+from repro.models import transformer as T
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--mode", default="pp", choices=["pp", "fp"])
+    args = ap.parse_args()
+
+    cfg = Q.smoke_config(soi=args.mode)
+    print(f"model: {cfg.name} (reduced) layers={cfg.n_layers} "
+          f"SOI middle = layers [{cfg.soi.first_layer}, {cfg.soi.last_layer})"
+          f" mode={cfg.soi.mode}")
+    params, _ = split_axes(T.init(jax.random.PRNGKey(0), cfg))
+
+    b, s = 2, 24
+    tokens = jax.random.randint(jax.random.PRNGKey(1), (b, s), 0, cfg.vocab)
+    full = T.forward(params, cfg, tokens)
+
+    steppers = [jax.jit(f) for f in D.make_soi_steppers(params, cfg)]
+    state = D.init_decode_state(params, cfg, b, max_len=s)
+    max_err = 0.0
+    for t in range(s):
+        lg, state = steppers[t % cfg.soi.stride](params, state, tokens[:, t])
+        max_err = max(max_err, float(jnp.max(jnp.abs(lg - full[:, t]))))
+    print(f"scattered decode == offline forward: max |dlogit| = {max_err:.2e}")
+
+    # FLOP structure of the two phases
+    from benchmarks import hlo_analysis as H
+    state0 = D.init_decode_state(params, cfg, b, max_len=s)
+    tok = tokens[:, 0]
+    fl = []
+    for i, fn in enumerate(D.make_soi_steppers(params, cfg)):
+        compiled = jax.jit(fn).lower(params, state0, tok).compile()
+        fl.append(H.analyze(compiled.as_text())["flops"])
+    cfg_std = Q.smoke_config()
+    params_std, _ = split_axes(T.init(jax.random.PRNGKey(0), cfg_std))
+    st_std = D.init_decode_state(params_std, cfg_std, b, max_len=s)
+    compiled = jax.jit(lambda p, st, t: D.decode_step(p, cfg_std, st, t)) \
+        .lower(params_std, st_std, tok).compile()
+    f_std = H.analyze(compiled.as_text())["flops"]
+    print(f"per-step FLOPs: standard {f_std:,.0f} | SOI full-phase "
+          f"{fl[0]:,.0f} | SOI skip-phase {fl[1]:,.0f} "
+          f"(avg {(fl[0]+fl[1])/2:,.0f}, "
+          f"{100*(1-(fl[0]+fl[1])/2/f_std):.1f}% saved)")
+    if args.mode == "fp":
+        print("fp: the middle block consumed strictly-past tokens — on a "
+              "serving stack it runs while waiting for the next request "
+              "token (the paper's 'precomputed' fraction).")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,5 @@
+"""repro - production-grade JAX/Pallas implementation of SOI (Scattered Online
+Inference, NeurIPS 2024): partial-state caching + structured recomputation skipping,
+scaled from streaming CNNs up to multi-pod LM training/serving."""
+
+__version__ = "0.1.0"

@@ -1,0 +1,7 @@
+"""Checkpoint substrate: async sharded save/restore with atomic commit and
+elastic (mesh-changing) restore."""
+
+from repro.checkpoint.checkpointer import (Checkpointer, latest_step,
+                                           restore, save)
+
+__all__ = ["Checkpointer", "save", "restore", "latest_step"]

@@ -1,0 +1,39 @@
+"""Architecture config registry: ``get(arch_id)`` resolves any assigned or
+paper architecture; ``ARCHS`` lists every selectable ``--arch`` id."""
+
+from __future__ import annotations
+
+import importlib
+
+# Assigned LM-family architectures (public-literature configs) + the paper's own.
+ARCHS = (
+    "qwen3-1.7b",
+    "mistral-large-123b",
+    "nemotron-4-15b",
+    "h2o-danube-1.8b",
+    "recurrentgemma-9b",
+    "rwkv6-1.6b",
+    "deepseek-v2-236b",
+    "olmoe-1b-7b",
+    "paligemma-3b",
+    "whisper-tiny",
+    # paper's own conv architectures
+    "soi-unet-dns",
+    "soi-ghostnet-asc",
+)
+
+_MODULES = {a: "repro.configs." + a.replace("-", "_").replace(".", "_") for a in ARCHS}
+
+
+def get(arch: str):
+    """Return the full-size config object for an architecture id."""
+    if arch not in _MODULES:
+        raise KeyError(f"unknown arch {arch!r}; known: {sorted(_MODULES)}")
+    return importlib.import_module(_MODULES[arch]).config()
+
+
+def get_smoke(arch: str):
+    """Reduced same-family config for CPU smoke tests."""
+    if arch not in _MODULES:
+        raise KeyError(f"unknown arch {arch!r}; known: {sorted(_MODULES)}")
+    return importlib.import_module(_MODULES[arch]).smoke_config()

@@ -1,0 +1,30 @@
+"""Core SOI machinery: STMC streaming convs, S-CC/SC/SS-CC layers, PP/FP
+inference patterns, partial-state caches, and exact complexity accounting."""
+
+from repro.core.stmc import (
+    causal_conv1d,
+    conv_init,
+    stmc_init_state,
+    stmc_push,
+    stmc_step,
+)
+from repro.core.soi import (
+    SOIConvCfg,
+    sc_shift,
+    scc_compress,
+    scc_extrapolate,
+)
+from repro.core import complexity
+
+__all__ = [
+    "causal_conv1d",
+    "conv_init",
+    "stmc_init_state",
+    "stmc_push",
+    "stmc_step",
+    "SOIConvCfg",
+    "sc_shift",
+    "scc_compress",
+    "scc_extrapolate",
+    "complexity",
+]

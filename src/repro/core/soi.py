@@ -1,0 +1,177 @@
+"""Scattered Online Inference (SOI) — the paper's contribution.
+
+SOI modifies a streaming network's *inference pattern* so that a middle region of
+the network is recomputed only every ``stride``-th inference:
+
+  * **S-CC pair** (Strided-Cloned Convolution): a stride-``s`` causal conv
+    compresses the time axis (``scc_compress``); the mirrored point in the network
+    reconstructs full rate by extrapolation — duplication of the last computed
+    frame by default (``scc_extrapolate``), transposed conv as an alternative.
+  * **SC layer** (Shifted Convolution): a pure time-shift (``sc_shift``) that turns
+    reconstructed frames into *future* predictions (Fully Predictive mode).
+  * **SS-CC** = S-CC + SC fused at one point (``ss_cc_extrapolate``).
+
+Modes (paper §2.1):
+  * **PP (partially predictive)**: compressed frame computed at time 2s serves
+    output times 2s and 2s+1. Halves the *average* rate of the middle region.
+  * **FP (fully predictive)**: the extra shift makes the middle region depend only
+    on strictly-past inputs, so it can be *precomputed between inferences* —
+    reducing peak on-arrival compute and latency.
+
+Causality invariant (property-tested): with PP, output at time t depends on inputs
+``<= t``; with FP the middle region depends on inputs ``<= t-1``.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.stmc import causal_conv1d
+
+Array = jax.Array
+
+
+@dataclasses.dataclass(frozen=True)
+class SOIConvCfg:
+    """SOI configuration for a conv encoder/decoder network (e.g. U-Net).
+
+    Attributes:
+      pairs: encoder positions (1-indexed) that become S-CC compress points; the
+        extrapolation happens at the mirrored decoder position. Sorted ascending.
+      mode: "pp" or "fp".
+      stride: temporal stride of each S-CC pair (paper uses 2).
+      extrapolation: "dup" (frame duplication; paper's default) or "tconv"
+        (transposed convolution; paper appendix E).
+      shift_pos: for FP/hybrid — encoder position of the SC time shift. ``None``
+        in FP mode means the shift is fused with the (last) S-CC pair (SS-CC).
+    """
+    pairs: tuple[int, ...] = ()
+    mode: str = "pp"
+    stride: int = 2
+    extrapolation: str = "dup"
+    shift_pos: int | None = None
+
+    def __post_init__(self):
+        assert self.mode in ("pp", "fp"), self.mode
+        assert self.extrapolation in ("dup", "tconv"), self.extrapolation
+        assert tuple(sorted(self.pairs)) == tuple(self.pairs), "pairs must be sorted"
+
+
+# ---------------------------------------------------------------------------
+# Offline (training) graph ops. These define the semantics the online stepper
+# must match exactly.
+# ---------------------------------------------------------------------------
+
+def scc_compress(x: Array, w: Array, b: Array | None = None, *,
+                 stride: int = 2) -> Array:
+    """S-CC phase 1: strided causal conv. Output frame s sees inputs <= s*stride."""
+    return causal_conv1d(x, w, b, stride=stride)
+
+
+def scc_extrapolate(y: Array, *, stride: int = 2, out_len: int | None = None,
+                    w: Array | None = None, b: Array | None = None) -> Array:
+    """S-CC phase 2: reconstruct full rate by duplication (default) or tconv.
+
+    Duplication places compressed frame s at output times ``s*stride ...
+    s*stride + stride-1``: time s*stride is *current* (causal), the rest are
+    *predicted* partial states (PP semantics).
+    """
+    if w is None:
+        up = jnp.repeat(y, stride, axis=1)
+    else:
+        # Transposed-conv alternative (paper App. E): kernel (stride, Cin, Cout);
+        # output frame s*stride+k = y_s . w[k] (kernel size == stride, so each
+        # output depends on exactly one compressed frame — streaming-exact).
+        up = jnp.einsum("btc,kco->btko", y, w)
+        if b is not None:
+            up = up + b
+        up = up.reshape(y.shape[0], y.shape[1] * stride, -1)
+    if out_len is not None:
+        up = up[:, :out_len]
+    return up
+
+
+def sc_shift(x: Array, *, shift: int = 1) -> Array:
+    """SC layer: shift activations one step into the future (prepend zeros).
+
+    After the shift, position t holds data computed from inputs <= t-shift, i.e.
+    every downstream value is a prediction — the FP mode ingredient.
+    """
+    if shift == 0:
+        return x
+    pad = jnp.zeros_like(x[:, :shift])
+    return jnp.concatenate([pad, x[:, :-shift]], axis=1)
+
+
+def ss_cc_extrapolate(y: Array, *, stride: int = 2, shift: int = 1,
+                      out_len: int | None = None, w: Array | None = None,
+                      b: Array | None = None) -> Array:
+    """SS-CC: extrapolate first, then shift (paper §2.1 order)."""
+    up = scc_extrapolate(y, stride=stride, out_len=out_len, w=w, b=b)
+    return sc_shift(up, shift=shift)
+
+
+# ---------------------------------------------------------------------------
+# Rate/phase bookkeeping shared by complexity accounting and online steppers.
+# ---------------------------------------------------------------------------
+
+def region_rates(n_enc: int, n_dec: int, cfg: SOIConvCfg) -> tuple[list, list]:
+    """Per-layer average recomputation rate (fraction of inferences where the
+    layer's conv actually runs) for a mirrored encoder/decoder network.
+
+    Topology (paper §2.2 / §A.1): decoder layer j is the transposed conv
+    mirroring encoder layer ``m = n_enc - j + 1``; pair-p's compressed region is
+    encoder p..n_enc plus decoder 1..(n_dec - p + 1) — the mirrored decoder
+    layer itself is compressed, its output is extrapolated back to the outer
+    rate, and the skip (input of encoder p) concatenates right *after* it.
+    """
+    enc = []
+    rate = 1.0
+    for i in range(1, n_enc + 1):
+        if i in cfg.pairs:
+            rate /= cfg.stride
+        enc.append(rate)
+    dec = []
+    for j in range(1, n_dec + 1):
+        mirror = n_enc - j + 1
+        rate = 1.0
+        for p in cfg.pairs:
+            if p <= mirror:     # inside pair-p's compressed region
+                rate /= cfg.stride
+        dec.append(rate)
+    return enc, dec
+
+
+def phase_schedule(cfg: SOIConvCfg, n_enc: int) -> list[dict]:
+    """For each phase t = 0..period-1, how deep the network recomputes.
+
+    The offline graph aligns strided conv outputs to input times 0, s, 2s, ...
+    so pair k (ascending positions, nested regions) produces a fresh compressed
+    frame exactly when ``t % stride**k == 0``. Staleness is monotone: if the
+    outermost pair is stale, every inner pair is too.
+
+    Returns per-phase dicts:
+      enc_depth:  encoder layers 1..enc_depth run their convs; deeper layers
+                  only ``stmc_push`` their partial states.
+      stale_pair: position of the outermost stale pair (None on a full pass);
+                  decoder layers ``n_dec - stale_pair + 1 .. n_dec`` still run
+                  (they are past that pair's extrapolation point), the rest
+                  reuse the cached extrapolated frame.
+    Period = stride ** len(pairs).
+    """
+    period = cfg.stride ** len(cfg.pairs)
+    sched = []
+    for t in range(period):
+        depth, stale = n_enc, None
+        divisor = 1
+        for p in cfg.pairs:
+            divisor *= cfg.stride
+            if t % divisor != 0:  # pair p's compression window not complete
+                depth, stale = p - 1, p
+                break
+        sched.append({"enc_depth": depth, "stale_pair": stale})
+    return sched

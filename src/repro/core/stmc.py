@@ -1,0 +1,119 @@
+"""Short-Term Memory Convolutions (STMC, Stefański et al. 2023) — the foundation
+SOI builds on.
+
+A causal conv layer processing a stream one frame at a time keeps a ring buffer of
+its last ``(K-1)*dilation`` input frames (its *partial state*). Each new frame
+triggers exactly one fused window·kernel contraction; nothing from previous
+inferences is ever recomputed.
+
+Layout conventions (used across the whole framework):
+  activations  x : (B, T, C)        -- batch, time, channels
+  conv weights w : (K, Cin, Cout)   -- kernel taps oldest..newest
+  stream frame   : (B, C)
+  conv state     : (B, (K-1)*dilation, Cin)
+
+The per-frame contraction is the compute hot-spot the paper optimizes on-device;
+``repro.kernels.stmc_conv`` provides the Pallas TPU kernel for it (MXU-shaped
+(B, K*Cin) x (K*Cin, Cout) matmul). This module is the pure-JAX substrate and the
+numerical reference.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+
+def conv_init(rng: Array, kernel: int, cin: int, cout: int, *, bias: bool = True,
+              dtype=jnp.float32) -> dict:
+    """He-uniform init for a causal conv (K, Cin, Cout)."""
+    wkey, _ = jax.random.split(rng)
+    fan_in = kernel * cin
+    bound = (6.0 / fan_in) ** 0.5
+    params = {"w": jax.random.uniform(wkey, (kernel, cin, cout), dtype, -bound, bound)}
+    if bias:
+        params["b"] = jnp.zeros((cout,), dtype)
+    return params
+
+
+def causal_conv1d(x: Array, w: Array, b: Array | None = None, *, stride: int = 1,
+                  dilation: int = 1) -> Array:
+    """Offline causal 1D convolution.
+
+    Left-pads with ``(K-1)*dilation`` zeros so output frame t only sees inputs
+    ``<= t``. With ``stride=s`` output frame j corresponds to input time ``j*s``
+    (i.e. it is the stride-1 causal output subsampled at times 0, s, 2s, ...).
+    """
+    k = w.shape[0]
+    pad = (k - 1) * dilation
+    dn = jax.lax.conv_dimension_numbers(x.shape, w.shape, ("NWC", "WIO", "NWC"))
+    y = jax.lax.conv_general_dilated(
+        x, w,
+        window_strides=(stride,),
+        padding=((pad, 0),),
+        rhs_dilation=(dilation,),
+        dimension_numbers=dn,
+    )
+    if b is not None:
+        y = y + b
+    return y
+
+
+def stmc_init_state(batch: int, kernel: int, cin: int, *, dilation: int = 1,
+                    dtype=jnp.float32) -> Array:
+    """Zero partial state == the left zero-padding of the offline graph."""
+    return jnp.zeros((batch, (kernel - 1) * dilation, cin), dtype)
+
+
+def stmc_push(state: Array, frame: Array) -> Array:
+    """Update the ring buffer WITHOUT computing the conv.
+
+    This is the (cheap) bookkeeping a strided/SOI-skipped layer performs on the
+    inferences where its output is not recalculated — the essence of keeping
+    partial states fresh while skipping compute.
+    """
+    if state.shape[1] == 0:
+        return state
+    return jnp.concatenate([state[:, 1:], frame[:, None, :]], axis=1)
+
+
+def stmc_window(state: Array, frame: Array, *, dilation: int = 1) -> Array:
+    """Assemble the (B, K, Cin) tap window ending at the current frame."""
+    window = jnp.concatenate([state, frame[:, None, :]], axis=1)
+    if dilation > 1:
+        window = window[:, ::dilation, :]
+    return window
+
+
+def stmc_step(state: Array, frame: Array, w: Array, b: Array | None = None, *,
+              dilation: int = 1, use_kernel: bool = False) -> tuple[Array, Array]:
+    """One streaming inference of a causal conv: (state, frame) -> (state', y).
+
+    Exactly equivalent to column t of ``causal_conv1d`` (property-tested). Set
+    ``use_kernel=True`` to run the Pallas TPU kernel for the contraction.
+    """
+    window = stmc_window(state, frame, dilation=dilation)
+    if use_kernel:
+        from repro.kernels import ops as kops
+        y = kops.stmc_conv(window, w, b)
+    else:
+        y = jnp.einsum("bkc,kcd->bd", window, w)
+        if b is not None:
+            y = y + b
+    return stmc_push(state, frame), y
+
+
+def stream_scan(params: dict, x: Array, *, dilation: int = 1) -> Array:
+    """Run a whole sequence through the streaming path (for equivalence tests)."""
+    k, cin, _ = params["w"].shape
+    state0 = stmc_init_state(x.shape[0], k, cin, dilation=dilation, dtype=x.dtype)
+
+    def body(state, frame):
+        state, y = stmc_step(state, frame, params["w"], params.get("b"),
+                             dilation=dilation)
+        return state, y
+
+    _, ys = jax.lax.scan(body, state0, jnp.swapaxes(x, 0, 1))
+    return jnp.swapaxes(ys, 0, 1)

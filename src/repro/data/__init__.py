@@ -1,0 +1,6 @@
+"""Data substrate: deterministic host-sharded pipelines + synthetic tasks."""
+
+from repro.data.pipeline import ShardedLMPipeline
+from repro.data import synthetic
+
+__all__ = ["ShardedLMPipeline", "synthetic"]

@@ -1,0 +1,2 @@
+"""Distribution substrate: logical-axis sharding rules (DP/FSDP/TP/EP/SP),
+collective helpers, fault tolerance, and elastic utilities."""

@@ -1,0 +1,153 @@
+"""Logical-axis parameter sharding.
+
+Every parameter is created through :class:`A` — an (array, logical_axes) pair.
+``split_axes`` separates the two trees; ``make_specs`` maps logical names to
+mesh axes through a rules table, with automatic divisibility fallback
+(a dimension that doesn't divide over its mesh axis is replicated and the event
+recorded — e.g. 8 KV heads on a 16-way model axis).
+
+Rules express the full parallelism palette:
+  * TP  : "heads"/"ff"/"vocab"/... -> "model"
+  * EP  : "experts"               -> "model"
+  * FSDP: "embed" (the large replicated dim of every weight) -> data axes
+  * DP  : activations' "batch"    -> ("pod", "data") — applied in model code
+          via ``logical_constraint``.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, NamedTuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+
+@jax.tree_util.register_pytree_node_class
+class A:
+    """A parameter leaf: value (array or ShapeDtypeStruct) + logical axes.
+
+    Registered as a pytree node with the axes as *static* aux data, so trees
+    of A pass transparently through jit / eval_shape / vmap (abstract init of
+    a 236B model costs nothing)."""
+
+    __slots__ = ("value", "axes")
+
+    def __init__(self, value, axes: tuple):
+        self.value = value
+        self.axes = tuple(axes)
+
+    def tree_flatten(self):
+        return (self.value,), self.axes
+
+    @classmethod
+    def tree_unflatten(cls, axes, children):
+        return cls(children[0], axes)
+
+    def __repr__(self):
+        return f"A({getattr(self.value, 'shape', self.value)}, {self.axes})"
+
+
+def _is_a(x) -> bool:
+    return isinstance(x, A)
+
+
+def split_axes(tree):
+    """Split a tree of A leaves into (values_tree, axes_tree)."""
+    values = jax.tree.map(lambda a: a.value, tree, is_leaf=_is_a)
+    axes = jax.tree.map(lambda a: a.axes, tree, is_leaf=_is_a)
+    return values, axes
+
+
+@dataclasses.dataclass(frozen=True)
+class ShardingRules:
+    """Logical-name -> mesh-axis mapping. ``data_axes`` is the DP/FSDP axis
+    group (("pod","data") on the multi-pod mesh)."""
+    data_axes: tuple = ("data",)
+    model_axis: str = "model"
+    fsdp: bool = False                 # shard the "embed" dim of weights on data
+    seq_shard: bool = False            # sequence parallelism for activations
+
+    def table(self) -> dict:
+        t = {
+            "batch": tuple(self.data_axes),
+            "seq": None,                # inside attention: seq stays gathered
+            # between-block activation carries (the remat residuals): shard
+            # seq over the model axis = Megatron sequence parallelism
+            "seq_act": self.model_axis if self.seq_shard else None,
+            "embed": tuple(self.data_axes) if self.fsdp else None,
+            "embed_act": None,          # activation d_model dim
+            "embed_norm": None,         # norm scales: tiny, replicate
+            "heads": self.model_axis,
+            "kv_heads": self.model_axis,
+            "head_dim": None,
+            "ff": self.model_axis,
+            "vocab": self.model_axis,
+            "experts": self.model_axis,
+            "expert_ff": None,
+            "expert_cap": None,                    # capacity stays local
+            "dispatch": tuple(self.data_axes),     # MoE dispatch groups
+            "flat_tokens": tuple(self.data_axes),
+            "layers": None,
+            "lora": None,
+            "conv_k": None,
+            "stub": None,
+            "seq_table": None,
+        }
+        return t
+
+
+def spec_for(axes: tuple, shape: tuple, rules: ShardingRules,
+             mesh: Mesh, notes: list | None = None) -> P:
+    """PartitionSpec for one param/activation: divisibility fallback to
+    replication, and first-come-first-served on mesh axes (a mesh axis can
+    shard only one dim — e.g. with sequence-sharded activations, 'seq' takes
+    the model axis and 'heads' falls back to replicated until re-constrained
+    inside the attention op)."""
+    table = rules.table()
+    entries: list = []
+    used: set = set()
+    for name, dim in zip(axes, shape):
+        ax = table.get(name, None)
+        if ax is None:
+            entries.append(None)
+            continue
+        ax_tuple = ax if isinstance(ax, tuple) else (ax,)
+        size = int(np.prod([mesh.shape[a] for a in ax_tuple]))
+        if dim % size != 0 or any(a in used for a in ax_tuple):
+            if notes is not None and dim % size != 0:
+                notes.append(
+                    f"axis {name!r} dim {dim} % mesh {size} != 0 -> replicated")
+            entries.append(None)
+        else:
+            entries.append(ax)
+            used.update(ax_tuple)
+    return P(*entries)
+
+
+def make_specs(axes_tree, shapes_tree, rules: ShardingRules, mesh: Mesh,
+               notes: list | None = None):
+    """Tree of PartitionSpecs matching the params tree."""
+    def one(axes, value):
+        shape = value.shape
+        assert len(axes) == len(shape), f"axes {axes} vs shape {shape}"
+        return spec_for(axes, shape, rules, mesh, notes)
+    return jax.tree.map(one, axes_tree, shapes_tree,
+                        is_leaf=lambda x: isinstance(x, tuple) and all(
+                            isinstance(e, (str, type(None))) for e in x))
+
+
+def make_shardings(axes_tree, shapes_tree, rules: ShardingRules, mesh: Mesh,
+                   notes: list | None = None):
+    specs = make_specs(axes_tree, shapes_tree, rules, mesh, notes)
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), specs,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+def logical_constraint(x, axes: tuple, rules: ShardingRules, mesh: Mesh | None):
+    """with_sharding_constraint by logical activation axes (no-op off-mesh)."""
+    if mesh is None or mesh.empty:
+        return x
+    spec = spec_for(axes, x.shape, rules, mesh)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))

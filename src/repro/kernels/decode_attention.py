@@ -1,0 +1,99 @@
+"""Pallas TPU single-token decode attention against a (ring-buffer) KV cache.
+
+Grid: (B, Hkv, k_blocks) — k innermost/sequential with online-softmax scratch.
+The query block is the (G, dh) group of q heads sharing one KV head (GQA kept
+grouped here, unlike prefill: at decode the q side is tiny and the cache read
+is the bottleneck, so we never materialize broadcast KV). Masking uses the
+cache's absolute-position lane (-1 = empty slot), which makes the same kernel
+correct for linear and ring-buffer (sliding-window) caches.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _kernel(q_ref, k_ref, v_ref, pos_ref, t_ref, o_ref, m_scr, l_scr, acc_scr,
+            *, scale, n_k, window):
+    ki = pl.program_id(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q = q_ref[0, 0].astype(jnp.float32)           # (G, dh)
+    k = k_ref[0, :, 0].astype(jnp.float32)        # (block_k, dh)
+    v = v_ref[0, :, 0].astype(jnp.float32)
+    pos = pos_ref[0]                              # (block_k,)
+    t = t_ref[0]
+
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ()))) * scale  # (G, bk)
+    allow = (pos >= 0) & (pos <= t)
+    if window is not None:
+        allow = allow & (pos > t - window)
+    s = jnp.where(allow[None, :], s, NEG_INF)
+
+    m_prev = m_scr[...]
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=1))
+    p = jnp.exp(s - m_new[:, None])
+    corr = jnp.exp(m_prev - m_new)
+    l_scr[...] = corr * l_scr[...] + jnp.sum(p, axis=1)
+    acc_scr[...] = (corr[:, None] * acc_scr[...]
+                    + jax.lax.dot_general(p, v, (((1,), (0,)), ((), ()))))
+    m_scr[...] = m_new
+
+    @pl.when(ki == n_k - 1)
+    def _finalize():
+        denom = jnp.maximum(l_scr[...], 1e-30)[:, None]
+        o_ref[0, 0] = (acc_scr[...] / denom).astype(o_ref.dtype)
+
+
+def decode_attention(q, k_cache, v_cache, cache_positions, q_position, *,
+                     window=None, scale=None, block_k=1024, interpret=False):
+    """q: (B, H, dh); caches: (B, S, Hkv, dh); cache_positions: (B, S);
+    q_position: (B,). Returns (B, H, dh)."""
+    b, h, dh = q.shape
+    _, s, hkv, _ = k_cache.shape
+    g = h // hkv
+    scale = dh ** -0.5 if scale is None else scale
+    block_k = min(block_k, s)
+    pk = (-s) % block_k
+    kc = jnp.pad(k_cache, ((0, 0), (0, pk), (0, 0), (0, 0)))
+    vc = jnp.pad(v_cache, ((0, 0), (0, pk), (0, 0), (0, 0)))
+    pos = jnp.pad(cache_positions, ((0, 0), (0, pk)), constant_values=-1)
+    n_k = (s + pk) // block_k
+    qg = q.reshape(b, hkv, g, dh)
+    qp = jnp.broadcast_to(jnp.asarray(q_position, jnp.int32), (b,))
+
+    kernel = functools.partial(_kernel, scale=scale, n_k=n_k, window=window)
+    out = pl.pallas_call(
+        kernel,
+        grid=(b, hkv, n_k),
+        in_specs=[
+            pl.BlockSpec((1, 1, g, dh), lambda bi, hi, ki: (bi, hi, 0, 0)),
+            pl.BlockSpec((1, block_k, 1, dh),
+                         lambda bi, hi, ki: (bi, ki, hi, 0)),
+            pl.BlockSpec((1, block_k, 1, dh),
+                         lambda bi, hi, ki: (bi, ki, hi, 0)),
+            pl.BlockSpec((1, block_k), lambda bi, hi, ki: (bi, ki)),
+            pl.BlockSpec((1,), lambda bi, hi, ki: (bi,)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, g, dh), lambda bi, hi, ki: (bi, hi, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, hkv, g, dh), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((g,), jnp.float32),
+            pltpu.VMEM((g,), jnp.float32),
+            pltpu.VMEM((g, dh), jnp.float32),
+        ],
+        interpret=interpret,
+    )(qg, kc, vc, pos, qp)
+    return out.reshape(b, h, dh)

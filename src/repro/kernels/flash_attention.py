@@ -1,0 +1,115 @@
+"""Pallas TPU flash attention (causal, online-softmax, MXU-aligned blocks).
+
+Grid: (batch*heads, q_blocks, k_blocks) with the k dimension innermost and
+sequential; m/l/acc live in VMEM scratch that persists across the k steps of
+one (bh, qi) cell. Fully-masked causal blocks are skipped via ``pl.when``
+(the paper-faithful baseline computes them — skipping is one of our §Perf
+hillclimb steps, mirrored here and in the chunked reference).
+
+VMEM budget per step: q(block_q x dh) + k,v(block_k x dh) + acc(block_q x dh)
++ scores(block_q x block_k), all f32 in scratch — (128,128) blocks with
+dh<=256 stay well under 16 MB VMEM. GQA is resolved upstream (KV broadcast to
+full heads), so the kernel sees H == Hkv.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
+            scale, causal, block_q, block_k, n_k, softcap, q_offset, sk):
+    qi = pl.program_id(1)
+    ki = pl.program_id(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q_start = q_offset + qi * block_q
+    k_start = ki * block_k
+    live = (q_start + block_q - 1 >= k_start) if causal else (ki >= 0)
+
+    @pl.when(live)
+    def _compute():
+        q = q_ref[0].astype(jnp.float32)          # (block_q, dh)
+        k = k_ref[0].astype(jnp.float32)          # (block_k, dh)
+        v = v_ref[0].astype(jnp.float32)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ()))) * scale
+        if softcap:
+            s = softcap * jnp.tanh(s / softcap)
+        q_pos = q_start + jax.lax.broadcasted_iota(jnp.int32,
+                                                   (block_q, block_k), 0)
+        k_pos = k_start + jax.lax.broadcasted_iota(jnp.int32,
+                                                   (block_q, block_k), 1)
+        allow = k_pos < sk
+        if causal:
+            allow = allow & (k_pos <= q_pos)
+        s = jnp.where(allow, s, NEG_INF)
+
+        m_prev = m_scr[...]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=1))
+        p = jnp.exp(s - m_new[:, None])
+        corr = jnp.exp(m_prev - m_new)
+        l_scr[...] = corr * l_scr[...] + jnp.sum(p, axis=1)
+        acc_scr[...] = (corr[:, None] * acc_scr[...]
+                        + jax.lax.dot_general(p, v, (((1,), (0,)), ((), ()))))
+        m_scr[...] = m_new
+
+    @pl.when(ki == n_k - 1)
+    def _finalize():
+        denom = jnp.maximum(l_scr[...], 1e-30)[:, None]
+        o_ref[0] = (acc_scr[...] / denom).astype(o_ref.dtype)
+
+
+def flash_attention(q, k, v, *, causal=True, q_offset=0, scale=None,
+                    logit_softcap=None, block_q=128, block_k=128,
+                    interpret=False):
+    """q, k, v: (B, S, H, dh) with H == Hkv. Returns (B, Sq, H, dh_v)."""
+    b, sq, h, dh = q.shape
+    _, sk, hk, dv = v.shape
+    assert h == hk, "broadcast GQA KV upstream (models.attention)"
+    scale = dh ** -0.5 if scale is None else scale
+    block_q = min(block_q, sq)
+    block_k = min(block_k, sk)
+    pq, pk = (-sq) % block_q, (-sk) % block_k
+    qt = jnp.moveaxis(jnp.pad(q, ((0, 0), (0, pq), (0, 0), (0, 0))), 2, 1)
+    kt = jnp.moveaxis(jnp.pad(k, ((0, 0), (0, pk), (0, 0), (0, 0))), 2, 1)
+    vt = jnp.moveaxis(jnp.pad(v, ((0, 0), (0, pk), (0, 0), (0, 0))), 2, 1)
+    qt = qt.reshape(b * h, sq + pq, dh)
+    kt = kt.reshape(b * h, sk + pk, dh)
+    vt = vt.reshape(b * h, sk + pk, dv)
+    n_q, n_k = (sq + pq) // block_q, (sk + pk) // block_k
+
+    kernel = functools.partial(
+        _kernel, scale=scale, causal=causal, block_q=block_q,
+        block_k=block_k, n_k=n_k, softcap=logit_softcap, q_offset=q_offset,
+        sk=sk)
+    out = pl.pallas_call(
+        kernel,
+        grid=(b * h, n_q, n_k),
+        in_specs=[
+            pl.BlockSpec((1, block_q, dh), lambda bh, qi, ki: (bh, qi, 0)),
+            pl.BlockSpec((1, block_k, dh), lambda bh, qi, ki: (bh, ki, 0)),
+            pl.BlockSpec((1, block_k, dv), lambda bh, qi, ki: (bh, ki, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, block_q, dv), lambda bh, qi, ki: (bh, qi, 0)),
+        out_shape=jax.ShapeDtypeStruct((b * h, sq + pq, dv), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_q,), jnp.float32),
+            pltpu.VMEM((block_q,), jnp.float32),
+            pltpu.VMEM((block_q, dv), jnp.float32),
+        ],
+        interpret=interpret,
+    )(qt, kt, vt)
+    out = out[:, :sq].reshape(b, h, sq, dv)
+    return jnp.moveaxis(out, 1, 2)

@@ -1,0 +1,70 @@
+"""Pallas TPU kernel for the diagonal linear recurrence h_t = a_t*h_{t-1}+x_t
+(RG-LRU core; also the cross-chunk state pass of chunked linear attention).
+
+Grid: (B, D/block_d, S/block_s) — the sequence dimension is innermost and
+sequential; the running state lives in VMEM scratch across sequence blocks.
+Inside a block the recurrence is unrolled log-style over VREG lanes via a
+small fori loop (the channel dim is the vectorized axis, 128-lane aligned).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(a_ref, x_ref, h0_ref, o_ref, carry, *, block_s, has_h0):
+    si = pl.program_id(2)
+
+    @pl.when(si == 0)
+    def _init():
+        if has_h0:
+            carry[...] = h0_ref[0].astype(jnp.float32)
+        else:
+            carry[...] = jnp.zeros_like(carry)
+
+    a = a_ref[0].astype(jnp.float32)              # (block_s, block_d)
+    x = x_ref[0].astype(jnp.float32)
+
+    def body(t, st):
+        h = a[t] * st + x[t]
+        o_ref[0, t, :] = h.astype(o_ref.dtype)
+        return h
+
+    carry[...] = jax.lax.fori_loop(0, block_s, body, carry[...])
+
+
+def lru_scan(a, x, h0=None, *, block_s=256, block_d=128, interpret=False):
+    """a, x: (B, S, D); h0: (B, D) or None. Returns (h_all, h_last)."""
+    b, s, d = a.shape
+    block_s = min(block_s, s)
+    block_d = min(block_d, d)
+    ps, pd = (-s) % block_s, (-d) % block_d
+    ap = jnp.pad(a, ((0, 0), (0, ps), (0, pd)))
+    xp = jnp.pad(x, ((0, 0), (0, ps), (0, pd)))
+    has_h0 = h0 is not None
+    h0p = jnp.pad(h0, ((0, 0), (0, pd))) if has_h0 else \
+        jnp.zeros((b, d + pd), x.dtype)
+    grid = (b, (d + pd) // block_d, (s + ps) // block_s)
+
+    kernel = functools.partial(_kernel, block_s=block_s, has_h0=has_h0)
+    out = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, block_s, block_d), lambda bi, di, si: (bi, si, di)),
+            pl.BlockSpec((1, block_s, block_d), lambda bi, di, si: (bi, si, di)),
+            pl.BlockSpec((1, block_d), lambda bi, di, si: (bi, di)),
+        ],
+        out_specs=pl.BlockSpec((1, block_s, block_d),
+                               lambda bi, di, si: (bi, si, di)),
+        out_shape=jax.ShapeDtypeStruct((b, s + ps, d + pd), x.dtype),
+        scratch_shapes=[pltpu.VMEM((block_d,), jnp.float32)],
+        interpret=interpret,
+    )(ap, xp, h0p)
+    h_all = out[:, :s, :d]
+    return h_all, h_all[:, -1]

@@ -1,0 +1,78 @@
+"""Backend dispatch for the kernel layer.
+
+On TPU the Pallas kernels run; elsewhere (CPU container, AOT dry-run lowering)
+the pure-JAX chunked references run — identical math, identical FLOPs, so the
+roofline terms derived from the lowered HLO are faithful to the TPU plan.
+
+Set ``repro.kernels.ops.FORCE_MODE`` to "pallas" / "ref" / "interpret" to
+override (tests use "interpret" to execute the kernel bodies on CPU).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ref
+
+FORCE_MODE: str | None = None      # None = auto by backend
+
+
+def _mode() -> str:
+    if FORCE_MODE is not None:
+        return FORCE_MODE
+    return "pallas" if jax.default_backend() == "tpu" else "ref"
+
+
+def flash_attention(q, k, v, *, causal=True, window=None, prefix_len=0,
+                    q_offset=0, scale=None, logit_softcap=None,
+                    block_q=256, block_k=512):
+    mode = _mode()
+    if mode in ("pallas", "interpret") and prefix_len == 0 and window is None:
+        from repro.kernels import flash_attention as fa
+        return fa.flash_attention(
+            q, k, v, causal=causal, q_offset=q_offset, scale=scale,
+            logit_softcap=logit_softcap, block_q=block_q, block_k=block_k,
+            interpret=(mode == "interpret"))
+    if window is not None and not causal:
+        raise ValueError("windowed attention requires causal=True")
+    if window is not None and window < k.shape[1]:
+        return ref.windowed_flash_attention(q, k, v, window=window,
+                                            q_offset=q_offset, scale=scale,
+                                            block_q=block_q)
+    return ref.chunked_flash_attention(
+        q, k, v, causal=causal, window=window, prefix_len=prefix_len,
+        q_offset=q_offset, scale=scale, logit_softcap=logit_softcap,
+        block_q=block_q, block_k=block_k)
+
+
+def decode_attention(q, k_cache, v_cache, cache_positions, q_position, *,
+                     window=None, scale=None, logit_softcap=None,
+                     block_k=1024):
+    mode = _mode()
+    if mode in ("pallas", "interpret") and logit_softcap is None:
+        from repro.kernels import decode_attention as da
+        return da.decode_attention(
+            q, k_cache, v_cache, cache_positions, q_position, window=window,
+            scale=scale, block_k=block_k, interpret=(mode == "interpret"))
+    return ref.decode_attention(q, k_cache, v_cache, cache_positions,
+                                q_position, window=window, scale=scale,
+                                logit_softcap=logit_softcap)
+
+
+def stmc_conv(window, w, b=None):
+    mode = _mode()
+    if mode in ("pallas", "interpret"):
+        from repro.kernels import stmc_conv as sc
+        return sc.stmc_conv(window, w, b, interpret=(mode == "interpret"))
+    return ref.stmc_conv(window, w, b)
+
+
+def lru_scan(a, x, h0=None):
+    mode = _mode()
+    if mode in ("pallas", "interpret"):
+        from repro.kernels import lru_scan as ls
+        return ls.lru_scan(a, x, h0, interpret=(mode == "interpret"))
+    return ref.lru_scan(a, x, h0)

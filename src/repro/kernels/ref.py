@@ -1,0 +1,360 @@
+"""Pure-jnp reference implementations (oracles) for every Pallas kernel, plus
+the memory-sane chunked variants used on non-TPU backends and for AOT lowering.
+
+Conventions:
+  q        : (B, Sq, H,  dh)
+  k, v     : (B, Sk, Hkv, dh)   with H = Hkv * G (GQA groups)
+  mask positions are *absolute token positions* so ring-buffer caches work.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+NEG_INF = -1e30
+
+
+def _mask(q_pos, k_pos, *, causal: bool, window, prefix_len: int):
+    """(..., Sq, Sk) boolean allow-mask from absolute positions."""
+    qp = q_pos[..., :, None]
+    kp = k_pos[..., None, :]
+    allow = jnp.ones(jnp.broadcast_shapes(qp.shape, kp.shape), bool)
+    if causal:
+        allow = kp <= qp
+        if prefix_len:
+            allow = allow | (kp < prefix_len)
+    if window is not None:
+        allow = allow & (kp > qp - window)
+    allow = allow & (kp >= 0)     # -1 marks empty cache slots
+    return allow
+
+
+def naive_attention(q, k, v, *, causal=True, window=None, prefix_len=0,
+                    q_positions=None, k_positions=None, scale=None,
+                    logit_softcap=None):
+    """O(Sq*Sk) oracle. Materializes the full score matrix — small shapes only."""
+    b, sq, h, dh = q.shape
+    _, sk, hkv, _ = k.shape
+    dv = v.shape[-1]
+    g = h // hkv
+    scale = dh ** -0.5 if scale is None else scale
+    if q_positions is None:
+        q_positions = jnp.arange(sq)[None, :] + jnp.zeros((b, 1), jnp.int32)
+    if k_positions is None:
+        k_positions = jnp.arange(sk)[None, :] + jnp.zeros((b, 1), jnp.int32)
+    qg = q.reshape(b, sq, hkv, g, dh)
+    scores = jnp.einsum("bqhgd,bkhd->bhgqk", qg.astype(jnp.float32),
+                        k.astype(jnp.float32)) * scale
+    if logit_softcap:
+        scores = logit_softcap * jnp.tanh(scores / logit_softcap)
+    allow = _mask(q_positions, k_positions, causal=causal, window=window,
+                  prefix_len=prefix_len)          # (b, sq, sk)
+    scores = jnp.where(allow[:, None, None], scores, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bhgqk,bkhd->bqhgd", probs, v.astype(jnp.float32))
+    return out.reshape(b, sq, h, dv).astype(q.dtype)
+
+
+def chunked_flash_attention(q, k, v, *, causal=True, window=None, prefix_len=0,
+                            q_offset=0, scale=None, logit_softcap=None,
+                            block_q=256, block_k=512, skip_masked=True):
+    """Flash-style double-scan attention: O(B*H*block_q*block_k) live memory.
+
+    This is the CPU/lowering path; the Pallas kernel mirrors the same blocking
+    on TPU. ``q_offset`` is the absolute position of q[0] (chunked prefill).
+
+    skip_masked (beyond-paper perf iteration, EXPERIMENTS §Perf): with a
+    causal mask and no prefix, iterate only the *live* (q-block, k-block)
+    pairs — a single static flat scan over ~nq*nk/2 pairs instead of the full
+    cross product — halving attention FLOPs. Falls back to the dense double
+    scan for bidirectional / prefix-LM / windowed masks.
+    """
+    import os
+    sq_, sk_ = q.shape[1], k.shape[1]
+    if (skip_masked and causal and not prefix_len and window is None
+            and q_offset == 0 and sq_ == sk_ and sq_ >= 4 * block_k
+            and sq_ % (2 * block_k) == 0 and (sq_ & (sq_ - 1)) == 0
+            # MLA (dv != dh) hits SPMD involuntary-remat pathologies through
+            # the tree's fold reshapes: 17x collective blow-up measured
+            # (EXPERIMENTS §Perf, deepseek) — keep the dense path there.
+            and q.shape[-1] == v.shape[-1]
+            and os.environ.get("REPRO_TREE_ATTN", "1") != "0"):
+        return causal_tree_attention(q, k, v, scale=scale,
+                                     logit_softcap=logit_softcap,
+                                     block_q=block_q, block_k=block_k)
+    b, sq, h, dh = q.shape
+    _, sk, hkv, _ = k.shape
+    dv = v.shape[-1]                 # may differ from dh (MLA)
+    g = h // hkv
+    scale = dh ** -0.5 if scale is None else scale
+    block_q = min(block_q, sq)
+    block_k = min(block_k, sk)
+    # pad to block multiples
+    pq = (-sq) % block_q
+    pk = (-sk) % block_k
+    qp = jnp.pad(q, ((0, 0), (0, pq), (0, 0), (0, 0)))
+    kp = jnp.pad(k, ((0, 0), (0, pk), (0, 0), (0, 0)))
+    vp = jnp.pad(v, ((0, 0), (0, pk), (0, 0), (0, 0)))
+    nq, nk = qp.shape[1] // block_q, kp.shape[1] // block_k
+    qb = qp.reshape(b, nq, block_q, hkv, g, dh).astype(jnp.float32)
+    kb = kp.reshape(b, nk, block_k, hkv, dh).astype(jnp.float32)
+    vb = vp.reshape(b, nk, block_k, hkv, dv).astype(jnp.float32)
+
+    def q_block(qi, qblk):
+        q_pos = q_offset + qi * block_q + jnp.arange(block_q)
+
+        def k_block(carry, inp):
+            m, l, acc = carry
+            ki, kblk, vblk = inp
+            k_pos = ki * block_k + jnp.arange(block_k)
+            s = jnp.einsum("bqhgd,bkhd->bhgqk", qblk, kblk) * scale
+            if logit_softcap:
+                s = logit_softcap * jnp.tanh(s / logit_softcap)
+            allow = _mask(q_pos[None], k_pos[None], causal=causal,
+                          window=window, prefix_len=prefix_len)[0]
+            allow = allow & (k_pos < sk)[None, :]
+            s = jnp.where(allow, s, NEG_INF)
+            m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+            p = jnp.exp(s - m_new[..., None])
+            corr = jnp.exp(m - m_new)
+            l_new = corr * l + jnp.sum(p, axis=-1)
+            acc_new = corr[..., None] * acc + jnp.einsum(
+                "bhgqk,bkhd->bhgqd", p, vblk)
+            return (m_new, l_new, acc_new), None
+
+        m0 = jnp.full((b, hkv, g, block_q), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((b, hkv, g, block_q), jnp.float32)
+        a0 = jnp.zeros((b, hkv, g, block_q, dv), jnp.float32)
+        (m, l, acc), _ = jax.lax.scan(
+            k_block, (m0, l0, a0),
+            (jnp.arange(nk), jnp.moveaxis(kb, 1, 0), jnp.moveaxis(vb, 1, 0)))
+        out = acc / jnp.maximum(l, 1e-30)[..., None]
+        return jnp.moveaxis(out, 3, 1)            # (b, block_q, hkv, g, dv)
+
+    outs = jax.lax.map(lambda args: q_block(*args),
+                       (jnp.arange(nq), jnp.moveaxis(qb, 1, 0)))
+    out = jnp.moveaxis(outs, 0, 1).reshape(b, nq * block_q, h, dv)
+    return out[:, :sq].astype(q.dtype)
+
+
+def _flash_stats(q, k, v, *, causal, scale, logit_softcap, block_q, block_k):
+    """Double-scan flash attention returning unnormalized online-softmax
+    stats (acc, m, l) so partial results over K subsets can be merged."""
+    b, sq, h, dh = q.shape
+    _, sk, hkv, _ = k.shape
+    dv = v.shape[-1]
+    g = h // hkv
+    block_q = min(block_q, sq)
+    block_k = min(block_k, sk)
+    pq, pk = (-sq) % block_q, (-sk) % block_k
+    qp = jnp.pad(q, ((0, 0), (0, pq), (0, 0), (0, 0)))
+    kp = jnp.pad(k, ((0, 0), (0, pk), (0, 0), (0, 0)))
+    vp = jnp.pad(v, ((0, 0), (0, pk), (0, 0), (0, 0)))
+    nq, nk = qp.shape[1] // block_q, kp.shape[1] // block_k
+    qb = qp.reshape(b, nq, block_q, hkv, g, dh).astype(jnp.float32)
+    kb = kp.reshape(b, nk, block_k, hkv, dh).astype(jnp.float32)
+    vb = vp.reshape(b, nk, block_k, hkv, dv).astype(jnp.float32)
+
+    def q_block(qi, qblk):
+        q_pos = qi * block_q + jnp.arange(block_q)
+
+        def k_block(carry, inp):
+            m, l, acc = carry
+            ki, kblk, vblk = inp
+            k_pos = ki * block_k + jnp.arange(block_k)
+            s = jnp.einsum("bqhgd,bkhd->bhgqk", qblk, kblk) * scale
+            if logit_softcap:
+                s = logit_softcap * jnp.tanh(s / logit_softcap)
+            allow = (k_pos < sk)[None, :]
+            if causal:
+                allow = allow & (k_pos[None, :] <= q_pos[:, None])
+            s = jnp.where(allow, s, NEG_INF)
+            m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+            p = jnp.exp(s - m_new[..., None])
+            corr = jnp.exp(m - m_new)
+            l_new = corr * l + jnp.sum(p, axis=-1)
+            acc_new = corr[..., None] * acc + jnp.einsum(
+                "bhgqk,bkhd->bhgqd", p, vblk)
+            return (m_new, l_new, acc_new), None
+
+        m0 = jnp.full((b, hkv, g, block_q), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((b, hkv, g, block_q), jnp.float32)
+        a0 = jnp.zeros((b, hkv, g, block_q, dv), jnp.float32)
+        (m, l, acc), _ = jax.lax.scan(
+            k_block, (m0, l0, a0),
+            (jnp.arange(nk), jnp.moveaxis(kb, 1, 0), jnp.moveaxis(vb, 1, 0)))
+        return m, l, acc
+
+    ms, ls, accs = jax.lax.map(lambda args: q_block(*args),
+                               (jnp.arange(nq), jnp.moveaxis(qb, 1, 0)))
+    # (nq, b, hkv, g, bq[, dv]) -> (b, hkv, g, sq[, dv])
+    m = jnp.moveaxis(ms, 0, 3).reshape(b, hkv, g, nq * block_q)[..., :sq]
+    l = jnp.moveaxis(ls, 0, 3).reshape(b, hkv, g, nq * block_q)[..., :sq]
+    acc = jnp.moveaxis(accs, 0, 3).reshape(b, hkv, g, nq * block_q, dv)
+    return acc[..., :sq, :], m, l
+
+
+def causal_tree_attention(q, k, v, *, scale=None, logit_softcap=None,
+                          block_q=256, block_k=512):
+    """Causal attention at ~ideal S^2/2 FLOPs via binary decomposition.
+
+    level 0: diagonal causal blocks of size `base` (groups folded into batch);
+    level j: each 2^(j-1) group's second half attends its first half with a
+    *dense* (unmasked) batched attention — no masked-out matmuls anywhere.
+    Partial online-softmax stats merge exactly. log2(S/base)+1 scan
+    structures total: HLO stays compact and scan-AD memory stays per-block.
+    """
+    import math as _math
+    b, s, h, dh = q.shape
+    hkv = k.shape[2]
+    dv = v.shape[-1]
+    g = h // hkv
+    scale = dh ** -0.5 if scale is None else scale
+    base = 2 * block_k
+    levels = int(_math.log2(s // base))
+    kw = dict(scale=scale, logit_softcap=logit_softcap, block_q=block_q,
+              block_k=block_k)
+
+    def fold(x, n):   # (b, n*m, ...) -> (b*n, m, ...)
+        return x.reshape((b * n, x.shape[1] // n) + x.shape[2:])
+
+    # level 0: diagonal causal blocks
+    nd = s // base
+    acc, m, l = _flash_stats(fold(q, nd), fold(k, nd), fold(v, nd),
+                             causal=True, **kw)
+    stats = [(acc.reshape(b, nd, hkv, g, base, dv)
+              .transpose(0, 2, 3, 1, 4, 5).reshape(b, hkv, g, s, dv),
+              m.reshape(b, nd, hkv, g, base)
+              .transpose(0, 2, 3, 1, 4).reshape(b, hkv, g, s),
+              l.reshape(b, nd, hkv, g, base)
+              .transpose(0, 2, 3, 1, 4).reshape(b, hkv, g, s))]
+
+    for j in range(levels + 1):
+        groups = 1 << j                    # group size s/groups
+        gsz = s // groups
+        if gsz < 2 * base:
+            break
+        half = gsz // 2
+        qg = q.reshape(b, groups, gsz, h, dh)[:, :, half:]
+        kg = k.reshape(b, groups, gsz, hkv, dh)[:, :, :half]
+        vg = v.reshape(b, groups, gsz, hkv, dv)[:, :, :half]
+        acc, m, l = _flash_stats(
+            qg.reshape(b * groups, half, h, dh),
+            kg.reshape(b * groups, half, hkv, dh),
+            vg.reshape(b * groups, half, hkv, dv), causal=False, **kw)
+        # realign: positions [half:gsz) of each group; neutral elsewhere
+        acc = acc.reshape(b, groups, hkv, g, half, dv)
+        m = m.reshape(b, groups, hkv, g, half)
+        l = l.reshape(b, groups, hkv, g, half)
+        acc = jnp.concatenate([jnp.zeros_like(acc), acc], axis=4)
+        m = jnp.concatenate([jnp.full_like(m, NEG_INF), m], axis=4)
+        l = jnp.concatenate([jnp.zeros_like(l), l], axis=4)
+        stats.append((acc.transpose(0, 2, 3, 1, 4, 5).reshape(
+            b, hkv, g, s, dv),
+            m.transpose(0, 2, 3, 1, 4).reshape(b, hkv, g, s),
+            l.transpose(0, 2, 3, 1, 4).reshape(b, hkv, g, s)))
+
+    acc_t, m_t, l_t = stats[0]
+    for acc_j, m_j, l_j in stats[1:]:
+        m_new = jnp.maximum(m_t, m_j)
+        c_t = jnp.exp(m_t - m_new)
+        c_j = jnp.exp(m_j - m_new)
+        acc_t = c_t[..., None] * acc_t + c_j[..., None] * acc_j
+        l_t = c_t * l_t + c_j * l_j
+        m_t = m_new
+    out = acc_t / jnp.maximum(l_t, 1e-30)[..., None]
+    # (b, hkv, g, s, dv) -> (b, s, h, dv)
+    out = jnp.moveaxis(out.reshape(b, hkv * g, s, dv), 1, 2)
+    return out.reshape(b, s, h, dv).astype(q.dtype)
+
+
+def windowed_flash_attention(q, k, v, *, window: int, q_offset=0, scale=None,
+                             block_q=256):
+    """Sliding-window attention with O(S*window) FLOPs: per q block, slice the
+    [q_start-window, q_end) K/V span with dynamic_slice — the TPU-native way to
+    realize SWA's sub-quadratic cost (no masked-out full matmul)."""
+    b, sq, h, dh = q.shape
+    _, sk, hkv, _ = k.shape
+    g = h // hkv
+    scale = dh ** -0.5 if scale is None else scale
+    block_q = min(block_q, sq)
+    pq = (-sq) % block_q
+    qp = jnp.pad(q, ((0, 0), (0, pq), (0, 0), (0, 0)))
+    nq = qp.shape[1] // block_q
+    span = window + block_q                       # K span a q block can see
+
+    def q_block(qi):
+        qblk = jax.lax.dynamic_slice_in_dim(qp, qi * block_q, block_q, 1)
+        q_pos = q_offset + qi * block_q + jnp.arange(block_q)
+        start = jnp.clip(q_offset + qi * block_q + block_q - span, 0,
+                         max(sk - span, 0))
+        kblk = jax.lax.dynamic_slice_in_dim(k, start, min(span, sk), 1)
+        vblk = jax.lax.dynamic_slice_in_dim(v, start, min(span, sk), 1)
+        k_pos = start + jnp.arange(min(span, sk))
+        s = jnp.einsum("bqhgd,bkhd->bhgqk",
+                       qblk.reshape(b, block_q, hkv, g, dh).astype(jnp.float32),
+                       kblk.astype(jnp.float32)) * scale
+        allow = _mask(q_pos[None], k_pos[None], causal=True, window=window,
+                      prefix_len=0)[0] & (k_pos < sk)[None, :]
+        s = jnp.where(allow, s, NEG_INF)
+        p = jax.nn.softmax(s, axis=-1)
+        o = jnp.einsum("bhgqk,bkhd->bqhgd", p, vblk.astype(jnp.float32))
+        return o.reshape(b, block_q, h, dh)
+
+    outs = jax.lax.map(q_block, jnp.arange(nq))
+    out = jnp.moveaxis(outs, 0, 1).reshape(b, nq * block_q, h, dh)
+    return out[:, :sq].astype(q.dtype)
+
+
+def decode_attention(q, k_cache, v_cache, cache_positions, q_position, *,
+                     window=None, scale=None, logit_softcap=None):
+    """Single-token attention against a (possibly ring-buffer) KV cache.
+
+    q: (B, H, dh); caches: (B, S, Hkv, dh); cache_positions: (B, S) absolute
+    positions with -1 for empty slots; q_position: (B,) current position.
+    """
+    b, h, dh = q.shape
+    _, s, hkv, _ = k_cache.shape
+    g = h // hkv
+    scale = dh ** -0.5 if scale is None else scale
+    qg = q.reshape(b, hkv, g, dh).astype(jnp.float32)
+    scores = jnp.einsum("bhgd,bkhd->bhgk", qg,
+                        k_cache.astype(jnp.float32)) * scale
+    if logit_softcap:
+        scores = logit_softcap * jnp.tanh(scores / logit_softcap)
+    allow = (cache_positions >= 0) & (cache_positions <= q_position[:, None])
+    if window is not None:
+        allow = allow & (cache_positions > q_position[:, None] - window)
+    scores = jnp.where(allow[:, None, None], scores, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bhgk,bkhd->bhgd", probs, v_cache.astype(jnp.float32))
+    return out.reshape(b, h, dh).astype(q.dtype)
+
+
+def stmc_conv(window, w, b=None):
+    """Streaming conv contraction oracle: (B,K,Cin) x (K,Cin,Cout) -> (B,Cout)."""
+    y = jnp.einsum("bkc,kcd->bd", window, w)
+    if b is not None:
+        y = y + b
+    return y
+
+
+def lru_scan(a, x, h0=None):
+    """Diagonal linear recurrence h_t = a_t * h_{t-1} + x_t (RG-LRU core).
+
+    a, x: (B, S, D); h0: (B, D) initial state. Returns (h_all, h_last).
+    """
+    if h0 is not None:
+        x = x.at[:, 0].add(a[:, 0] * h0)
+
+    def comb(c1, c2):
+        a1, b1 = c1
+        a2, b2 = c2
+        return a1 * a2, a2 * b1 + b2
+
+    aa, hh = jax.lax.associative_scan(comb, (a, x), axis=1)
+    return hh, hh[:, -1]

@@ -1,0 +1,2 @@
+"""Launch layer: production meshes, AOT dry-run, training and serving
+drivers."""

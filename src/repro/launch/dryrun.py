@@ -1,0 +1,225 @@
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "") +
+                           " --xla_force_host_platform_device_count=512").strip()
+
+"""Multi-pod AOT dry-run: prove the distribution config is coherent for every
+(architecture x input shape x mesh) cell without hardware.
+
+For each cell: build the production mesh, abstract-init params/opt/state
+(eval_shape — a 236B model never allocates), jit the train/serve/prefill step
+with explicit in/out shardings, ``.lower().compile()``, then record
+``memory_analysis()``, ``cost_analysis()`` and our trip-count-aware HLO pass
+(FLOPs / bytes / per-kind collective bytes / ring wire bytes) into a JSON
+report consumed by ``benchmarks/roofline.py``.
+
+Usage:
+  PYTHONPATH=src:. python -m repro.launch.dryrun --arch qwen3-1.7b \
+      --shape train_4k --mesh single
+  PYTHONPATH=src:. python -m repro.launch.dryrun --all --mesh both
+"""
+
+import argparse
+import dataclasses
+import json
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+import repro.configs as configs
+from repro.configs.base import SHAPES
+from repro.distributed.sharding import ShardingRules
+from repro.launch import specs as S
+from repro.launch.mesh import data_axes_of, make_production_mesh
+from repro.launch.steps import make_prefill, make_serve_step, make_train_step
+
+LM_ARCHS = [a for a in configs.ARCHS if not a.startswith("soi-")]
+
+# Per-arch production knobs: rows of batch per device per microbatch for
+# train_4k (activation-memory control), FSDP threshold handled by size.
+# Committed after the §Perf hillclimb (EXPERIMENTS.md): rows chosen at the
+# knee of the weight-traffic/activation-memory trade; seq_shard activations
+# for every multi-GB-activation model; FSDP whenever params don't fit TP-only.
+KNOBS = {
+    "qwen3-1.7b": dict(rows=4),
+    "mistral-large-123b": dict(rows=4, fsdp=True, seq_shard=True),
+    "nemotron-4-15b": dict(rows=4, fsdp=True, seq_shard=True),
+    "h2o-danube-1.8b": dict(rows=4),
+    "recurrentgemma-9b": dict(rows=2, fsdp=True, seq_shard=True),
+    "rwkv6-1.6b": dict(rows=4),
+    "deepseek-v2-236b": dict(rows=2, fsdp=True, seq_shard=True),
+    "olmoe-1b-7b": dict(rows=4),
+    "paligemma-3b": dict(rows=4),
+    "whisper-tiny": dict(rows=16),
+}
+
+
+def cell_runnable(cfg, shape_name: str) -> tuple[bool, str]:
+    info = SHAPES[shape_name]
+    if shape_name == "long_500k" and not cfg.supports_long_context:
+        return False, ("full-attention arch: 500k dense KV is the quadratic "
+                       "regime this shape excludes (DESIGN.md §Arch-applicability)")
+    return True, ""
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool, *, soi=None,
+             overrides: dict | None = None) -> dict:
+    t0 = time.time()
+    cfg = configs.get(arch) if soi is None else __import__(
+        "importlib").import_module(
+        "repro.configs." + arch.replace("-", "_").replace(".", "_")
+    ).config(soi=soi)
+    if overrides and overrides.get("remat"):
+        cfg = dataclasses.replace(cfg, remat_policy=overrides["remat"])
+    info = SHAPES[shape_name]
+    rec = {"arch": arch, "shape": shape_name,
+           "mesh": "2x16x16" if multi_pod else "16x16",
+           "kind": info["kind"], "soi": soi or "none"}
+    ok, why = cell_runnable(cfg, shape_name)
+    if not ok:
+        rec.update(status="skipped", reason=why)
+        return rec
+
+    knobs = dict(KNOBS.get(arch, {}))
+    if overrides:
+        knobs.update(overrides)
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    dp_axes = data_axes_of(mesh)
+    rules = ShardingRules(data_axes=dp_axes, fsdp=knobs.get("fsdp", False),
+                          seq_shard=knobs.get("seq_shard", False))
+    notes: list = []
+    param_shapes, param_sh = S.param_shardings(cfg, rules, mesh, notes)
+    n_params = sum(int(jnp.prod(jnp.array(v.shape)))
+                   for v in jax.tree.leaves(param_shapes))
+    rec["n_params"] = n_params
+
+    dp_size = 1
+    for a in dp_axes:
+        dp_size *= mesh.shape[a]
+
+    if info["kind"] == "train":
+        rows = knobs.get("rows", 8)
+        b = info["global_batch"]
+        microbatches = max(1, b // (dp_size * rows))
+        while b % microbatches or (b // microbatches) % dp_size:
+            microbatches -= 1
+        rec["microbatches"] = microbatches
+        opt_shapes, opt_sh = S.opt_shardings(param_shapes, param_sh, mesh)
+        batch_shapes, batch_sh = S.batch_specs(cfg, shape_name, rules, mesh)
+        step = make_train_step(cfg, rules, mesh, microbatches=microbatches)
+        jitted = jax.jit(step, in_shardings=(param_sh, opt_sh, batch_sh),
+                         donate_argnums=(0, 1))
+        lowered = jitted.lower(param_shapes, opt_shapes, batch_shapes)
+    elif info["kind"] == "prefill":
+        batch_shapes, batch_sh = S.batch_specs(cfg, shape_name, rules, mesh)
+        step = make_prefill(cfg, rules, mesh, max_len=info["seq_len"])
+        jitted = jax.jit(step, in_shardings=(param_sh, batch_sh))
+        lowered = jitted.lower(param_shapes, batch_shapes)
+    else:  # decode
+        state_shapes, (b, s) = S.abstract_decode_state(cfg, shape_name,
+                                                       param_shapes)
+        state_sh = S.decode_state_shardings(state_shapes, rules, mesh)
+        tok = jax.ShapeDtypeStruct((b,), jnp.int32)
+        dp_ok = b % dp_size == 0
+        tok_sh = NamedSharding(mesh, P(dp_axes if dp_ok else None))
+        step = make_serve_step(cfg, rules, mesh)
+        jitted = jax.jit(step, in_shardings=(param_sh, state_sh, tok_sh),
+                         donate_argnums=(1,))
+        lowered = jitted.lower(param_shapes, state_shapes, tok)
+
+    t_lower = time.time()
+    compiled = lowered.compile()
+    t_compile = time.time()
+
+    ma = compiled.memory_analysis()
+    ca = compiled.cost_analysis()
+    rec["memory"] = {
+        "argument_bytes": getattr(ma, "argument_size_in_bytes", None),
+        "output_bytes": getattr(ma, "output_size_in_bytes", None),
+        "temp_bytes": getattr(ma, "temp_size_in_bytes", None),
+        "alias_bytes": getattr(ma, "alias_size_in_bytes", None),
+    }
+    rec["xla_cost_analysis"] = {k: ca[k] for k in ("flops", "bytes accessed")
+                                if isinstance(ca, dict) and k in ca}
+
+    import sys
+    sys.path.insert(0, os.path.join(os.path.dirname(__file__),
+                                    "..", "..", ".."))
+    from benchmarks import hlo_analysis as H
+    hlo = H.analyze(compiled.as_text())
+    rec["hlo"] = {k: hlo[k] for k in ("flops", "bytes", "coll_bytes",
+                                      "wire_bytes", "num_partitions")}
+    rec["sharding_notes"] = sorted(set(notes))[:20]
+    rec["timing"] = {"lower_s": round(t_lower - t0, 2),
+                     "compile_s": round(t_compile - t_lower, 2)}
+    rec["status"] = "ok"
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None, choices=LM_ARCHS)
+    ap.add_argument("--shape", default=None, choices=list(SHAPES))
+    ap.add_argument("--mesh", default="single",
+                    choices=["single", "multi", "both"])
+    ap.add_argument("--soi", default=None, choices=[None, "pp", "fp"])
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--out", default="experiments/dryrun")
+    ap.add_argument("--fsdp", action="store_true", default=None)
+    ap.add_argument("--seq-shard", action="store_true", default=None)
+    ap.add_argument("--rows", type=int, default=None)
+    ap.add_argument("--remat", default=None,
+                    choices=["full", "dots", "names", "none"])
+    args = ap.parse_args()
+
+    archs = LM_ARCHS if args.all or args.arch is None else [args.arch]
+    shapes = list(SHAPES) if args.all or args.shape is None else [args.shape]
+    meshes = {"single": [False], "multi": [True], "both": [False, True]}[args.mesh]
+    overrides = {k: v for k, v in (("fsdp", args.fsdp),
+                                   ("seq_shard", args.seq_shard),
+                                   ("rows", args.rows),
+                                   ("remat", args.remat)) if v is not None}
+
+    os.makedirs(args.out, exist_ok=True)
+    results = []
+    for arch in archs:
+        for shape in shapes:
+            for multi in meshes:
+                tag = f"{arch}_{shape}_{'multi' if multi else 'single'}" + (
+                    f"_soi-{args.soi}" if args.soi else "")
+                try:
+                    rec = run_cell(arch, shape, multi, soi=args.soi,
+                                   overrides=overrides or None)
+                except Exception as e:  # a failed cell is a bug — record it
+                    rec = {"arch": arch, "shape": shape,
+                           "mesh": "2x16x16" if multi else "16x16",
+                           "status": "error", "error": repr(e),
+                           "trace": traceback.format_exc()[-2000:]}
+                results.append(rec)
+                with open(os.path.join(args.out, tag + ".json"), "w") as f:
+                    json.dump(rec, f, indent=1)
+                mem = rec.get("memory", {})
+                print(f"[{rec['status']:7s}] {tag:58s} "
+                      f"args={_gb(mem.get('argument_bytes'))} "
+                      f"temp={_gb(mem.get('temp_bytes'))} "
+                      f"flops={rec.get('hlo', {}).get('flops', 0):.3e} "
+                      f"t={rec.get('timing', {}).get('compile_s', '-')}s",
+                      flush=True)
+    n_ok = sum(r["status"] == "ok" for r in results)
+    n_skip = sum(r["status"] == "skipped" for r in results)
+    n_err = sum(r["status"] == "error" for r in results)
+    print(f"\ndry-run: {n_ok} ok, {n_skip} skipped (documented), {n_err} errors")
+    if n_err:
+        raise SystemExit(1)
+
+
+def _gb(x):
+    if x is None:
+        return "-"
+    return f"{x / 2**30:.2f}G"
+
+
+if __name__ == "__main__":
+    main()

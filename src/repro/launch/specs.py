@@ -1,0 +1,175 @@
+"""Shape/sharding specs for every (arch x input-shape) cell.
+
+``input_specs`` produces ShapeDtypeStruct stand-ins (weak-type-correct,
+shardable, zero allocation) for each assigned shape; ``abstract_params`` /
+``abstract_opt`` build the parameter/optimizer shape trees via eval_shape;
+``decode_state_specs`` assigns PartitionSpecs to serving caches by leaf name
+(KV caches shard batch over DP and *sequence over the model axis* — the
+layout that fits a 123B x 32k x 128-batch cache in 16 GB/chip HBM).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs.base import SHAPES, ModelCfg
+from repro.distributed.sharding import (ShardingRules, make_shardings,
+                                        spec_for, split_axes)
+from repro.models import decode as D
+from repro.models import transformer as T
+
+
+def abstract_params(cfg: ModelCfg, seed: int = 0):
+    """(shapes_tree, axes_tree) without allocating anything."""
+    rng = jax.random.PRNGKey(seed)
+    atree = jax.eval_shape(lambda r: T.init(r, cfg), rng)
+    return split_axes(atree)
+
+
+def param_shardings(cfg: ModelCfg, rules: ShardingRules, mesh, notes=None):
+    shapes, axes = abstract_params(cfg)
+    return shapes, make_shardings(axes, shapes, rules, mesh, notes)
+
+
+def opt_shardings(param_shapes, param_sh, mesh):
+    """AdamW moments shard exactly like their parameters."""
+    from repro.optim import adamw_init
+    shapes = jax.eval_shape(adamw_init, param_shapes)
+    sh = {
+        "mu": param_sh,
+        "nu": param_sh,
+        "count": NamedSharding(mesh, P()),
+    }
+    return shapes, sh
+
+
+# ---------------------------------------------------------------------------
+# Batch specs
+# ---------------------------------------------------------------------------
+
+def batch_specs(cfg: ModelCfg, shape_name: str, rules: ShardingRules, mesh):
+    """(shapes, shardings) for a train/prefill batch."""
+    info = SHAPES[shape_name]
+    b, s = info["global_batch"], info["seq_len"]
+    dp = tuple(rules.data_axes)
+    dp_ok = b % _axes_size(mesh, dp) == 0
+    bp = P(dp if dp_ok else None, None)
+    shapes = {}
+    sh = {}
+    s_text = s
+    if cfg.frontend == "patch_stub":
+        s_text = s - cfg.frontend_len
+        shapes["patch_embeds"] = jax.ShapeDtypeStruct(
+            (b, cfg.frontend_len, cfg.d_model), jnp.bfloat16)
+        sh["patch_embeds"] = NamedSharding(mesh, P(bp[0], None, None))
+    if cfg.encoder is not None:
+        shapes["encoder_frames"] = jax.ShapeDtypeStruct(
+            (b, cfg.encoder.n_frames, cfg.encoder.d_model), jnp.bfloat16)
+        sh["encoder_frames"] = NamedSharding(mesh, P(bp[0], None, None))
+    shapes["tokens"] = jax.ShapeDtypeStruct((b, s_text), jnp.int32)
+    sh["tokens"] = NamedSharding(mesh, bp)
+    if info["kind"] == "train":
+        shapes["targets"] = jax.ShapeDtypeStruct((b, s_text), jnp.int32)
+        sh["targets"] = NamedSharding(mesh, bp)
+    return shapes, sh
+
+
+def _axes_size(mesh, axes) -> int:
+    n = 1
+    for a in axes:
+        n *= mesh.shape[a]
+    return n
+
+
+# ---------------------------------------------------------------------------
+# Decode-state specs
+# ---------------------------------------------------------------------------
+
+_CACHE_AXES = {
+    "k": ("batch", "seq_cache", "kv_heads_cache", None),
+    "v": ("batch", "seq_cache", "kv_heads_cache", None),
+    "latent": ("batch", "seq_cache", None),
+    "rope": ("batch", "seq_cache", None),
+    "pos": ("batch", "seq_cache"),
+    "S": ("batch", "heads", None, None),
+    "h": ("batch", "ff"),
+    "conv": ("batch", None, "ff"),
+    "x_prev": ("batch", None),
+    "rwkv_cm": ("batch", None),
+    "conv_buf": ("batch", None, None),
+    "queue": ("batch", None, None),
+    "t": (),
+}
+
+
+def _leaf_key(path) -> str:
+    for entry in reversed(path):
+        if hasattr(entry, "key") and isinstance(entry.key, str):
+            return entry.key
+    return ""
+
+
+def decode_state_specs(state_shapes, rules: ShardingRules, mesh, *,
+                       seq_cache_axis="model", notes=None):
+    """PartitionSpecs for a decode state tree. KV sequence dim shards over the
+    model axis (distributed decode attention); recurrent states shard over
+    heads/width; everything falls back to replication on indivisibility."""
+    table_extra = {
+        "seq_cache": seq_cache_axis,
+        "kv_heads_cache": None,        # seq takes the model axis instead
+    }
+
+    class _Rules(ShardingRules):
+        pass
+
+    def pick(path, leaf):
+        key = _leaf_key(path)
+        base = _CACHE_AXES.get(key)
+        if base is None:
+            return P()
+        if leaf.ndim == len(base) + 1:       # stacked scanned-layer axis
+            axes = ("layers",) + base
+        elif leaf.ndim == len(base):
+            axes = base
+        else:
+            return P()
+        table = rules.table()
+        table.update(table_extra)
+        entries, used = [], set()
+        for name, dim in zip(axes, leaf.shape):
+            ax = table.get(name)
+            ax_t = ax if isinstance(ax, tuple) else (ax,) if ax else ()
+            size = _axes_size(mesh, ax_t) if ax_t else 1
+            if not ax_t or dim % size != 0 or any(a in used for a in ax_t):
+                entries.append(None)
+            else:
+                entries.append(ax)
+                used.update(ax_t)
+        return P(*entries)
+
+    return jax.tree_util.tree_map_with_path(pick, state_shapes)
+
+
+def decode_state_shardings(state_shapes, rules, mesh, **kw):
+    specs = decode_state_specs(state_shapes, rules, mesh, **kw)
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), specs,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+def abstract_decode_state(cfg: ModelCfg, shape_name: str, param_shapes):
+    """eval_shape of init_decode_state for a serving cell."""
+    info = SHAPES[shape_name]
+    b, s = info["global_batch"], info["seq_len"]
+
+    def build(params):
+        enc_out = None
+        if cfg.encoder is not None:
+            enc_out = jnp.zeros((b, cfg.encoder.n_frames, cfg.d_model),
+                                jnp.bfloat16)
+        return D.init_decode_state(params, cfg, b, max_len=s, enc_out=enc_out)
+
+    return jax.eval_shape(build, param_shapes), (b, s)

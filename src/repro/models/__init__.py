@@ -1,0 +1,3 @@
+"""Model zoo: the paper's own conv architectures (U-Net speech separation,
+GhostNet ASC) and the unified transformer LM covering the 10 assigned
+architectures (dense / MoE / SSM / hybrid / VLM / audio enc-dec)."""

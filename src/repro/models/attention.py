@@ -1,0 +1,288 @@
+"""Attention family: GQA (w/ qk-norm, sliding window, partial RoPE, prefix-LM),
+MLA (DeepSeek-V2 latent attention, absorbed decode), bidirectional (encoders)
+and cross attention (enc-dec). All sequence-mixing math routes through
+``repro.kernels.ops`` (Pallas on TPU / chunked reference elsewhere).
+
+KV caches are ring buffers when the architecture is windowed: absolute
+positions are stored alongside K/V so masking is layout-independent, and a
+500k-token context costs O(window) memory.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import AttnCfg
+from repro.distributed.sharding import A
+from repro.kernels import ops as kops
+from repro.models.layers import apply_rope, dense_init, norm_init, norm_apply, ones_init
+
+Array = jax.Array
+
+
+# ---------------------------------------------------------------------------
+# Init
+# ---------------------------------------------------------------------------
+
+def attn_init(rng, cfg: AttnCfg, d: int) -> dict:
+    ks = jax.random.split(rng, 10)
+    p = {}
+    if cfg.is_mla:
+        dq = cfg.qk_nope + cfg.qk_rope
+        if cfg.q_lora:
+            p["wdq"] = dense_init(ks[0], (d, cfg.q_lora), ("embed", "lora"))
+            p["q_norm"] = norm_init("rmsnorm", cfg.q_lora)
+            p["wuq"] = dense_init(ks[1], (cfg.q_lora, cfg.n_heads, dq),
+                                  ("lora", "heads", "head_dim"))
+        else:
+            p["wq"] = dense_init(ks[1], (d, cfg.n_heads, dq),
+                                 ("embed", "heads", "head_dim"))
+        p["wdkv"] = dense_init(ks[2], (d, cfg.kv_lora + cfg.qk_rope),
+                               ("embed", "lora"))
+        p["kv_norm"] = norm_init("rmsnorm", cfg.kv_lora)
+        p["wuk"] = dense_init(ks[3], (cfg.kv_lora, cfg.n_heads, cfg.qk_nope),
+                              ("lora", "heads", "head_dim"))
+        p["wuv"] = dense_init(ks[4], (cfg.kv_lora, cfg.n_heads, cfg.v_head),
+                              ("lora", "heads", "head_dim"))
+        p["wo"] = dense_init(ks[5], (cfg.n_heads, cfg.v_head, d),
+                             ("heads", "head_dim", "embed"),
+                             scale=(cfg.n_heads * cfg.v_head) ** -0.5)
+    else:
+        p["wq"] = dense_init(ks[0], (d, cfg.n_heads, cfg.head_dim),
+                             ("embed", "heads", "head_dim"))
+        p["wk"] = dense_init(ks[1], (d, cfg.n_kv, cfg.head_dim),
+                             ("embed", "kv_heads", "head_dim"))
+        p["wv"] = dense_init(ks[2], (d, cfg.n_kv, cfg.head_dim),
+                             ("embed", "kv_heads", "head_dim"))
+        p["wo"] = dense_init(ks[3], (cfg.n_heads, cfg.head_dim, d),
+                             ("heads", "head_dim", "embed"),
+                             scale=(cfg.n_heads * cfg.head_dim) ** -0.5)
+        if cfg.qk_norm:
+            p["q_norm"] = norm_init("rmsnorm", cfg.head_dim)
+            p["k_norm"] = norm_init("rmsnorm", cfg.head_dim)
+    return p
+
+
+def init_cache(cfg: AttnCfg, batch: int, max_len: int, dtype=jnp.bfloat16,
+               window_cap: bool = True) -> dict:
+    """Decode-time KV cache. Windowed attention gets a ring buffer."""
+    s = max_len
+    if window_cap and cfg.window is not None:
+        s = min(max_len, cfg.window)
+    if cfg.is_mla:
+        return {
+            "latent": jnp.zeros((batch, s, cfg.kv_lora), dtype),
+            "rope": jnp.zeros((batch, s, cfg.qk_rope), dtype),
+            "pos": jnp.full((batch, s), -1, jnp.int32),
+        }
+    return {
+        "k": jnp.zeros((batch, s, cfg.n_kv, cfg.head_dim), dtype),
+        "v": jnp.zeros((batch, s, cfg.n_kv, cfg.head_dim), dtype),
+        "pos": jnp.full((batch, s), -1, jnp.int32),
+    }
+
+
+def _cache_write(cache: dict, t, **entries) -> dict:
+    """Write one token at absolute position t (ring indexed)."""
+    s = cache["pos"].shape[1]
+    slot = t % s
+    new = dict(cache)
+    for name, val in entries.items():
+        new[name] = cache[name].at[:, slot].set(val.astype(cache[name].dtype))
+    new["pos"] = cache["pos"].at[:, slot].set(t)
+    return new
+
+
+# ---------------------------------------------------------------------------
+# Full-sequence (train / prefill)
+# ---------------------------------------------------------------------------
+
+def attn_forward(p: dict, cfg: AttnCfg, x: Array, *, positions: Array,
+                 prefix_len: int = 0, norm_eps: float = 1e-6,
+                 fill_cache: dict | None = None, kv_x: Array | None = None,
+                 constrain=lambda x, axes: x):
+    """Full-sequence attention. Returns (y, cache) — cache is None unless
+    ``fill_cache`` (a fresh decode cache) was passed (prefill mode)."""
+    b, s, d = x.shape
+    if cfg.is_mla:
+        return _mla_forward(p, cfg, x, positions=positions, norm_eps=norm_eps,
+                            fill_cache=fill_cache, constrain=constrain)
+
+    src = x if kv_x is None else kv_x
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"])
+    k = jnp.einsum("bsd,dhk->bshk", src, p["wk"])
+    v = jnp.einsum("bsd,dhk->bshk", src, p["wv"])
+    q = constrain(q, ("batch", "seq", "heads", "head_dim"))
+    k = constrain(k, ("batch", "seq", "kv_heads", "head_dim"))
+    v = constrain(v, ("batch", "seq", "kv_heads", "head_dim"))
+    if cfg.qk_norm:
+        q = norm_apply("rmsnorm", p["q_norm"], q, eps=norm_eps)
+        k = norm_apply("rmsnorm", p["k_norm"], k, eps=norm_eps)
+    if cfg.rope and cfg.kind != "cross":
+        kv_positions = positions
+        q = apply_rope(q, positions, pct=cfg.rope_pct, theta=cfg.rope_theta)
+        k = apply_rope(k, kv_positions, pct=cfg.rope_pct, theta=cfg.rope_theta)
+
+    cache_k, cache_v = k, v                        # grouped layout for caches
+    g = cfg.n_heads // max(cfg.n_kv, 1)
+    if g > 1:
+        # Megatron-style GQA TP: replicate KV across head groups so the
+        # attention op shards cleanly on the full q-head axis (n_kv often
+        # doesn't divide the model axis; the grouped (hkv, g) reshape would
+        # force an all-gather of q).
+        k = constrain(jnp.repeat(k, g, axis=2),
+                      ("batch", "seq", "heads", "head_dim"))
+        v = constrain(jnp.repeat(v, g, axis=2),
+                      ("batch", "seq", "heads", "head_dim"))
+
+    causal = cfg.kind not in ("bidir", "cross")
+    out = kops.flash_attention(
+        q, k, v, causal=causal, window=cfg.window, prefix_len=prefix_len,
+        scale=cfg.softmax_scale, logit_softcap=cfg.logit_softcap)
+    out = constrain(out, ("batch", "seq", "heads", "head_dim"))
+    y = jnp.einsum("bshk,hkd->bsd", out, p["wo"])
+
+    cache = None
+    if fill_cache is not None:
+        cache = _bulk_fill(fill_cache, positions, k=cache_k, v=cache_v)
+    return y, cache
+
+
+def _bulk_fill(cache: dict, positions: Array, **entries) -> dict:
+    """Prefill: write a whole sequence into the (possibly smaller ring) cache."""
+    s_cache = cache["pos"].shape[1]
+    s = positions.shape[-1]
+    new = dict(cache)
+    if s <= s_cache:
+        for name, val in entries.items():
+            new[name] = jax.lax.dynamic_update_slice_in_dim(
+                cache[name], val.astype(cache[name].dtype), 0, axis=1)
+        pos2 = jnp.broadcast_to(positions, (cache["pos"].shape[0], s))
+        new["pos"] = jax.lax.dynamic_update_slice_in_dim(
+            cache["pos"], pos2.astype(jnp.int32), 0, axis=1)
+    else:
+        # keep the last s_cache tokens, ring-aligned so slot = pos % s_cache
+        start = s - s_cache
+        for name, val in entries.items():
+            tail = jax.lax.dynamic_slice_in_dim(val, start, s_cache, axis=1)
+            shift = (start % s_cache)
+            new[name] = jnp.roll(tail.astype(cache[name].dtype), shift, axis=1)
+        tailp = jnp.broadcast_to(positions[..., start:],
+                                 (cache["pos"].shape[0], s_cache))
+        new["pos"] = jnp.roll(tailp.astype(jnp.int32), start % s_cache, axis=1)
+    return new
+
+
+def _mla_forward(p, cfg: AttnCfg, x, *, positions, norm_eps, fill_cache,
+                 constrain):
+    b, s, d = x.shape
+    if cfg.q_lora:
+        ql = norm_apply("rmsnorm", p["q_norm"],
+                        jnp.einsum("bsd,dl->bsl", x, p["wdq"]), eps=norm_eps)
+        q = jnp.einsum("bsl,lhk->bshk", ql, p["wuq"])
+    else:
+        q = jnp.einsum("bsd,dhk->bshk", x, p["wq"])
+    q_nope, q_rope = q[..., :cfg.qk_nope], q[..., cfg.qk_nope:]
+    q_rope = apply_rope(q_rope, positions, theta=cfg.rope_theta)
+
+    dkv = jnp.einsum("bsd,dl->bsl", x, p["wdkv"])
+    latent = norm_apply("rmsnorm", p["kv_norm"], dkv[..., :cfg.kv_lora],
+                        eps=norm_eps)
+    k_rope = apply_rope(dkv[..., cfg.kv_lora:], positions, theta=cfg.rope_theta)
+
+    k_nope = jnp.einsum("bsl,lhk->bshk", latent, p["wuk"])
+    v = jnp.einsum("bsl,lhk->bshk", latent, p["wuv"])
+    k_rope_b = jnp.broadcast_to(k_rope[:, :, None],
+                                (b, s, cfg.n_heads, cfg.qk_rope))
+    k = jnp.concatenate([k_nope, k_rope_b], axis=-1)
+    qf = jnp.concatenate([q_nope, q_rope], axis=-1)
+    qf = constrain(qf, ("batch", "seq", "heads", "head_dim"))
+    k = constrain(k, ("batch", "seq", "heads", "head_dim"))
+    scale = (cfg.qk_nope + cfg.qk_rope) ** -0.5
+    out = kops.flash_attention(qf, k, v, causal=True, scale=scale)
+    y = jnp.einsum("bshk,hkd->bsd", out, p["wo"])
+    cache = None
+    if fill_cache is not None:
+        cache = _bulk_fill(fill_cache, positions, latent=latent, rope=k_rope)
+    return y, cache
+
+
+# ---------------------------------------------------------------------------
+# Decode (one token)
+# ---------------------------------------------------------------------------
+
+def attn_decode(p: dict, cfg: AttnCfg, x: Array, cache: dict, t, *,
+                norm_eps: float = 1e-6, cross_kv: tuple | None = None,
+                constrain=lambda x, axes: x):
+    """x: (B, d) one token at absolute position t. Returns (y, new_cache)."""
+    b, d = x.shape
+    if cfg.is_mla:
+        return _mla_decode(p, cfg, x, cache, t, norm_eps=norm_eps,
+                           constrain=constrain)
+    if cfg.kind == "cross":
+        k, v = cross_kv
+        q = jnp.einsum("bd,dhk->bhk", x, p["wq"])
+        pos = jnp.arange(k.shape[1])[None, :] * jnp.ones((b, 1), jnp.int32)
+        out = kops.decode_attention(q, k, v, pos, jnp.full((b,), 1 << 30),
+                                    scale=cfg.softmax_scale)
+        return jnp.einsum("bhk,hkd->bd", out, p["wo"]), cache
+
+    q = jnp.einsum("bd,dhk->bhk", x, p["wq"])
+    k = jnp.einsum("bd,dhk->bhk", x, p["wk"])
+    v = jnp.einsum("bd,dhk->bhk", x, p["wv"])
+    if cfg.qk_norm:
+        q = norm_apply("rmsnorm", p["q_norm"], q, eps=norm_eps)
+        k = norm_apply("rmsnorm", p["k_norm"], k, eps=norm_eps)
+    tb = jnp.broadcast_to(jnp.asarray(t, jnp.int32), (b,))
+    if cfg.rope:
+        q = apply_rope(q[:, None], tb[:, None], pct=cfg.rope_pct,
+                       theta=cfg.rope_theta)[:, 0]
+        k = apply_rope(k[:, None], tb[:, None], pct=cfg.rope_pct,
+                       theta=cfg.rope_theta)[:, 0]
+    cache = _cache_write(cache, t, k=k, v=v)
+    out = kops.decode_attention(q, cache["k"], cache["v"], cache["pos"], tb,
+                                window=cfg.window, scale=cfg.softmax_scale,
+                                logit_softcap=cfg.logit_softcap)
+    y = jnp.einsum("bhk,hkd->bd", out, p["wo"])
+    return y, cache
+
+
+def _mla_decode(p, cfg: AttnCfg, x, cache, t, *, norm_eps, constrain):
+    """Absorbed-matmul MLA decode: attention runs in the 512-d latent space;
+    per-token cache is kv_lora + qk_rope floats (the paper-faithful memory win
+    of MLA)."""
+    b, d = x.shape
+    if cfg.q_lora:
+        ql = norm_apply("rmsnorm", p["q_norm"],
+                        jnp.einsum("bd,dl->bl", x, p["wdq"]), eps=norm_eps)
+        q = jnp.einsum("bl,lhk->bhk", ql, p["wuq"])
+    else:
+        q = jnp.einsum("bd,dhk->bhk", x, p["wq"])
+    q_nope, q_rope = q[..., :cfg.qk_nope], q[..., cfg.qk_nope:]
+    tb = jnp.broadcast_to(jnp.asarray(t, jnp.int32), (b,))
+    q_rope = apply_rope(q_rope[:, None], tb[:, None],
+                        theta=cfg.rope_theta)[:, 0]
+
+    dkv = jnp.einsum("bd,dl->bl", x, p["wdkv"])
+    latent = norm_apply("rmsnorm", p["kv_norm"], dkv[..., :cfg.kv_lora],
+                        eps=norm_eps)
+    k_rope = apply_rope(dkv[:, None, cfg.kv_lora:], tb[:, None],
+                        theta=cfg.rope_theta)[:, 0]
+    cache = _cache_write(cache, t, latent=latent, rope=k_rope)
+
+    # absorb W_UK into q: scores over the latent cache directly
+    q_lat = jnp.einsum("bhk,lhk->bhl", q_nope, p["wuk"])
+    scale = (cfg.qk_nope + cfg.qk_rope) ** -0.5
+    scores = (jnp.einsum("bhl,bsl->bhs", q_lat.astype(jnp.float32),
+                         cache["latent"].astype(jnp.float32))
+              + jnp.einsum("bhk,bsk->bhs", q_rope.astype(jnp.float32),
+                           cache["rope"].astype(jnp.float32))) * scale
+    allow = (cache["pos"] >= 0) & (cache["pos"] <= tb[:, None])
+    scores = jnp.where(allow[:, None], scores, -1e30)
+    probs = jax.nn.softmax(scores, axis=-1)
+    o_lat = jnp.einsum("bhs,bsl->bhl", probs,
+                       cache["latent"].astype(jnp.float32)).astype(x.dtype)
+    out = jnp.einsum("bhl,lhk->bhk", o_lat, p["wuv"])
+    y = jnp.einsum("bhk,hkd->bd", out, p["wo"])
+    return y, cache

@@ -1,0 +1,392 @@
+"""Serving path: decode-state construction, prefill, single-token decode, and
+SOI *scattered decode* (the paper's inference pattern at token granularity).
+
+State layout mirrors the model's segment structure; scanned segments carry
+stacked (n_groups, ...) cache trees so the per-token step is itself a single
+``lax.scan`` over layers (small HLO, fast compile, production-standard).
+
+Scattered decode (cfg.soi): two compiled phase steppers, cycled at deployment:
+  even (t = stride*s):   pre -> compress conv (window buffer) -> middle decode
+                         @ compressed position s (half-length caches) ->
+                         extrapolation queue -> fuse with fresh skip -> post
+  other phases:          pre -> push buffer -> pop queue (cached partial state)
+                         -> fuse -> post        [middle entirely absent]
+The middle block's KV caches hold S/stride entries: its attention cost drops
+~stride^2-fold and its MLP cost stride-fold — the LM analogue of the paper's
+MAC savings. "fp" mode serves from strictly-past middle outputs so the middle
+can be *precomputed* between token arrivals (paper's FP latency win).
+"""
+
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import BlockCfg, ModelCfg, Segment
+from repro.models import attention as attn
+from repro.models import mlp as mlpm
+from repro.models import moe as moem
+from repro.models import rglru as rgm
+from repro.models import rwkv as rkm
+from repro.models.layers import norm_apply
+from repro.models.transformer import (_block_apply, _dtype, _head_weights,
+                                      _noc, _segment_forward, _split_segment_params,
+                                      encode, soi_partition, trunk)
+
+Array = jax.Array
+
+
+# ---------------------------------------------------------------------------
+# Cache init
+# ---------------------------------------------------------------------------
+
+def _block_cache(b: BlockCfg, batch: int, max_len: int, d: int, dt) -> dict:
+    c = {}
+    if b.attn is not None:
+        c["attn"] = attn.init_cache(b.attn, batch, max_len, dt)
+    if b.rglru is not None:
+        c["rglru"] = rgm.rglru_init_state(b.rglru, d, batch, dt)
+    if b.rwkv is not None:
+        c["rwkv_tm"] = {"x_prev": jnp.zeros((batch, d), dt),
+                        "S": jnp.zeros((batch, b.rwkv.n_heads,
+                                        b.rwkv.head_dim, b.rwkv.head_dim),
+                                       jnp.float32)}
+        c["rwkv_cm"] = jnp.zeros((batch, d), dt)
+    if b.cross_attn is not None:
+        c["cross_k"] = None   # filled from encoder output at state init
+        c["cross_v"] = None
+    return c
+
+
+def _stack(tree, n: int):
+    """Replicate a per-layer cache prototype across the scanned layer axis
+    (preserves sentinel values like the -1 'empty slot' positions)."""
+    return jax.tree.map(lambda x: jnp.repeat(x[None], n, axis=0), tree)
+
+
+def _segment_cache(seg: Segment, batch: int, max_len: int, d: int, dt):
+    if seg.scan:
+        group = {f"sub{i}": _block_cache(b, batch, max_len, d, dt)
+                 for i, b in enumerate(seg.blocks)}
+        group = {k: {kk: vv for kk, vv in v.items() if vv is not None}
+                 for k, v in group.items()}
+        return _stack(group, seg.n_groups)
+    out = []
+    for j in range(seg.n_layers):
+        c = _block_cache(seg.blocks[j % len(seg.blocks)], batch, max_len, d, dt)
+        out.append({k: v for k, v in c.items() if v is not None})
+    return out
+
+
+def _segments_cache(segments, batch, max_len, d, dt):
+    return [_segment_cache(s, batch, max_len, d, dt) for s in segments]
+
+
+def _fill_cross_kv(params_segments, segments, enc_out):
+    """Precompute encoder K/V for every decoder cross-attention layer."""
+    out = []
+    for seg_p, seg in zip(params_segments, segments):
+        if all(b.cross_attn is None for b in seg.blocks):
+            out.append(None)
+            continue
+
+        def kv_of(gp):
+            kv = {}
+            for i, b in enumerate(seg.blocks):
+                if b.cross_attn is None:
+                    continue
+                pa = gp[f"sub{i}"]["cross"]
+                kv[f"sub{i}"] = {
+                    "k": jnp.einsum("bsd,dhk->bshk", enc_out, pa["wk"]),
+                    "v": jnp.einsum("bsd,dhk->bshk", enc_out, pa["wv"]),
+                }
+            return kv
+
+        if seg.scan:
+            out.append(jax.lax.map(kv_of, seg_p))
+        else:
+            layer_kv = []
+            for j, bp in enumerate(seg_p):
+                b = seg.blocks[j % len(seg.blocks)]
+                if b.cross_attn is None:
+                    layer_kv.append(None)
+                else:
+                    layer_kv.append({
+                        "k": jnp.einsum("bsd,dhk->bshk", enc_out,
+                                        bp["cross"]["wk"]),
+                        "v": jnp.einsum("bsd,dhk->bshk", enc_out,
+                                        bp["cross"]["wv"]),
+                    })
+            out.append(layer_kv)
+    return out
+
+
+def init_decode_state(params, cfg: ModelCfg, batch: int, max_len: int, *,
+                      enc_out=None) -> dict:
+    dt = _dtype(cfg)
+    d = cfg.d_model
+    state = {"t": jnp.zeros((), jnp.int32)}
+    if cfg.soi is None:
+        state["segments"] = _segments_cache(cfg.segments, batch, max_len, d, dt)
+    else:
+        pre, mid, post = soi_partition(cfg)
+        st = cfg.soi.stride
+        # middle caches hold ceil(max_len/stride) compressed positions,
+        # rounded up to a shardable multiple (a 16385-long cache would fall
+        # back to replication on a 16-way model axis — measured 3.4x decode
+        # state blow-up, EXPERIMENTS §Perf)
+        mid_len = -(-max_len // st)
+        mid_len = -(-mid_len // 256) * 256 if mid_len > 256 else mid_len
+        state["pre"] = _segments_cache(pre, batch, max_len, d, dt)
+        state["mid"] = _segments_cache(mid, batch, mid_len, d, dt)
+        state["post"] = _segments_cache(post, batch, max_len, d, dt)
+        state["conv_buf"] = jnp.zeros((batch, st - 1, d), dt)
+        state["queue"] = jnp.zeros((batch, st, d), dt)
+    if enc_out is not None:
+        state["cross_kv"] = _fill_cross_kv(params["segments"], cfg.segments,
+                                           enc_out)
+    return state
+
+
+# ---------------------------------------------------------------------------
+# One-token block / segment decode
+# ---------------------------------------------------------------------------
+
+def _block_decode(bp, b: BlockCfg, cfg: ModelCfg, x, cache, t, *,
+                  cross_kv=None, constrain=_noc):
+    eps = cfg.norm_eps
+    new_c = dict(cache)
+    if b.attn is not None:
+        h = norm_apply(b.norm, bp["ln1"], x, eps=eps)
+        h, new_c["attn"] = attn.attn_decode(bp["attn"], b.attn, h,
+                                            cache["attn"], t, norm_eps=eps,
+                                            constrain=constrain)
+        x = x + h
+    if b.rglru is not None:
+        h = norm_apply(b.norm, bp["ln1"], x, eps=eps)
+        h, new_c["rglru"] = rgm.rglru_decode(bp["rglru"], b.rglru, h,
+                                             cache["rglru"],
+                                             constrain=constrain)
+        x = x + h
+    if b.rwkv is not None:
+        h = norm_apply(b.norm, bp["ln1"], x, eps=eps)
+        h, new_c["rwkv_tm"] = rkm.rwkv_time_mix_decode(bp["rwkv"], b.rwkv, h,
+                                                       cache["rwkv_tm"])
+        x = x + h
+        h2 = norm_apply(b.norm, bp["ln2"], x, eps=eps)
+        h2, new_c["rwkv_cm"] = rkm.rwkv_channel_mix_decode(bp["rwkv"], h2,
+                                                           cache["rwkv_cm"])
+        x = x + h2
+        return x, new_c
+    if b.cross_attn is not None:
+        h = norm_apply(b.norm, bp["lnx"], x, eps=eps)
+        h, _ = attn.attn_decode(bp["cross"], b.cross_attn, h, {}, t,
+                                norm_eps=eps,
+                                cross_kv=(cross_kv["k"], cross_kv["v"]),
+                                constrain=constrain)
+        x = x + h
+    if b.mlp is not None:
+        h = norm_apply(b.norm, bp["ln2"], x, eps=eps)
+        x = x + mlpm.mlp_apply(bp["mlp"], b.mlp, h, constrain=constrain)
+    if b.moe is not None:
+        h = norm_apply(b.norm, bp["ln2"], x, eps=eps)
+        y, _ = moem.moe_apply(bp["moe"], b.moe, h, constrain=constrain)
+        x = x + y
+    return x, new_c
+
+
+def _segment_decode(seg_p, seg_c, seg: Segment, cfg: ModelCfg, x, t, *,
+                    cross_kv=None, constrain=_noc):
+    if seg.scan:
+        def body(x, inp):
+            gp, gc, ckv = inp
+            new_gc = {}
+            for i, b in enumerate(seg.blocks):
+                sub_ckv = None if ckv is None else ckv.get(f"sub{i}")
+                x, new_gc[f"sub{i}"] = _block_decode(
+                    gp[f"sub{i}"], b, cfg, x, gc[f"sub{i}"], t,
+                    cross_kv=sub_ckv, constrain=constrain)
+            return x, new_gc
+
+        if cross_kv is None:
+            x, new_c = jax.lax.scan(lambda x_, inp: body(x_, (*inp, None)),
+                                    x, (seg_p, seg_c))
+        else:
+            x, new_c = jax.lax.scan(body, x, (seg_p, seg_c, cross_kv))
+        return x, new_c
+    else:
+        new_list = []
+        for j, (bp, bc) in enumerate(zip(seg_p, seg_c)):
+            b = seg.blocks[j % len(seg.blocks)]
+            ckv = None if cross_kv is None else cross_kv[j]
+            x, nc = _block_decode(bp, b, cfg, x, bc, t, cross_kv=ckv,
+                                  constrain=constrain)
+            new_list.append(nc)
+        return x, new_list
+
+
+def _embed_one(params, cfg: ModelCfg, token, constrain=_noc, t=None):
+    x = jnp.take(params["embed"], token, axis=0).astype(_dtype(cfg))
+    if cfg.embed_scale:
+        x = x * jnp.asarray(math.sqrt(cfg.d_model), _dtype(cfg))
+    if cfg.learned_pos_len and t is not None:
+        x = x + jnp.take(params["pos_embed"], t, axis=0).astype(x.dtype)
+    return x
+
+
+def _logits_one(params, cfg: ModelCfg, x):
+    h = norm_apply(cfg.segments[0].blocks[0].norm, params["final_norm"], x,
+                   eps=cfg.norm_eps)
+    logits = jnp.einsum("bd,dv->bv", h,
+                        _head_weights(params, cfg)).astype(jnp.float32)
+    if cfg.logits_softcap:
+        logits = cfg.logits_softcap * jnp.tanh(logits / cfg.logits_softcap)
+    return logits
+
+
+# ---------------------------------------------------------------------------
+# Standard decode
+# ---------------------------------------------------------------------------
+
+def decode_step(params, cfg: ModelCfg, state: dict, token, *, constrain=_noc):
+    """token: (B,) int32. Returns (logits (B,V), new_state)."""
+    assert cfg.soi is None, "use make_soi_steppers for SOI models"
+    from repro.models.transformer import cast_params
+    params = cast_params(params, cfg)
+    t = state["t"]
+    x = _embed_one(params, cfg, token, constrain, t=t)
+    ckv_list = state.get("cross_kv")
+    new_segments = []
+    for i, (seg_p, seg_c, seg) in enumerate(zip(params["segments"],
+                                                state["segments"],
+                                                cfg.segments)):
+        ckv = ckv_list[i] if ckv_list is not None else None
+        x, nc = _segment_decode(seg_p, seg_c, seg, cfg, x, t, cross_kv=ckv,
+                                constrain=constrain)
+        new_segments.append(nc)
+    new_state = dict(state)
+    new_state["segments"] = new_segments
+    new_state["t"] = t + 1
+    return _logits_one(params, cfg, x), new_state
+
+
+# ---------------------------------------------------------------------------
+# SOI scattered decode
+# ---------------------------------------------------------------------------
+
+def make_soi_steppers(params, cfg: ModelCfg):
+    """Returns [phase_0_step, ..., phase_{stride-1}_step]; phase = t % stride.
+
+    Phase stride-1... wait — compressed frame s completes when token s*stride
+    arrives (causal conv window ends there), so the middle runs on phase 0 and
+    the other phases reuse cached partial states.
+    """
+    soi = cfg.soi
+    st = soi.stride
+    pre_s, mid_s, post_s = soi_partition(cfg)
+    fp = soi.mode == "fp"
+
+    def run_outer(parts_p, parts_s, state_key, x, state, t, constrain):
+        new = []
+        for seg_p, seg_c, seg in zip(parts_p, state[state_key], parts_s):
+            x, nc = _segment_decode(seg_p, seg_c, seg, cfg, x, t,
+                                    constrain=constrain)
+            new.append(nc)
+        return x, new
+
+    def build(phase: int):
+        def step(params_, state, token, *, constrain=_noc):
+            from repro.models.transformer import cast_params
+            params_ = cast_params(params_, cfg)
+            pre_p, mid_p, post_p = _split_segment_params(params_["segments"],
+                                                         cfg)
+            soi_p = params_["soi"]
+            t = state["t"]
+            new_state = dict(state)
+            x = _embed_one(params_, cfg, token, constrain, t=t)
+            x, new_state["pre"] = run_outer(pre_p, pre_s, "pre", x, state, t,
+                                            constrain)
+            skip = x
+            queue = state["queue"]
+            if phase == 0:
+                # compression window complete: run the middle
+                window = jnp.concatenate([state["conv_buf"], x[:, None]],
+                                         axis=1)              # (B, st, d)
+                xc = jnp.einsum("bkd,kde->be", window,
+                                soi_p["compress"].astype(x.dtype))
+                s_pos = t // st
+                xm = xc
+                xm_new = []
+                for seg_p, seg_c, seg in zip(mid_p, state["mid"], mid_s):
+                    xm, nc = _segment_decode(seg_p, seg_c, seg, cfg, xm,
+                                             s_pos, constrain=constrain)
+                    xm_new.append(nc)
+                new_state["mid"] = xm_new
+                if fp:
+                    xu = queue[:, 0]
+                    queue = jnp.stack([xm] * st, axis=1)
+                else:
+                    xu = xm
+                    queue = jnp.stack([xm] * st, axis=1)
+            else:
+                xu = queue[:, min(phase - (0 if fp else 1), st - 1)]
+            new_state["queue"] = queue
+            new_state["conv_buf"] = jnp.concatenate(
+                [state["conv_buf"], x[:, None]], axis=1)[:, 1:]
+            fused = jnp.einsum(
+                "bc,cd->bd", jnp.concatenate([xu, skip], axis=-1),
+                soi_p["fuse"].astype(x.dtype))
+            x, new_state["post"] = run_outer(post_p, post_s, "post", fused,
+                                             state, t, constrain)
+            new_state["t"] = t + 1
+            return _logits_one(params_, cfg, x), new_state
+
+        return step
+
+    return [build(p) for p in range(st)]
+
+
+# ---------------------------------------------------------------------------
+# Prefill
+# ---------------------------------------------------------------------------
+
+def prefill(params, cfg: ModelCfg, tokens, *, prefix_embeds=None,
+            encoder_frames=None, max_len: int | None = None, constrain=_noc):
+    """Run the full-sequence path once, filling decode caches.
+
+    Returns (last_logits (B, V), state) ready for decode_step at position S.
+    (SOI models: use the offline path then re-prefill middle caches — provided
+    by examples/scattered_decode.py; production prefill for SOI uses the same
+    compressed trunk with fill_cache, wired here for the non-SOI case.)
+    """
+    assert cfg.soi is None, "SOI prefill: see examples/scattered_decode.py"
+    from repro.models.transformer import cast_params
+    params = cast_params(params, cfg)
+    b, s = tokens.shape
+    max_len = max_len or s
+    dt = _dtype(cfg)
+    enc_out = None
+    if cfg.encoder is not None:
+        enc_out = encode(params, cfg, encoder_frames, constrain)
+    from repro.models.transformer import _embed_tokens
+    x = _embed_tokens(params, cfg, tokens, constrain)
+    if prefix_embeds is not None:
+        x = jnp.concatenate([prefix_embeds.astype(x.dtype), x], axis=1)
+    positions = jnp.arange(x.shape[1])[None]
+    prefix_len = cfg.frontend_len if cfg.prefix_lm else 0
+
+    caches = []
+    for seg_p, seg in zip(params["segments"], cfg.segments):
+        x, _, c = _segment_forward(seg_p, seg, cfg, x, positions=positions,
+                                   prefix_len=prefix_len, enc_out=enc_out,
+                                   collect_cache=True, batch=b,
+                                   max_len=max_len, constrain=constrain)
+        caches.append(c)
+    state = {"t": jnp.asarray(x.shape[1], jnp.int32), "segments": caches}
+    if enc_out is not None:
+        state["cross_kv"] = _fill_cross_kv(params["segments"], cfg.segments,
+                                           enc_out)
+    logits = _logits_one(params, cfg, x[:, -1])
+    return logits, state

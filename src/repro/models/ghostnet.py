@@ -1,0 +1,140 @@
+"""GhostNet-1D for acoustic scene classification — the paper's second testbed
+(Table 4: 7 model sizes x {Baseline, STMC, SOI}).
+
+Ghost module (Han et al. 2020): a primary conv producing cout/2 features + a
+"cheap" depthwise conv generating the other half ("ghost" features). We stream
+over time (causal convs, STMC partial states); SOI inserts a stride-2 temporal
+compression at a chosen block with duplication-upsample + skip at a later one,
+exactly the U-Net mechanism without the mirrored decoder.
+
+Used for: complexity accounting (Table 4 reproduction), training smoke tests
+on synthetic ASC-like data, and the SOI-composability claims (classification
+outputs drift slowly => SOI quality cost ~ 0, paper §4.2).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import complexity as cx
+from repro.core.soi import SOIConvCfg, scc_extrapolate
+from repro.core.stmc import causal_conv1d, conv_init
+
+Array = jax.Array
+
+
+@dataclasses.dataclass(frozen=True)
+class GhostNetConfig:
+    in_channels: int = 40            # mel bands
+    n_classes: int = 10
+    widths: tuple = (16, 24, 40, 56, 80)
+    kernel: int = 3
+    soi: SOIConvCfg | None = None    # pairs index blocks (1-based)
+    fps: float = 62.5
+
+    @property
+    def n_blocks(self) -> int:
+        return len(self.widths)
+
+
+def _ghost_init(rng, k, cin, cout):
+    k1, k2 = jax.random.split(rng)
+    half = cout // 2
+    return {"primary": conv_init(k1, k, cin, half),
+            "cheap": conv_init(k2, k, half, cout - half)}
+
+
+def _ghost_apply(p, x, *, stride=1):
+    h1 = causal_conv1d(x, p["primary"]["w"], p["primary"]["b"], stride=stride)
+    h1 = jax.nn.relu(h1)
+    h2 = jax.nn.relu(causal_conv1d(h1, p["cheap"]["w"], p["cheap"]["b"]))
+    return jnp.concatenate([h1, h2], axis=-1)
+
+
+def init(rng, cfg: GhostNetConfig) -> dict:
+    ks = jax.random.split(rng, cfg.n_blocks + 3)
+    params = {"blocks": [], "skip_proj": {}}
+    cin = cfg.in_channels
+    for i, w in enumerate(cfg.widths):
+        params["blocks"].append(_ghost_init(ks[i], cfg.kernel, cin, w))
+        cin = w
+    params["head"] = conv_init(ks[-2], 1, cin, cfg.n_classes)
+    if cfg.soi is not None:
+        # skip projection from the compress point to the upsample point
+        for p in cfg.soi.pairs:
+            c_in = ([cfg.in_channels] + list(cfg.widths))[p - 1]
+            c_out = cfg.widths[-1]
+            params["skip_proj"][p] = conv_init(ks[-1], 1, c_in, c_out)
+    return params
+
+
+def apply_offline(params, x, cfg: GhostNetConfig):
+    """x: (B, T, in_channels) -> logits (B, n_classes) (mean-pooled)."""
+    soi = cfg.soi
+    pairs = set(soi.pairs) if soi else set()
+    h = x
+    skips = {}
+    t_full = x.shape[1]
+    for i in range(1, cfg.n_blocks + 1):
+        if i in pairs:
+            skips[i] = h                       # input of the strided block
+        stride = soi.stride if (soi and i in pairs) else 1
+        h = _ghost_apply(params["blocks"][i - 1], h, stride=stride)
+    if soi and pairs:
+        # upsample back to full rate after the last block + skip injection
+        for p in sorted(pairs, reverse=True):
+            h = scc_extrapolate(h, stride=soi.stride,
+                                out_len=skips[p].shape[1])
+            sp = params["skip_proj"][p]
+            h = h + causal_conv1d(skips[p], sp["w"], sp["b"])
+    pooled = jnp.mean(h, axis=1)
+    w = params["head"]["w"][0]
+    return jnp.einsum("bc,co->bo", pooled, w) + params["head"]["b"]
+
+
+# ---------------------------------------------------------------------------
+# Complexity (Table 4)
+# ---------------------------------------------------------------------------
+
+def layer_plan(cfg: GhostNetConfig) -> list[cx.LayerCost]:
+    """Ghost blocks as encoder positions; the pooled head is always-on."""
+    plan = []
+    cin = cfg.in_channels
+    for i, w in enumerate(cfg.widths, start=1):
+        half = w // 2
+        macs = cfg.kernel * cin * half + cfg.kernel * half * (w - half)
+        plan.append(cx.LayerCost(f"ghost{i}", macs, enc_pos=i))
+        cin = w
+    plan.append(cx.LayerCost("head", cin * cfg.n_classes,
+                             dec_pos=cfg.n_blocks + 1))
+    if cfg.soi is not None:
+        for p in cfg.soi.pairs:
+            c_in = ([cfg.in_channels] + list(cfg.widths))[p - 1]
+            plan.append(cx.LayerCost(f"skip{p}", c_in * cfg.widths[-1],
+                                     dec_pos=cfg.n_blocks + 1))
+    return plan
+
+
+def complexity_report(cfg: GhostNetConfig) -> cx.ComplexityReport:
+    soi = cfg.soi or SOIConvCfg(pairs=())
+    # n_dec=0: pure encoder topology — every pair's region runs to the end.
+    return cx.analyze(layer_plan(cfg), cfg.n_blocks, 0, soi, fps=cfg.fps)
+
+
+def n_params(cfg: GhostNetConfig) -> int:
+    cin = cfg.in_channels
+    total = 0
+    for w in cfg.widths:
+        half = w // 2
+        total += cfg.kernel * cin * half + half          # primary
+        total += cfg.kernel * half * (w - half) + (w - half)
+        cin = w
+    total += cin * cfg.n_classes + cfg.n_classes
+    if cfg.soi is not None:
+        for p in cfg.soi.pairs:
+            c_in = ([cfg.in_channels] + list(cfg.widths))[p - 1]
+            total += c_in * cfg.widths[-1] + cfg.widths[-1]
+    return total

@@ -1,0 +1,108 @@
+"""Shared layer primitives: initializers (with logical sharding axes), norms,
+rotary embeddings, embedding tables."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.sharding import A
+
+Array = jax.Array
+
+
+def dense_init(rng, shape, axes, *, scale: float | None = None,
+               dtype=jnp.float32) -> A:
+    """Truncated-normal init with 1/sqrt(fan_in) scale (fan_in = first axis
+    unless overridden)."""
+    if scale is None:
+        scale = shape[0] ** -0.5
+    w = scale * jax.random.truncated_normal(rng, -3.0, 3.0, shape, dtype)
+    return A(w, axes)
+
+
+def zeros_init(shape, axes, dtype=jnp.float32) -> A:
+    return A(jnp.zeros(shape, dtype), axes)
+
+
+def ones_init(shape, axes, dtype=jnp.float32) -> A:
+    return A(jnp.ones(shape, dtype), axes)
+
+
+def embed_init(rng, vocab, d, *, dtype=jnp.float32) -> A:
+    w = jax.random.normal(rng, (vocab, d), dtype)
+    return A(w, ("vocab", "embed"))
+
+
+# ---------------------------------------------------------------------------
+# Norms
+# ---------------------------------------------------------------------------
+
+def rmsnorm_init(d: int) -> dict:
+    return {"scale": zeros_init((d,), ("embed_norm",))}
+
+
+def rmsnorm(p: dict, x: Array, *, eps: float = 1e-6,
+            gemma_scale: bool = True) -> Array:
+    """RMSNorm with the (1 + scale) convention (zero-init scale)."""
+    dt = x.dtype
+    xf = x.astype(jnp.float32)
+    xf = xf * jax.lax.rsqrt(jnp.mean(xf * xf, axis=-1, keepdims=True) + eps)
+    scale = 1.0 + p["scale"].astype(jnp.float32) if gemma_scale \
+        else p["scale"].astype(jnp.float32)
+    return (xf * scale).astype(dt)
+
+
+def layernorm_init(d: int) -> dict:
+    return {"scale": zeros_init((d,), ("embed_norm",)),
+            "bias": zeros_init((d,), ("embed_norm",))}
+
+
+def layernorm(p: dict, x: Array, *, eps: float = 1e-5) -> Array:
+    dt = x.dtype
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.var(xf, axis=-1, keepdims=True)
+    y = (xf - mu) * jax.lax.rsqrt(var + eps)
+    y = y * (1.0 + p["scale"].astype(jnp.float32)) + p["bias"].astype(jnp.float32)
+    return y.astype(dt)
+
+
+def norm_init(kind: str, d: int) -> dict:
+    return layernorm_init(d) if kind == "layernorm" else rmsnorm_init(d)
+
+
+def norm_apply(kind: str, p: dict, x: Array, *, eps: float = 1e-6) -> Array:
+    if kind == "layernorm":
+        return layernorm(p, x, eps=max(eps, 1e-5))
+    return rmsnorm(p, x, eps=eps)
+
+
+# ---------------------------------------------------------------------------
+# Rotary position embeddings
+# ---------------------------------------------------------------------------
+
+def rope_freqs(head_dim: int, *, pct: float = 1.0, theta: float = 1e4) -> Array:
+    """Inverse frequencies for the rotated fraction of the head dim."""
+    rot = int(head_dim * pct) // 2 * 2
+    return 1.0 / (theta ** (jnp.arange(0, rot, 2, dtype=jnp.float32) / rot))
+
+
+def apply_rope(x: Array, positions: Array, *, pct: float = 1.0,
+               theta: float = 1e4) -> Array:
+    """x: (..., S, H, dh) or (..., S, dh); positions: broadcastable to (..., S)."""
+    dh = x.shape[-1]
+    rot = int(dh * pct) // 2 * 2
+    if rot == 0:
+        return x
+    inv = rope_freqs(dh, pct=pct, theta=theta)
+    ang = positions[..., None].astype(jnp.float32) * inv     # (..., S, rot/2)
+    if x.ndim == positions.ndim + 2:                          # heads present
+        ang = ang[..., None, :]
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+    xr = x[..., :rot].astype(jnp.float32)
+    x1, x2 = xr[..., 0::2], xr[..., 1::2]
+    y1 = x1 * cos - x2 * sin
+    y2 = x1 * sin + x2 * cos
+    yr = jnp.stack([y1, y2], axis=-1).reshape(xr.shape)
+    return jnp.concatenate([yr.astype(x.dtype), x[..., rot:]], axis=-1)

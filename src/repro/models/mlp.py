@@ -1,0 +1,40 @@
+"""Channel mixers: SwiGLU / GeGLU (gated), squared-ReLU (Nemotron), GELU."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import MLPCfg
+from repro.models.layers import dense_init
+
+Array = jax.Array
+
+_GATED = {"swiglu": jax.nn.silu, "geglu": jax.nn.gelu}
+_PLAIN = {"relu2": lambda x: jnp.square(jax.nn.relu(x)), "gelu": jax.nn.gelu}
+
+
+def mlp_init(rng, cfg: MLPCfg, d: int) -> dict:
+    ks = jax.random.split(rng, 3)
+    p = {"up": dense_init(ks[0], (d, cfg.d_ff), ("embed", "ff")),
+         "down": dense_init(ks[1], (cfg.d_ff, d), ("ff", "embed"))}
+    if cfg.kind in _GATED:
+        p["gate"] = dense_init(ks[2], (d, cfg.d_ff), ("embed", "ff"))
+    return p
+
+
+def mlp_apply(p: dict, cfg: MLPCfg, x: Array,
+              constrain=lambda x, axes: x) -> Array:
+    """x: (..., d)."""
+    h = jnp.einsum("...d,df->...f", x, p["up"])
+    if cfg.kind in _GATED:
+        g = jnp.einsum("...d,df->...f", x, p["gate"])
+        h = h * _GATED[cfg.kind](g)
+    else:
+        h = _PLAIN[cfg.kind](h)
+    h = constrain(h, ("batch", "seq", "ff"))
+    # remat_policy="names": the ffn hidden is the single most expensive
+    # activation to recompute (2/3 of MLP fwd FLOPs) at moderate bytes
+    from jax.ad_checkpoint import checkpoint_name
+    h = checkpoint_name(h, "ffn_hidden")
+    return jnp.einsum("...f,fd->...d", h, p["down"])

@@ -1,0 +1,147 @@
+"""Mixture-of-Experts with sort-based capacity dispatch and expert parallelism.
+
+Dispatch is the production JAX pattern (no O(T*E*C) one-hot tensors):
+  1. router top-k -> (token, expert, weight) triples,
+  2. argsort by expert id; position-in-expert via searchsorted segment starts,
+  3. capacity-drop + scatter into an (E, C, d) buffer (EP-sharded on "experts"),
+  4. batched expert matmuls, gather back, weighted combine.
+
+Under pjit, tokens are data-sharded and experts model-sharded; the partitioner
+inserts the all-to-all exchange at the dispatch/combine boundaries. A
+``shard_map`` variant with explicit all_to_all exists as a perf alternative in
+``repro.distributed.collectives``.
+
+Supports DeepSeek-style shared experts (always-on dense branch) and the
+standard switch load-balancing auxiliary loss.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import MoECfg
+from repro.models.layers import dense_init
+
+Array = jax.Array
+
+
+def moe_init(rng, cfg: MoECfg, d: int) -> dict:
+    ks = jax.random.split(rng, 8)
+    gated = cfg.mlp_kind in ("swiglu", "geglu")
+    p = {
+        "router": dense_init(ks[0], (d, cfg.n_experts), ("embed", "experts"),
+                             scale=d ** -0.5),
+        "up": dense_init(ks[1], (cfg.n_experts, d, cfg.d_expert),
+                         ("experts", "embed", "expert_ff")),
+        "down": dense_init(ks[2], (cfg.n_experts, cfg.d_expert, d),
+                           ("experts", "expert_ff", "embed"),
+                           scale=cfg.d_expert ** -0.5),
+    }
+    if gated:
+        p["gate"] = dense_init(ks[3], (cfg.n_experts, d, cfg.d_expert),
+                               ("experts", "embed", "expert_ff"))
+    if cfg.n_shared:
+        w = cfg.n_shared * (cfg.d_shared or cfg.d_expert)
+        p["shared_up"] = dense_init(ks[4], (d, w), ("embed", "ff"))
+        p["shared_down"] = dense_init(ks[5], (w, d), ("ff", "embed"),
+                                      scale=w ** -0.5)
+        if gated:
+            p["shared_gate"] = dense_init(ks[6], (d, w), ("embed", "ff"))
+    return p
+
+
+def _act(cfg: MoECfg, p, buf, prefix="", grouped=False):
+    gated = cfg.mlp_kind in ("swiglu", "geglu")
+    fn = jax.nn.silu if cfg.mlp_kind == "swiglu" else jax.nn.gelu
+    if prefix == "shared_":
+        h = jnp.einsum("td,df->tf", buf, p["shared_up"])
+        if gated:
+            h = h * fn(jnp.einsum("td,df->tf", buf, p["shared_gate"]))
+        elif cfg.mlp_kind == "relu2":
+            h = jnp.square(jax.nn.relu(h))
+        return jnp.einsum("tf,fd->td", h, p["shared_down"])
+    eq_up = "recd,edf->recf" if grouped else "ecd,edf->ecf"
+    eq_dn = "recf,efd->recd" if grouped else "ecf,efd->ecd"
+    h = jnp.einsum(eq_up, buf, p["up"])
+    if gated:
+        h = h * fn(jnp.einsum(eq_up, buf, p["gate"]))
+    elif cfg.mlp_kind == "relu2":
+        h = jnp.square(jax.nn.relu(h))
+    return jnp.einsum(eq_dn, h, p["down"])
+
+
+def moe_apply(p: dict, cfg: MoECfg, x: Array, *, capacity: int | None = None,
+              dispatch_groups: int = 32,
+              constrain=lambda x, axes: x):
+    """x: (B, S, d) or (T, d). Returns (y, aux_loss).
+
+    Dispatch is *grouped*: tokens split into ``dispatch_groups`` rows (sharded
+    over the DP axes), each row sorts/buckets its own tokens with a per-group
+    capacity. Sorts, gathers and scatters stay local to a data shard; the
+    only cross-shard movement is the (group -> expert) buffer reshard — the
+    expert-parallel all-to-all. A single *global* sort would force XLA to
+    gather every token to every device (hundreds of GB at 1M tokens).
+    """
+    import math as _math
+    shape = x.shape
+    d = shape[-1]
+    xt = x.reshape(-1, d)
+    t = xt.shape[0]
+    e, k = cfg.n_experts, cfg.top_k
+    r = _math.gcd(t, dispatch_groups)
+    tg = t // r                                   # tokens per group
+    cap = capacity or max(k, int(tg * k / e * cfg.capacity_factor))
+
+    xg = constrain(xt.reshape(r, tg, d), ("dispatch", None, "embed_act"))
+    logits = jnp.einsum("rtd,de->rte", xg, p["router"]).astype(jnp.float32)
+    probs = jax.nn.softmax(logits, axis=-1)
+    top_w, top_i = jax.lax.top_k(probs, k)        # (r, tg, k)
+
+    # --- load-balancing aux (switch-style), global statistics ---
+    assign = jnp.zeros((e,), jnp.float32).at[top_i.reshape(-1)].add(
+        1.0 / (t * k))
+    aux = cfg.router_aux_weight * e * jnp.sum(
+        assign * jnp.mean(probs, axis=(0, 1)))
+
+    # --- per-group sort-based dispatch (sharded sort: axis -1 of (r, tg*k)) ---
+    flat_e = top_i.reshape(r, tg * k)
+    flat_tok = jnp.broadcast_to(jnp.repeat(jnp.arange(tg), k)[None],
+                                (r, tg * k))
+    flat_w = top_w.reshape(r, tg * k)
+    order = jnp.argsort(flat_e, axis=-1)
+    se = jnp.take_along_axis(flat_e, order, axis=-1)
+    stok = jnp.take_along_axis(flat_tok, order, axis=-1)
+    sw = jnp.take_along_axis(flat_w, order, axis=-1)
+    starts = jax.vmap(lambda row: jnp.searchsorted(row, jnp.arange(e)))(se)
+    pos = jnp.arange(tg * k)[None] - jnp.take_along_axis(starts, se, axis=-1)
+    keep = pos < cap
+    posc = jnp.where(keep, pos, cap - 1)
+
+    # Batched gather/scatter via vmap over the (data-sharded) group axis:
+    # XLA SPMD keeps vmapped gathers/scatters sharded on their batch dim,
+    # whereas fancy-indexing with a broadcast row index gets replicated
+    # (hundreds of GB at 1M tokens — measured, see EXPERIMENTS §Perf).
+    def dispatch_one(xg_r, stok_r, se_r, posc_r, keep_r):
+        g = jnp.take_along_axis(xg_r, stok_r[:, None], axis=0)
+        g = g * keep_r[:, None].astype(xt.dtype)
+        return jnp.zeros((e, cap, d), xt.dtype).at[se_r, posc_r].add(g)
+
+    buf = jax.vmap(dispatch_one)(xg, stok, se, posc, keep)
+    # EP boundary: group axis (data) -> expert axis (model) = all-to-all
+    buf = constrain(buf, ("dispatch", "experts", "expert_cap", "embed_act"))
+
+    out_buf = _act(cfg, p, buf, grouped=True)
+    out_buf = constrain(out_buf,
+                        ("dispatch", "experts", "expert_cap", "embed_act"))
+
+    def combine_one(ob_r, stok_r, se_r, posc_r, w_r):
+        back = ob_r[se_r, posc_r] * w_r[:, None].astype(xt.dtype)
+        return jnp.zeros((tg, d), xt.dtype).at[stok_r].add(back)
+
+    y = jax.vmap(combine_one)(out_buf, stok, se, posc, keep * sw)
+    y = constrain(y, ("dispatch", None, "embed_act")).reshape(t, d)
+
+    if cfg.n_shared:
+        y = y + _act(cfg, p, xt, prefix="shared_")
+    return y.reshape(shape), aux

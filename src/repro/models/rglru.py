@@ -1,0 +1,117 @@
+"""Griffin/RecurrentGemma recurrent block: gated conv branch + RG-LRU.
+
+    x -> [W_a -> GeLU] ------------------------------\
+    x -> [W_b -> causal conv1d(w=4) -> RG-LRU] -> (*) -> W_out
+
+RG-LRU (diagonal, input- and recurrence-gated):
+    r_t = sigmoid(W_r x_t)          i_t = sigmoid(W_i x_t)
+    a_t = exp(-c * softplus(L) * r_t)
+    h_t = a_t * h_{t-1} + sqrt(1 - a_t^2) * (i_t * x_t)
+
+The recurrence runs through ``kernels.ops.lru_scan`` (associative scan ref /
+Pallas chunk kernel). Decode carries O(1) state: (h, conv ring) — this is why
+recurrentgemma runs the long_500k shape.
+
+This is the paper's closest architectural relative: SOI's "skip state updates
+on a schedule" is exactly the RNN partial-state-update lineage (Campos et al.)
+the paper generalizes; with SOI enabled the LRU state updates at half rate
+inside the compressed region.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import RGLRUCfg
+from repro.distributed.sharding import A
+from repro.kernels import ops as kops
+from repro.models.layers import dense_init, zeros_init
+
+Array = jax.Array
+_C = 8.0
+
+
+def rglru_init(rng, cfg: RGLRUCfg, d: int) -> dict:
+    ks = jax.random.split(rng, 8)
+    w = cfg.width or d
+    nh = cfg.n_heads or 1
+    bw = w // nh                                  # block width for gate mats
+    p = {
+        "wa": dense_init(ks[0], (d, w), ("embed", "ff")),
+        "wb": dense_init(ks[1], (d, w), ("embed", "ff")),
+        "conv": dense_init(ks[2], (cfg.conv_width, w), ("conv_k", "ff"),
+                           scale=cfg.conv_width ** -0.5),
+        "conv_b": zeros_init((w,), ("ff",)),
+        # block-diagonal input/recurrence gates (per head)
+        "wr": dense_init(ks[3], (nh, bw, bw), ("heads", "head_dim", "head_dim")),
+        "wi": dense_init(ks[4], (nh, bw, bw), ("heads", "head_dim", "head_dim")),
+        "br": zeros_init((w,), ("ff",)),
+        "bi": zeros_init((w,), ("ff",)),
+        # Lambda init so that a^c*softplus spans ~(0.9, 0.999)
+        "lam": A(jnp.log(jnp.expm1(
+            -jnp.log(jnp.linspace(0.9, 0.999, w)) / _C)), ("ff",)),
+        "wo": dense_init(ks[5], (w, d), ("ff", "embed")),
+    }
+    return p
+
+
+def _gates(p, xb, nh):
+    b = xb.shape[:-1]
+    w = xb.shape[-1]
+    xh = xb.reshape(*b, nh, w // nh)
+    r = jnp.einsum("...hk,hkj->...hj", xh, p["wr"]).reshape(*b, w) + p["br"]
+    i = jnp.einsum("...hk,hkj->...hj", xh, p["wi"]).reshape(*b, w) + p["bi"]
+    return jax.nn.sigmoid(r.astype(jnp.float32)), jax.nn.sigmoid(
+        i.astype(jnp.float32))
+
+
+def _a_and_b(p, xb, nh):
+    """Per-timestep decay a_t and input b_t of the diagonal recurrence."""
+    r, i = _gates(p, xb, nh)
+    log_a = -_C * jax.nn.softplus(p["lam"].astype(jnp.float32)) * r
+    a = jnp.exp(log_a)
+    gated = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-12))
+    bx = gated * i * xb.astype(jnp.float32)
+    return a, bx
+
+
+def rglru_forward(p: dict, cfg: RGLRUCfg, x: Array, *,
+                  constrain=lambda x, axes: x):
+    """Full-sequence forward. x: (B, S, d) -> (B, S, d)."""
+    nh = cfg.n_heads or 1
+    ga = jax.nn.gelu(jnp.einsum("bsd,dw->bsw", x, p["wa"]))
+    xb = jnp.einsum("bsd,dw->bsw", x, p["wb"])
+    xb = constrain(xb, ("batch", "seq", "ff"))
+    # causal depthwise conv, width conv_width
+    k = p["conv"].shape[0]
+    xp = jnp.pad(xb, ((0, 0), (k - 1, 0), (0, 0)))
+    xc = sum(xp[:, i:xb.shape[1] + i] * p["conv"][i] for i in range(k))
+    xc = xc + p["conv_b"]
+    a, bx = _a_and_b(p, xc, nh)
+    h, _ = kops.lru_scan(a, bx)
+    h = h.astype(x.dtype)
+    y = jnp.einsum("bsw,wd->bsd", h * ga, p["wo"])
+    return y
+
+
+def rglru_init_state(cfg: RGLRUCfg, d: int, batch: int, dtype=jnp.float32):
+    w = cfg.width or d
+    return {
+        "h": jnp.zeros((batch, w), jnp.float32),
+        "conv": jnp.zeros((batch, cfg.conv_width - 1, w), dtype),
+    }
+
+
+def rglru_decode(p: dict, cfg: RGLRUCfg, x: Array, state: dict, *,
+                 constrain=lambda x, axes: x):
+    """One-token step. x: (B, d). Returns (y, new_state)."""
+    nh = cfg.n_heads or 1
+    ga = jax.nn.gelu(jnp.einsum("bd,dw->bw", x, p["wa"]))
+    xb = jnp.einsum("bd,dw->bw", x, p["wb"])
+    window = jnp.concatenate([state["conv"], xb[:, None]], axis=1)
+    xc = jnp.einsum("bkw,kw->bw", window, p["conv"]) + p["conv_b"]
+    a, bx = _a_and_b(p, xc, nh)
+    h = a * state["h"] + bx
+    y = jnp.einsum("bw,wd->bd", h.astype(x.dtype) * ga, p["wo"])
+    return y, {"h": h, "conv": window[:, 1:]}

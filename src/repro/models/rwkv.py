@@ -1,0 +1,220 @@
+"""RWKV-6 ("Finch") — attention-free time mixing with data-dependent decay.
+
+Per head (k/v dims dh): state S in R^{dh x dh};
+    y_t = r_t . (S_{t-1} + diag(u) k_t v_t^T)
+    S_t = diag(w_t) S_{t-1} + k_t v_t^T,   w_t = exp(-exp(wlog_t))
+with token-shift data-dependent mixing on every projection input and a
+decay LoRA producing per-channel w_t.
+
+Train/prefill use the *chunked* parallel form (chunk C): intra-chunk pair
+terms exp(cumlog[t-1]-cumlog[s]) are always <= 1 (log-space differences over
+(s, t-1]), so the formulation is numerically safe for any decay magnitude.
+Decode is the O(1) recurrence — why rwkv6 runs the long_500k shape.
+
+Channel mix (the RWKV FFN): r = sigmoid(W_r x_r); y = r * (W_v relu(W_k x_k)^2).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import RWKVCfg
+from repro.distributed.sharding import A
+from repro.models.layers import dense_init, zeros_init
+
+Array = jax.Array
+_MIX = ("w", "k", "v", "r", "g")
+
+
+def rwkv_init(rng, cfg: RWKVCfg, d: int) -> dict:
+    ks = jax.random.split(rng, 16)
+    h, dh = cfg.n_heads, cfg.head_dim
+    assert h * dh == d, (h, dh, d)
+    p = {
+        # token-shift base mix coefficients + data-dependent lora
+        "mix_base": zeros_init((len(_MIX), d), ("stub", "embed_norm")),
+        "mix_a": dense_init(ks[0], (d, len(_MIX) * cfg.mix_lora),
+                            ("embed", "lora")),
+        "mix_b": dense_init(ks[1], (len(_MIX), cfg.mix_lora, d),
+                            ("stub", "lora", "embed")),
+        "wr": dense_init(ks[2], (d, d), ("embed", "ff")),
+        "wk": dense_init(ks[3], (d, d), ("embed", "ff")),
+        "wv": dense_init(ks[4], (d, d), ("embed", "ff")),
+        "wg": dense_init(ks[5], (d, d), ("embed", "ff")),
+        # decay: w_t = exp(-exp(w0 + lora)); w0 ~ spread of decays
+        "w0": A(jnp.linspace(-6.0, -0.5, d), ("embed_norm",)),
+        "w_a": dense_init(ks[6], (d, cfg.decay_lora), ("embed", "lora")),
+        "w_b": dense_init(ks[7], (cfg.decay_lora, d), ("lora", "embed"),
+                          scale=0.01),
+        "u": zeros_init((d,), ("embed_norm",)),          # per-channel bonus
+        "ln_scale": zeros_init((d,), ("embed_norm",)),   # group norm per head
+        "wo": dense_init(ks[8], (d, d), ("ff", "embed")),
+        # channel mix
+        "cm_mix": zeros_init((2, d), ("stub", "embed_norm")),
+        "cm_k": dense_init(ks[9], (d, cfg.d_ff), ("embed", "ff")),
+        "cm_v": dense_init(ks[10], (cfg.d_ff, d), ("ff", "embed")),
+        "cm_r": dense_init(ks[11], (d, d), ("embed", "ff")),
+    }
+    return p
+
+
+def _token_shift(x, x_prev):
+    """x: (B,S,d). Returns x shifted right by one (x_prev fills slot 0)."""
+    return jnp.concatenate([x_prev[:, None], x[:, :-1]], axis=1)
+
+
+def _mixed_inputs(p, x, xs):
+    """Data-dependent lerp between x and shifted x for each of w,k,v,r,g."""
+    base = jax.nn.sigmoid(p["mix_base"])                       # (5, d)
+    dx = xs - x
+    lo = jnp.tanh(jnp.einsum("bsd,dl->bsl", x + 0.5 * dx, p["mix_a"]))
+    lo = lo.reshape(*lo.shape[:-1], len(_MIX), -1)
+    dyn = jnp.einsum("bsml,mld->bsmd", lo, p["mix_b"])
+    mix = jnp.clip(base + dyn, 0.0, 1.0)                       # (B,S,5,d)
+    return tuple(x + dx * mix[..., i, :] for i in range(len(_MIX)))
+
+
+def _head_split(x, h):
+    return x.reshape(*x.shape[:-1], h, -1)
+
+
+def _group_norm(p, y):
+    """Per-head LayerNorm of the wkv output. y: (..., h, dh)."""
+    mu = jnp.mean(y, axis=-1, keepdims=True)
+    var = jnp.var(y, axis=-1, keepdims=True)
+    yn = (y - mu) * jax.lax.rsqrt(var + 1e-5)
+    flat = yn.reshape(*y.shape[:-2], -1)
+    return flat * (1.0 + p["ln_scale"])
+
+
+def _wkv_chunked(r, k, v, wlog, u, *, chunk: int = 32):
+    """Chunked linear attention with per-channel decay.
+
+    r,k,v: (B,S,h,dh) f32; wlog: (B,S,h,dh) f32 (log decay, <= 0).
+    Returns y: (B,S,h,dh), final state (B,h,dh,dh).
+    """
+    b, s, h, dh = r.shape
+    pad = (-s) % chunk
+    if pad:
+        r, k, v = (jnp.pad(t, ((0, 0), (0, pad), (0, 0), (0, 0)))
+                   for t in (r, k, v))
+        wlog = jnp.pad(wlog, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    n = (s + pad) // chunk
+    rc = r.reshape(b, n, chunk, h, dh)
+    kc = k.reshape(b, n, chunk, h, dh)
+    vc = v.reshape(b, n, chunk, h, dh)
+    wc = wlog.reshape(b, n, chunk, h, dh)
+
+    tri = jnp.tril(jnp.ones((chunk, chunk), bool), k=-1)
+
+    def body(S, inp):
+        rb, kb, vb, wb = inp                    # (b, chunk, h, dh)
+        cw = jnp.cumsum(wb, axis=1)             # inclusive cumulative log decay
+        cw_prev = cw - wb                       # cumlog up to t-1
+        # inter-chunk: y += (r_t * exp(cw_prev_t)) . S
+        r_in = rb * jnp.exp(cw_prev)
+        y = jnp.einsum("bthj,bhji->bthi", r_in, S)
+        # intra-chunk: pairwise decay exp(cw_prev[t] - cw[s]) for s < t (<=1)
+        dec = jnp.exp(jnp.clip(cw_prev[:, :, None] - cw[:, None], -60.0, 0.0))
+        sc = jnp.einsum("bthj,bshj,btshj->bhts", rb, kb, dec)
+        sc = jnp.where(tri[None, None], sc, 0.0)
+        # current-token bonus
+        diag = jnp.einsum("bthj,bthj->bth", rb * u, kb)
+        y = y + jnp.einsum("bhts,bshi->bthi", sc, vb)
+        y = y + diag[..., None] * vb
+        # state update: S' = exp(cw_end) * S + sum_s exp(cw_end - cw_s) k_s v_s^T
+        cw_end = cw[:, -1]                                      # (b,h,dh)
+        dk = jnp.exp(cw_end[:, None] - cw)                      # (b,chunk,h,dh)
+        S = jnp.exp(cw_end)[..., None] * S + jnp.einsum(
+            "bshj,bshi->bhji", kb * dk, vb)
+        return S, y
+
+    S0 = jnp.zeros((b, h, dh, dh), jnp.float32)
+    S, ys = jax.lax.scan(body, S0,
+                         (jnp.moveaxis(rc, 1, 0), jnp.moveaxis(kc, 1, 0),
+                          jnp.moveaxis(vc, 1, 0), jnp.moveaxis(wc, 1, 0)))
+    y = jnp.moveaxis(ys, 0, 1).reshape(b, n * chunk, h, dh)
+    return y[:, :s], S
+
+
+def rwkv_time_mix(p: dict, cfg: RWKVCfg, x: Array, *, x_prev=None,
+                  constrain=lambda x, axes: x):
+    """Full-sequence time mixing. x: (B,S,d)."""
+    b, s, d = x.shape
+    h = cfg.n_heads
+    if x_prev is None:
+        x_prev = jnp.zeros((b, d), x.dtype)
+    xs = _token_shift(x, x_prev)
+    xw, xk, xv, xr, xg = _mixed_inputs(p, x, xs)
+    r = _head_split(jnp.einsum("bsd,de->bse", xr, p["wr"]), h).astype(jnp.float32)
+    k = _head_split(jnp.einsum("bsd,de->bse", xk, p["wk"]), h).astype(jnp.float32)
+    v = _head_split(jnp.einsum("bsd,de->bse", xv, p["wv"]), h).astype(jnp.float32)
+    g = jnp.einsum("bsd,de->bse", xg, p["wg"])
+    wlog = -jnp.exp(jnp.clip(
+        p["w0"] + jnp.einsum("bsd,dl->bsl", jnp.tanh(
+            jnp.einsum("bsd,dl->bsl", xw, p["w_a"])), p["w_b"]),
+        -12.0, 2.0)).astype(jnp.float32)
+    wlog = _head_split(wlog, h)
+    u = _head_split(p["u"].astype(jnp.float32), h)
+    y, S = _wkv_chunked(r, k, v, wlog, u)
+    y = _group_norm(p, y.astype(x.dtype))
+    y = y * jax.nn.silu(g)
+    return jnp.einsum("bse,ed->bsd", y, p["wo"]), (x[:, -1], S)
+
+
+def rwkv_time_mix_decode(p: dict, cfg: RWKVCfg, x: Array, state: dict):
+    """One token. x: (B, d); state: {"x_prev": (B,d), "S": (B,h,dh,dh)}."""
+    b, d = x.shape
+    h = cfg.n_heads
+    xs3 = state["x_prev"][:, None]
+    x3 = x[:, None]
+    xw, xk, xv, xr, xg = _mixed_inputs(p, x3, xs3)
+    r = _head_split(jnp.einsum("bsd,de->bse", xr, p["wr"])[:, 0], h).astype(jnp.float32)
+    k = _head_split(jnp.einsum("bsd,de->bse", xk, p["wk"])[:, 0], h).astype(jnp.float32)
+    v = _head_split(jnp.einsum("bsd,de->bse", xv, p["wv"])[:, 0], h).astype(jnp.float32)
+    g = jnp.einsum("bsd,de->bse", xg, p["wg"])[:, 0]
+    wlog = -jnp.exp(jnp.clip(
+        p["w0"] + jnp.einsum("bd,dl->bl", jnp.tanh(
+            jnp.einsum("bd,dl->bl", xw[:, 0], p["w_a"])), p["w_b"]),
+        -12.0, 2.0)).astype(jnp.float32)
+    wlog = _head_split(wlog, h)
+    u = _head_split(p["u"].astype(jnp.float32), h)
+    S = state["S"]
+    y = jnp.einsum("bhj,bhji->bhi", r, S) + jnp.einsum(
+        "bhj,bhj,bhi->bhi", r, u * k, v)
+    S = jnp.exp(wlog)[..., None] * S + jnp.einsum("bhj,bhi->bhji", k, v)
+    y = _group_norm(p, y.astype(x.dtype)[:, None])[:, 0]
+    y = y * jax.nn.silu(g)
+    return jnp.einsum("be,ed->bd", y, p["wo"]), {"x_prev": x, "S": S}
+
+
+def rwkv_channel_mix(p: dict, x: Array, *, x_prev=None):
+    """x: (B,S,d)."""
+    b, s, d = x.shape
+    if x_prev is None:
+        x_prev = jnp.zeros((b, d), x.dtype)
+    xs = _token_shift(x, x_prev)
+    mix = jax.nn.sigmoid(p["cm_mix"])
+    xk = x + (xs - x) * mix[0]
+    xr = x + (xs - x) * mix[1]
+    k = jnp.square(jax.nn.relu(jnp.einsum("bsd,df->bsf", xk, p["cm_k"])))
+    kv = jnp.einsum("bsf,fd->bsd", k, p["cm_v"])
+    return jax.nn.sigmoid(jnp.einsum("bsd,de->bse", xr, p["cm_r"])) * kv, x[:, -1]
+
+
+def rwkv_channel_mix_decode(p: dict, x: Array, x_prev: Array):
+    xk = x + (x_prev - x) * jax.nn.sigmoid(p["cm_mix"][0])
+    xr = x + (x_prev - x) * jax.nn.sigmoid(p["cm_mix"][1])
+    k = jnp.square(jax.nn.relu(jnp.einsum("bd,df->bf", xk, p["cm_k"])))
+    kv = jnp.einsum("bf,fd->bd", k, p["cm_v"])
+    return jax.nn.sigmoid(jnp.einsum("bd,de->be", xr, p["cm_r"])) * kv, x
+
+
+def rwkv_init_state(cfg: RWKVCfg, d: int, batch: int, dtype=jnp.bfloat16):
+    return {
+        "x_prev_tm": jnp.zeros((batch, d), dtype),
+        "S": jnp.zeros((batch, cfg.n_heads, cfg.head_dim, cfg.head_dim),
+                       jnp.float32),
+        "x_prev_cm": jnp.zeros((batch, d), dtype),
+    }

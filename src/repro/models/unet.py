@@ -1,0 +1,390 @@
+"""Causal streaming U-Net for speech separation — the paper's primary testbed.
+
+7 encoder + 7 decoder causal conv layers (STMC/tSTMC + BN + ELU, paper §A.1).
+Topology (paper §2.2): decoder layer j mirrors encoder layer ``m = n-j+1``; the
+skip connection carries the *input* of encoder layer m and concatenates with
+the *output* of decoder layer j (the transposed conv). An S-CC pair at encoder
+position p therefore compresses encoder p..n **and** decoder 1..(n-p+1); the
+extrapolation restores full rate right after decoder layer n-p+1, where the
+fresh (uncompressed) skip is injected — "a skip connection between the input of
+the strided convolution and the output of the transposed convolution".
+
+Execution modes (numerically consistent — property-tested):
+  * ``apply_offline``       — full-sequence causal graph (training / reference).
+  * ``make_phase_steppers`` — one step function per SOI phase: the paper's
+        *inference pattern*. Phase t mod P recomputes only the layers whose
+        compression windows are complete; everything else reuses cached partial
+        states (conv ring buffers, extrapolation queues).
+  * ``stream_infer``        — drives the steppers over a sequence.
+
+Supported FP configurations (the paper's Table 2 space):
+  * SS-CC   : ``mode="fp", shift_pos=None`` — 1-frame shift fused after the
+              outermost pair's extrapolation (full-rate domain).
+  * hybrid  : ``mode="fp", shift_pos=Y`` with Y deeper than every pair — a
+              1-compressed-frame delay at encoder-Y's output; the region from Y
+              onward then depends on strictly-past data (precomputable).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import complexity as cx
+from repro.core.soi import SOIConvCfg, sc_shift, scc_extrapolate
+from repro.core.stmc import (causal_conv1d, conv_init, stmc_init_state,
+                             stmc_push, stmc_step)
+
+Array = jax.Array
+
+
+@dataclasses.dataclass(frozen=True)
+class UNetConfig:
+    in_channels: int = 64
+    out_channels: int = 64
+    enc_channels: tuple = (32, 48, 64, 96, 128, 192, 256)
+    kernel: int = 3
+    norm: str = "batch"              # "batch" | "none"
+    soi: SOIConvCfg | None = None
+    fps: float = 62.5                # 16 kHz / 256-sample hop
+    mask_output: bool = True         # sigmoid mask head (speech separation)
+
+    @property
+    def n_enc(self) -> int:
+        return len(self.enc_channels)
+
+    @property
+    def n_dec(self) -> int:
+        return len(self.enc_channels)
+
+    @property
+    def period(self) -> int:
+        if self.soi is None or not self.soi.pairs:
+            return 1
+        return self.soi.stride ** len(self.soi.pairs)
+
+    @property
+    def pairs(self) -> tuple:
+        return tuple(sorted(self.soi.pairs)) if self.soi else ()
+
+
+# ---------------------------------------------------------------------------
+# Freshness predicates (static Python — they define each phase's graph)
+# ---------------------------------------------------------------------------
+
+def _n_pairs_le(cfg: UNetConfig, i: int) -> int:
+    return sum(1 for p in cfg.pairs if p <= i)
+
+
+def _n_pairs_lt(cfg: UNetConfig, i: int) -> int:
+    return sum(1 for p in cfg.pairs if p < i)
+
+
+def _enc_computes(cfg, i, t):     # encoder layer i runs its conv at phase t
+    return t % (cfg.soi.stride ** _n_pairs_le(cfg, i)) == 0 if cfg.soi else True
+
+
+def _enc_has_input(cfg, i, t):    # a new frame reaches encoder layer i
+    return t % (cfg.soi.stride ** _n_pairs_lt(cfg, i)) == 0 if cfg.soi else True
+
+
+def _dec_computes(cfg, j, t):
+    """Decoder layer j (mirror m = n-j+1) is inside pair-p's region iff p <= m."""
+    if cfg.soi is None:
+        return True
+    m = cfg.n_enc - j + 1
+    return t % (cfg.soi.stride ** _n_pairs_le(cfg, m)) == 0
+
+
+# ---------------------------------------------------------------------------
+# Parameters / norm state
+# ---------------------------------------------------------------------------
+
+def _norm_init(c: int) -> dict:
+    return {"scale": jnp.ones((c,)), "bias": jnp.zeros((c,))}
+
+
+def _norm_state(c: int) -> dict:
+    return {"mean": jnp.zeros((c,)), "var": jnp.ones((c,))}
+
+
+def _norm_apply(p: dict, s: dict, x: Array, train: bool):
+    """BatchNorm over all leading axes; streaming uses eval mode (affine)."""
+    if train:
+        axes = tuple(range(x.ndim - 1))
+        mean = jnp.mean(x, axes)
+        var = jnp.var(x, axes)
+        new_s = {"mean": 0.9 * s["mean"] + 0.1 * mean,
+                 "var": 0.9 * s["var"] + 0.1 * var}
+    else:
+        mean, var, new_s = s["mean"], s["var"], s
+    y = (x - mean) * jax.lax.rsqrt(var + 1e-5) * p["scale"] + p["bias"]
+    return y, new_s
+
+
+def _layer_io(cfg: UNetConfig) -> tuple[list, list]:
+    """(cin, cout) per layer.
+
+    ch[i] = input width of encoder layer i+1 (ch[0] = network input).
+    Decoder j outputs ch[n-j] (mirror of encoder m = n-j+1's input); its input
+    is the bottleneck for j=1, else concat(dec j-1 output, skip = input of
+    encoder layer n-j+2) = ch[n-j+1] * 2.
+    """
+    n = cfg.n_enc
+    ch = [cfg.in_channels] + list(cfg.enc_channels)
+    enc_io = [(ch[i], ch[i + 1]) for i in range(n)]
+    dec_io = []
+    for j in range(1, n + 1):
+        cin = ch[n] if j == 1 else 2 * ch[n - j + 1]
+        dec_io.append((cin, ch[n - j]))
+    return enc_io, dec_io
+
+
+def init(rng: Array, cfg: UNetConfig) -> tuple[dict, dict]:
+    """Returns (params, norm_state)."""
+    enc_io, dec_io = _layer_io(cfg)
+    keys = jax.random.split(rng, 2 * cfg.n_enc + 2)
+    params = {"enc": [], "dec": [], "up": {}}
+    nstate = {"enc": [], "dec": []}
+    for i, (ci, co) in enumerate(enc_io):
+        params["enc"].append({"conv": conv_init(keys[i], cfg.kernel, ci, co),
+                              "norm": _norm_init(co)})
+        nstate["enc"].append(_norm_state(co))
+    for j, (ci, co) in enumerate(dec_io):
+        params["dec"].append({"conv": conv_init(keys[cfg.n_enc + j], cfg.kernel,
+                                                 ci, co),
+                              "norm": _norm_init(co)})
+        nstate["dec"].append(_norm_state(co))
+    # Final head: consumes concat(dec n output, input skip) = 2*in_channels.
+    params["proj"] = conv_init(keys[-2], 1, 2 * cfg.in_channels,
+                               cfg.out_channels)
+    if cfg.soi is not None and cfg.soi.extrapolation == "tconv":
+        upkeys = jax.random.split(keys[-1], max(1, len(cfg.pairs)))
+        ch = [cfg.in_channels] + list(cfg.enc_channels)
+        for k, p in enumerate(cfg.pairs):
+            # Stream at pair-p's extrapolation point = output of decoder layer
+            # n-p+1 = ch[p-1] channels.
+            params["up"][p] = conv_init(upkeys[k], cfg.soi.stride,
+                                        ch[p - 1], ch[p - 1])
+    return params, nstate
+
+
+def _up_frames(params, cfg, p, h):
+    """Extrapolate one compressed frame -> `stride` full-rate frames."""
+    s = cfg.soi.stride
+    up = params["up"].get(p) if cfg.soi.extrapolation == "tconv" else None
+    if up is None:
+        return tuple(h for _ in range(s))
+    return tuple(jnp.einsum("bc,co->bo", h, up["w"][k]) + up["b"]
+                 for k in range(s))
+
+
+# ---------------------------------------------------------------------------
+# Offline (training / reference) graph
+# ---------------------------------------------------------------------------
+
+def apply_offline(params: dict, nstate: dict, x: Array, cfg: UNetConfig,
+                  *, train: bool = False):
+    """Full-sequence causal forward pass. Returns (y, new_norm_state)."""
+    soi = cfg.soi
+    pairs = set(cfg.pairs)
+    n = cfg.n_enc
+    act = jax.nn.elu
+    new_ns = {"enc": [], "dec": []}
+    outermost = min(pairs) if pairs else None
+
+    skips = [x]           # skips[i] = input of encoder layer i+1
+    h = x
+    for i in range(1, n + 1):
+        lp = params["enc"][i - 1]
+        stride = soi.stride if (soi and i in pairs) else 1
+        h = causal_conv1d(h, lp["conv"]["w"], lp["conv"]["b"], stride=stride)
+        h, ns = _norm_apply(lp["norm"], nstate["enc"][i - 1], h, train)
+        new_ns["enc"].append(ns)
+        h = act(h)
+        if soi and soi.mode == "fp" and soi.shift_pos == i:
+            h = sc_shift(h, shift=1)         # hybrid: compressed-domain delay
+        if i < n:
+            skips.append(h)
+
+    for j in range(1, n + 1):
+        mirror = n - j + 1
+        lp = params["dec"][j - 1]
+        h = causal_conv1d(h, lp["conv"]["w"], lp["conv"]["b"])
+        h, ns = _norm_apply(lp["norm"], nstate["dec"][j - 1], h, train)
+        new_ns["dec"].append(ns)
+        h = act(h)
+        if soi and mirror in pairs:
+            up = params["up"].get(mirror)
+            h = scc_extrapolate(h, stride=soi.stride,
+                                out_len=skips[mirror - 1].shape[1],
+                                w=None if up is None else up["w"],
+                                b=None if up is None else up.get("b"))
+            if (soi.mode == "fp" and soi.shift_pos is None
+                    and mirror == outermost):
+                h = sc_shift(h, shift=1)     # SS-CC: post-extrapolation shift
+        h = jnp.concatenate([h, skips[mirror - 1]], axis=-1)
+
+    y = causal_conv1d(h, params["proj"]["w"], params["proj"]["b"])
+    if cfg.mask_output:
+        y = jax.nn.sigmoid(y) * x[..., :cfg.out_channels]
+    return y, new_ns
+
+
+# ---------------------------------------------------------------------------
+# Online inference pattern (the paper's contribution)
+# ---------------------------------------------------------------------------
+
+def init_stream_state(batch: int, cfg: UNetConfig, dtype=jnp.float32) -> dict:
+    """Partial-state pytree: conv ring buffers + extrapolation queues + the
+    optional FP delay slot."""
+    enc_io, dec_io = _layer_io(cfg)
+    k = cfg.kernel
+    soi = cfg.soi
+    state = {
+        "enc": [stmc_init_state(batch, k, ci, dtype=dtype) for ci, _ in enc_io],
+        "dec": [stmc_init_state(batch, k, ci, dtype=dtype) for ci, _ in dec_io],
+        "queues": {},
+        "delay": None,
+    }
+    if soi:
+        ch = [cfg.in_channels] + list(cfg.enc_channels)
+        for p in cfg.pairs:
+            # Stream at pair-p's extrapolation point = output of decoder layer
+            # n-p+1 = ch[p-1] channels.
+            state["queues"][p] = jnp.zeros((batch, soi.stride, ch[p - 1]), dtype)
+        if soi.mode == "fp" and soi.shift_pos is not None:
+            state["delay"] = jnp.zeros((batch, cfg.enc_channels[soi.shift_pos - 1]),
+                                       dtype)
+    return state
+
+
+def make_phase_steppers(cfg: UNetConfig):
+    """One ``step(params, nstate, state, frame) -> (state, out)`` per phase.
+
+    Each phase is a *fixed* graph (deployment compiles each once and cycles
+    through them) — stale layers appear nowhere in the stale phases' graphs,
+    which is exactly how SOI realizes its MAC savings.
+    """
+    n = cfg.n_enc
+    soi = cfg.soi
+    pairs = list(cfg.pairs)
+    outermost = min(pairs) if pairs else None
+    fp_fused = soi is not None and soi.mode == "fp" and soi.shift_pos is None
+    fp_hybrid = soi is not None and soi.mode == "fp" and soi.shift_pos is not None
+
+    def build(phase: int):
+        enc_plan = []   # (layer index, "compute" | "push")
+        for i in range(1, n + 1):
+            if _enc_computes(cfg, i, phase):
+                enc_plan.append((i, "compute"))
+            elif _enc_has_input(cfg, i, phase):
+                enc_plan.append((i, "push"))
+                break
+            else:
+                break
+        dec_plan = [j for j in range(1, n + 1) if _dec_computes(cfg, j, phase)]
+
+        def step(params, nstate, state, frame):
+            act = jax.nn.elu
+            new_enc, new_dec = list(state["enc"]), list(state["dec"])
+            queues = dict(state["queues"])
+            delay = state["delay"]
+            skips = {0: frame}    # skips[i] = input of encoder layer i+1
+            h = frame
+            for i, what in enc_plan:
+                lp = params["enc"][i - 1]
+                if what == "push":
+                    new_enc[i - 1] = stmc_push(new_enc[i - 1], h)
+                    break
+                new_enc[i - 1], h = stmc_step(new_enc[i - 1], h,
+                                              lp["conv"]["w"], lp["conv"]["b"])
+                h, _ = _norm_apply(lp["norm"], nstate["enc"][i - 1], h,
+                                   train=False)
+                h = act(h)
+                if fp_hybrid and soi.shift_pos == i:
+                    h, delay = delay, h           # 1-compressed-frame delay
+                skips[i] = h
+
+            for j in range(1, n + 1):
+                mirror = n - j + 1
+                if j in dec_plan:
+                    lp = params["dec"][j - 1]
+                    new_dec[j - 1], h = stmc_step(new_dec[j - 1], h,
+                                                  lp["conv"]["w"],
+                                                  lp["conv"]["b"])
+                    h, _ = _norm_apply(lp["norm"], nstate["dec"][j - 1], h,
+                                       train=False)
+                    h = act(h)
+                if mirror in pairs:
+                    q = queues[mirror]
+                    producer_fresh = j in dec_plan
+                    consumer_fresh = _enc_has_input(cfg, mirror, phase)
+                    fp_here = fp_fused and mirror == outermost
+                    if fp_here:
+                        # FP: serve from the queue (strictly-past data), then
+                        # refill with the freshly predicted future frames.
+                        h_out = q[:, 0]
+                        q = jnp.roll(q, -1, axis=1)
+                        if producer_fresh:
+                            q = jnp.stack(_up_frames(params, cfg, mirror, h),
+                                          axis=1)
+                        h = h_out
+                    elif producer_fresh:
+                        frames = _up_frames(params, cfg, mirror, h)
+                        h = frames[0]
+                        q = jnp.stack(frames[1:] + (frames[-1],), axis=1)
+                    elif consumer_fresh:
+                        h = q[:, 0]
+                        q = jnp.roll(q, -1, axis=1)
+                    queues[mirror] = q
+                if j in dec_plan or mirror in pairs:
+                    if _enc_has_input(cfg, mirror, phase):
+                        h = jnp.concatenate([h, skips[mirror - 1]], axis=-1)
+
+            y = jnp.einsum("bc,kco->bo", h, params["proj"]["w"]) \
+                + params["proj"]["b"]
+            if cfg.mask_output:
+                y = jax.nn.sigmoid(y) * frame[..., :cfg.out_channels]
+            new_state = {"enc": new_enc, "dec": new_dec, "queues": queues,
+                         "delay": delay}
+            return new_state, y
+
+        return step
+
+    return [build(t) for t in range(cfg.period)]
+
+
+def stream_infer(params: dict, nstate: dict, x: Array, cfg: UNetConfig) -> Array:
+    """Run the streaming inference pattern over a whole sequence (reference
+    harness for the offline==online equivalence property)."""
+    steppers = make_phase_steppers(cfg)
+    state = init_stream_state(x.shape[0], cfg, dtype=x.dtype)
+    outs = []
+    for t in range(x.shape[1]):
+        state, y = steppers[t % cfg.period](params, nstate, state, x[:, t])
+        outs.append(y)
+    return jnp.stack(outs, axis=1)
+
+
+# ---------------------------------------------------------------------------
+# Complexity plan (feeds repro.core.complexity — reproduces paper tables)
+# ---------------------------------------------------------------------------
+
+def layer_plan(cfg: UNetConfig) -> list[cx.LayerCost]:
+    enc_io, dec_io = _layer_io(cfg)
+    plan = []
+    for i, (ci, co) in enumerate(enc_io, start=1):
+        plan.append(cx.LayerCost(f"enc{i}", cfg.kernel * ci * co, enc_pos=i))
+    for j, (ci, co) in enumerate(dec_io, start=1):
+        plan.append(cx.LayerCost(f"dec{j}", cfg.kernel * ci * co, dec_pos=j))
+    plan.append(cx.LayerCost("proj", 2 * cfg.in_channels * cfg.out_channels,
+                             dec_pos=cfg.n_dec + 1))
+    return plan
+
+
+def complexity_report(cfg: UNetConfig) -> cx.ComplexityReport:
+    soi = cfg.soi or SOIConvCfg(pairs=())
+    return cx.analyze(layer_plan(cfg), cfg.n_enc, cfg.n_dec, soi, fps=cfg.fps)

@@ -1,0 +1,14 @@
+"""Optimizer substrate: AdamW (fp32 masters, bf16 compute), global-norm
+clipping, LR schedules, gradient compression with error feedback."""
+
+from repro.optim.adamw import adamw_init, adamw_update
+from repro.optim.clip import clip_by_global_norm, global_norm
+from repro.optim.schedule import cosine_schedule, wsd_schedule
+from repro.optim.compression import (compress_int8, decompress_int8,
+                                     compressed_grads)
+
+__all__ = [
+    "adamw_init", "adamw_update", "clip_by_global_norm", "global_norm",
+    "cosine_schedule", "wsd_schedule", "compress_int8", "decompress_int8",
+    "compressed_grads",
+]

@@ -1,0 +1,65 @@
+"""Gradient compression for cross-pod data parallelism.
+
+int8 block quantization with **error feedback**: the quantization residual is
+carried in the optimizer state and added back next step, making the scheme
+unbiased over time (Seide et al. / 1-bit Adam lineage). At 1000+ node scale the
+cross-pod all-reduce is the slowest collective (DCN, not ICI); shipping int8
+instead of bf16/f32 cuts that wire traffic 2-4x.
+
+Under single-controller pjit the gradient all-reduce is inserted by the
+partitioner, so the production wiring is: run the *backward* under shard_map
+for the cross-pod axis and psum the quantized payload —
+``distributed.collectives.compressed_psum`` demonstrates exactly that and is
+covered by tests. ``compressed_grads`` below is the pjit-friendly form: it
+simulates the wire quantization (identical numerics, identical error-feedback
+dynamics) so the optimizer path is testable end-to-end on any backend.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+BLOCK = 256
+
+
+def compress_int8(x, block: int = BLOCK):
+    """Blockwise symmetric int8 quantization. Returns (q, scales)."""
+    flat = x.astype(jnp.float32).reshape(-1)
+    pad = (-flat.size) % block
+    flat = jnp.pad(flat, (0, pad))
+    blocks = flat.reshape(-1, block)
+    scale = jnp.max(jnp.abs(blocks), axis=1, keepdims=True) / 127.0
+    q = jnp.round(blocks / jnp.maximum(scale, 1e-12)).astype(jnp.int8)
+    return q, scale
+
+
+def decompress_int8(q, scale, shape, block: int = BLOCK):
+    flat = (q.astype(jnp.float32) * scale).reshape(-1)
+    n = 1
+    for s in shape:
+        n *= s
+    return flat[:n].reshape(shape)
+
+
+def compressed_grads(grads, error_state):
+    """Apply int8 quantization with error feedback to a grad tree.
+
+    Returns (quantized-dequantized grads, new_error_state). The returned grads
+    are exactly what a quantized cross-pod all-reduce would deliver.
+    """
+    if error_state is None:
+        error_state = jax.tree.map(lambda g: jnp.zeros(g.shape, jnp.float32),
+                                   grads)
+
+    def one(g, e):
+        corrected = g.astype(jnp.float32) + e
+        q, s = compress_int8(corrected)
+        deq = decompress_int8(q, s, g.shape)
+        return deq.astype(g.dtype), corrected - deq
+
+    flat_g, tdef = jax.tree.flatten(grads)
+    flat_e = tdef.flatten_up_to(error_state)
+    out = [one(g, e) for g, e in zip(flat_g, flat_e)]
+    return tdef.unflatten([o[0] for o in out]), tdef.unflatten(
+        [o[1] for o in out])

@@ -1,0 +1,26 @@
+"""LR schedules as pure functions of the step counter (jit-safe)."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def cosine_schedule(step, *, peak_lr: float, warmup: int, total: int,
+                    min_ratio: float = 0.1):
+    s = step.astype(jnp.float32) if hasattr(step, "astype") else float(step)
+    warm = peak_lr * jnp.minimum(1.0, (s + 1.0) / max(warmup, 1))
+    frac = jnp.clip((s - warmup) / max(total - warmup, 1), 0.0, 1.0)
+    cos = min_ratio + (1.0 - min_ratio) * 0.5 * (1.0 + jnp.cos(jnp.pi * frac))
+    return jnp.where(s < warmup, warm, peak_lr * cos)
+
+
+def wsd_schedule(step, *, peak_lr: float, warmup: int, total: int,
+                 decay_frac: float = 0.1):
+    """Warmup-Stable-Decay: linear warmup, flat, linear cooldown."""
+    s = step.astype(jnp.float32) if hasattr(step, "astype") else float(step)
+    decay_start = total * (1.0 - decay_frac)
+    warm = peak_lr * jnp.minimum(1.0, (s + 1.0) / max(warmup, 1))
+    cool = peak_lr * jnp.clip((total - s) / max(total - decay_start, 1.0),
+                              0.0, 1.0)
+    return jnp.where(s < warmup, warm, jnp.where(s < decay_start, peak_lr,
+                                                 cool))

@@ -1,0 +1,18 @@
+import os
+
+# Tests run on the default single CPU device (the 512-device env var is set
+# ONLY inside launch/dryrun.py). A couple of sharding tests use a small
+# host-device mesh spawned in a subprocess instead.
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+import pytest
+
+
+@pytest.fixture(autouse=True, scope="module")
+def _clear_jax_caches():
+    """The suite compiles thousands of small executables (op-by-op decode
+    loops); without clearing, the in-process executable cache exhausts RAM
+    (LLVM 'Cannot allocate memory') late in the run."""
+    yield
+    import jax
+    jax.clear_caches()

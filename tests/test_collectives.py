@@ -1,0 +1,36 @@
+"""Explicit collectives: int8-compressed psum and MoE all-to-all (subprocess
+with forced host devices)."""
+
+import subprocess
+import sys
+import textwrap
+
+import pytest
+
+
+@pytest.mark.slow
+def test_compressed_psum_close_to_exact():
+    code = textwrap.dedent("""
+        import os
+        os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+        import jax, jax.numpy as jnp
+        from jax.sharding import NamedSharding, PartitionSpec as P
+        from repro.distributed.collectives import compressed_psum
+
+        mesh = jax.make_mesh((4,), ("pod",), devices=jax.devices()[:4])
+        x = jax.random.normal(jax.random.PRNGKey(0), (4, 512)) * 0.01
+        xs = jax.device_put(x, NamedSharding(mesh, P("pod")))
+        with mesh:
+            y = compressed_psum(xs, "pod", mesh, P("pod"))
+        # each shard's output approximates the sum of all shards
+        want = jnp.sum(x, axis=0)
+        got = jax.device_get(y)
+        import numpy as np
+        rel = np.max(np.abs(got - want)) / (np.max(np.abs(want)) + 1e-9)
+        assert rel < 0.05, rel
+        print("OK", rel)
+    """)
+    r = subprocess.run([sys.executable, "-c", code], capture_output=True,
+                       text=True, timeout=600,
+                       env={**__import__('os').environ, "PYTHONPATH": "src"})
+    assert "OK" in r.stdout, r.stdout + r.stderr

@@ -1,0 +1,166 @@
+"""Component-level invariants: RWKV chunked==recurrent, LRU, MoE routing,
+optimizer, schedules, gradient compression (hypothesis where it pays)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.configs.base import MoECfg, RWKVCfg
+from repro.distributed.sharding import split_axes
+from repro.kernels import ref
+from repro.models import moe as moem
+from repro.models import rwkv as rkm
+from repro.optim import (adamw_init, adamw_update, clip_by_global_norm,
+                         compressed_grads, cosine_schedule, global_norm,
+                         wsd_schedule)
+
+
+# --------------------------- RWKV -----------------------------------------
+
+@settings(deadline=None, max_examples=8)
+@given(s=st.sampled_from([7, 32, 40, 65]), h=st.sampled_from([1, 2]),
+       dh=st.sampled_from([4, 8]))
+def test_rwkv_chunked_equals_recurrent(s, h, dh):
+    d = h * dh
+    cfg = RWKVCfg(n_heads=h, head_dim=dh, decay_lora=8, mix_lora=4, d_ff=3 * d)
+    p, _ = split_axes(rkm.rwkv_init(jax.random.PRNGKey(0), cfg, d))
+    x = 0.5 * jax.random.normal(jax.random.PRNGKey(1), (2, s, d))
+    y_chunk, (_, s_end) = rkm.rwkv_time_mix(p, cfg, x)
+    st_ = {"x_prev": jnp.zeros((2, d)),
+           "S": jnp.zeros((2, h, dh, dh))}
+    ys = []
+    for t in range(s):
+        y, st_ = rkm.rwkv_time_mix_decode(p, cfg, x[:, t], st_)
+        ys.append(y)
+    y_rec = jnp.stack(ys, 1)
+    assert jnp.max(jnp.abs(y_chunk - y_rec)) < 1e-4
+    assert jnp.max(jnp.abs(s_end - st_["S"])) < 1e-4
+
+
+# --------------------------- LRU ------------------------------------------
+
+@settings(deadline=None, max_examples=10)
+@given(s=st.integers(1, 40), d=st.sampled_from([1, 4, 16]))
+def test_lru_ref_is_exact_recurrence(s, d):
+    a = jax.nn.sigmoid(jax.random.normal(jax.random.PRNGKey(0), (2, s, d)))
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, s, d))
+    h_all, h_last = ref.lru_scan(a, x)
+    h = jnp.zeros((2, d))
+    for t in range(s):
+        h = a[:, t] * h + x[:, t]
+        assert jnp.max(jnp.abs(h_all[:, t] - h)) < 1e-4
+
+
+# --------------------------- MoE ------------------------------------------
+
+def test_moe_dropless_equals_dense_mixture():
+    """With ample capacity, grouped-dispatch MoE == explicit per-token dense
+    mixture of the same experts."""
+    cfg = MoECfg(n_experts=4, top_k=2, d_expert=16, capacity_factor=8.0)
+    d = 8
+    p, _ = split_axes(moem.moe_init(jax.random.PRNGKey(0), cfg, d))
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 8, d))
+    y, aux = moem.moe_apply(p, cfg, x, dispatch_groups=4)
+
+    xt = x.reshape(-1, d)
+    logits = xt @ p["router"]
+    probs = jax.nn.softmax(logits, -1)
+    top_w, top_i = jax.lax.top_k(probs, cfg.top_k)
+    outs = []
+    for eidx in range(cfg.n_experts):
+        h = xt @ p["up"][eidx]
+        h = h * jax.nn.silu(xt @ p["gate"][eidx])
+        outs.append(h @ p["down"][eidx])
+    dense = jnp.stack(outs, 1)                     # (T, E, d)
+    want = jnp.zeros_like(xt)
+    for j in range(cfg.top_k):
+        want = want + top_w[:, j:j + 1] * jnp.take_along_axis(
+            dense, top_i[:, j][:, None, None], 1)[:, 0]
+    assert jnp.max(jnp.abs(y.reshape(-1, d) - want)) < 1e-4
+    assert float(aux) > 0
+
+
+def test_moe_capacity_drops_tokens():
+    cfg = MoECfg(n_experts=2, top_k=1, d_expert=8, capacity_factor=0.5)
+    d = 4
+    p, _ = split_axes(moem.moe_init(jax.random.PRNGKey(0), cfg, d))
+    x = jax.random.normal(jax.random.PRNGKey(1), (1, 16, d))
+    y, _ = moem.moe_apply(p, cfg, x, dispatch_groups=1)
+    # some token outputs must be exactly zero (dropped)
+    norms = jnp.linalg.norm(y.reshape(-1, d), axis=-1)
+    assert bool(jnp.any(norms == 0.0))
+    assert bool(jnp.any(norms > 0.0))
+
+
+def test_moe_grouping_invariance():
+    """Dispatch-group count must not change results (dropless)."""
+    cfg = MoECfg(n_experts=4, top_k=2, d_expert=16, capacity_factor=8.0)
+    d = 8
+    p, _ = split_axes(moem.moe_init(jax.random.PRNGKey(0), cfg, d))
+    x = jax.random.normal(jax.random.PRNGKey(1), (4, 8, d))
+    y1, _ = moem.moe_apply(p, cfg, x, dispatch_groups=1)
+    y2, _ = moem.moe_apply(p, cfg, x, dispatch_groups=8)
+    assert jnp.max(jnp.abs(y1 - y2)) < 1e-4
+
+
+# --------------------------- optimizer ------------------------------------
+
+def test_adamw_matches_reference_update():
+    p = {"w": jnp.array([1.0, -2.0, 3.0])}
+    g = {"w": jnp.array([0.1, 0.2, -0.3])}
+    opt = adamw_init(p)
+    lr, b1, b2, eps, wd = 0.1, 0.9, 0.95, 1e-8, 0.1
+    p2, opt2 = adamw_update(g, opt, p, lr=lr, b1=b1, b2=b2, eps=eps,
+                            weight_decay=wd)
+    m = (1 - b1) * g["w"]
+    v = (1 - b2) * g["w"] ** 2
+    step = (m / (1 - b1)) / (jnp.sqrt(v / (1 - b2)) + eps)
+    want = p["w"] - lr * (step + wd * p["w"])
+    assert jnp.allclose(p2["w"], want, atol=1e-6)
+    assert int(opt2["count"]) == 1
+
+
+@settings(deadline=None, max_examples=20)
+@given(scale=st.floats(0.1, 100.0))
+def test_clip_never_exceeds(scale):
+    g = {"a": scale * jnp.ones((7,)), "b": -scale * jnp.ones((3, 3))}
+    clipped, norm = clip_by_global_norm(g, 1.0)
+    assert float(global_norm(clipped)) <= 1.0 + 1e-5
+
+
+def test_schedules_shape():
+    s = jnp.arange(0, 1000)
+    lr = cosine_schedule(s, peak_lr=1e-3, warmup=100, total=1000)
+    assert float(lr[0]) < float(lr[99])            # warmup rises
+    assert float(lr[999]) < float(lr[100])         # decays
+    lr2 = wsd_schedule(s, peak_lr=1e-3, warmup=100, total=1000)
+    assert abs(float(lr2[500]) - 1e-3) < 1e-9      # stable plateau
+
+
+# --------------------------- compression ----------------------------------
+
+@settings(deadline=None, max_examples=10)
+@given(n=st.integers(10, 2000))
+def test_int8_compression_bounded_error(n):
+    x = jax.random.normal(jax.random.PRNGKey(n), (n,))
+    from repro.optim.compression import compress_int8, decompress_int8
+    q, s = compress_int8(x)
+    y = decompress_int8(q, s, x.shape)
+    blockmax = float(jnp.max(jnp.abs(x)))
+    assert float(jnp.max(jnp.abs(x - y))) <= blockmax / 127.0 + 1e-6
+
+
+def test_error_feedback_is_unbiased_over_steps():
+    """Error feedback: accumulated compressed updates converge to the true
+    gradient sum."""
+    g = {"w": jax.random.normal(jax.random.PRNGKey(0), (500,)) * 0.01}
+    err = None
+    total = jnp.zeros((500,))
+    for i in range(50):
+        cg, err = compressed_grads(g, err)
+        total = total + cg["w"]
+    want = 50 * g["w"]
+    rel = float(jnp.linalg.norm(total - want) / jnp.linalg.norm(want))
+    assert rel < 0.02, rel

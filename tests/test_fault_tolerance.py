@@ -1,0 +1,140 @@
+"""Checkpoint/restart, crash-consistency, elastic restore, straggler hooks,
+and the data pipeline's coordinator-free determinism."""
+
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import Checkpointer, latest_step, restore, save
+from repro.data.pipeline import ShardedLMPipeline
+from repro.distributed.fault_tolerance import (SupervisorConfig,
+                                               StepDeadlineExceeded,
+                                               TrainSupervisor)
+
+
+def _state(v=0.0):
+    return {"params": {"w": jnp.full((4, 3), v)},
+            "opt": {"mu": jnp.zeros((4, 3)), "count": jnp.asarray(v, jnp.int32)}}
+
+
+def test_save_restore_roundtrip(tmp_path):
+    d = str(tmp_path / "ck")
+    s = _state(3.0)
+    save(d, 7, s)
+    assert latest_step(d) == 7
+    out = restore(d, 7, _state(0.0))
+    assert jnp.allclose(out["params"]["w"], 3.0)
+    assert int(out["opt"]["count"]) == 3
+
+
+def test_atomic_commit_no_partial(tmp_path):
+    d = str(tmp_path / "ck")
+    save(d, 1, _state(1.0))
+    # a stale tmp dir from a crashed save must not be visible as a checkpoint
+    os.makedirs(os.path.join(d, "tmp.2"))
+    assert latest_step(d) == 1
+
+
+def test_checksum_detects_corruption(tmp_path):
+    d = str(tmp_path / "ck")
+    save(d, 1, _state(1.0))
+    target = os.path.join(d, "step_00000001", "arr_00000.npy")
+    arr = np.load(target)
+    arr = arr + 1
+    np.save(target, arr)
+    with pytest.raises(IOError):
+        restore(d, 1, _state(0.0))
+
+
+def test_async_checkpointer_and_gc(tmp_path):
+    d = str(tmp_path / "ck")
+    ck = Checkpointer(d, keep=2)
+    for step in (1, 2, 3, 4):
+        ck.save_async(step, _state(float(step)))
+    ck.wait()
+    steps = sorted(int(x.split("_")[1]) for x in os.listdir(d)
+                   if x.startswith("step_"))
+    assert steps == [3, 4]
+    _, st = ck.restore_latest(_state(0.0))
+    assert jnp.allclose(st["params"]["w"], 4.0)
+
+
+def test_supervisor_restart_resumes(tmp_path):
+    """Simulated node failure at step 7: supervisor restores from the last
+    checkpoint and completes with the correct final state."""
+    d = str(tmp_path / "ck")
+    crashed = {"done": False}
+
+    def step_fn(state, step):
+        if step == 7 and not crashed["done"]:
+            crashed["done"] = True
+            raise RuntimeError("node failure (simulated)")
+        return {"x": state["x"] + 1.0}
+
+    sup = TrainSupervisor(SupervisorConfig(ckpt_dir=d, ckpt_every=3),
+                          lambda: {"x": jnp.zeros(())}, step_fn)
+    out = sup.run(10)
+    assert float(out["x"]) == 10.0
+    assert sup.restarts == 1
+    assert any(e[0] == "restored" for e in sup.events)
+
+
+def test_supervisor_straggler_detection(tmp_path):
+    import time
+    slow_once = {"done": False}
+
+    def slow_step(state, step):
+        if step == 2 and not slow_once["done"]:
+            slow_once["done"] = True            # hot-spare swapped in after
+            time.sleep(0.05)
+        return state
+
+    sup = TrainSupervisor(
+        SupervisorConfig(ckpt_dir=str(tmp_path / "ck"), ckpt_every=100,
+                         step_deadline_s=0.02, max_restarts=2),
+        lambda: {"x": jnp.zeros(())}, slow_step)
+    sup.run(5)
+    assert any(e[0] == "straggler" for e in sup.events)
+    assert sup.restarts == 1
+
+
+def test_elastic_restore_changes_replication(tmp_path):
+    """Save unsharded, restore with an explicit (new) sharding target."""
+    d = str(tmp_path / "ck")
+    save(d, 1, _state(2.0))
+    dev = jax.devices()[0]
+    from jax.sharding import SingleDeviceSharding
+    sh = jax.tree.map(lambda _: SingleDeviceSharding(dev), _state(0.0))
+    out = restore(d, 1, _state(0.0), shardings=sh)
+    assert jnp.allclose(out["params"]["w"], 2.0)
+
+
+# --------------------------- data pipeline ---------------------------------
+
+def test_pipeline_deterministic_and_disjoint():
+    common = dict(global_batch=8, seq_len=16, vocab=97, seed=3, num_hosts=4)
+    hosts = [ShardedLMPipeline(host_id=h, **common) for h in range(4)]
+    b0 = [h.batch(5) for h in hosts]
+    b1 = [h.batch(5) for h in hosts]
+    for a, b in zip(b0, b1):                      # deterministic
+        assert np.array_equal(a["tokens"], b["tokens"])
+    rows = [set(map(tuple, h.host_rows(5)[None].tolist())) for h in hosts]
+    all_rows = np.concatenate([h.host_rows(5) for h in hosts])
+    assert len(set(all_rows.tolist())) == 8       # disjoint cover
+
+    # a replacement host picks up the same shard instantly
+    replacement = ShardedLMPipeline(host_id=2, **common)
+    assert np.array_equal(replacement.batch(5)["tokens"],
+                          b0[2]["tokens"])
+
+
+def test_pipeline_is_learnable_signal():
+    pipe = ShardedLMPipeline(global_batch=4, seq_len=64, vocab=32, seed=0)
+    b = pipe.batch(0)
+    # targets mostly follow the deterministic transition -> low entropy task
+    x, y = b["tokens"], b["targets"]
+    match = np.mean((x * 3 + (y - x * 3) % 32) % 32 == y)
+    assert match > 0.99

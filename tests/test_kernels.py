@@ -1,0 +1,135 @@
+"""Per-kernel shape/dtype sweeps: Pallas (interpret mode) vs pure-jnp oracle,
+plus cross-checks of the chunked/windowed reference paths vs the naive oracle."""
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.kernels import decode_attention as DA
+from repro.kernels import flash_attention as FA
+from repro.kernels import lru_scan as LS
+from repro.kernels import ref
+from repro.kernels import stmc_conv as SC
+
+RNG = jax.random.PRNGKey
+
+
+@pytest.mark.parametrize("b,s,h,dh,bq,bk,cap,dt", [
+    (2, 64, 4, 32, 16, 16, None, jnp.float32),
+    (1, 100, 2, 16, 32, 16, None, jnp.float32),    # ragged seq vs blocks
+    (2, 128, 8, 64, 128, 128, 20.0, jnp.float32),  # logit softcap
+    (2, 64, 4, 32, 16, 32, None, jnp.bfloat16),
+    (1, 48, 2, 80, 16, 16, None, jnp.float32),     # non-128 head dim (danube)
+])
+def test_flash_attention_kernel(b, s, h, dh, bq, bk, cap, dt):
+    q = jax.random.normal(RNG(1), (b, s, h, dh), dt)
+    k = jax.random.normal(RNG(2), (b, s, h, dh), dt)
+    v = jax.random.normal(RNG(3), (b, s, h, dh), dt)
+    got = FA.flash_attention(q, k, v, causal=True, block_q=bq, block_k=bk,
+                             logit_softcap=cap, interpret=True)
+    want = ref.naive_attention(q, k, v, causal=True, logit_softcap=cap)
+    tol = 2e-2 if dt == jnp.bfloat16 else 2e-5
+    assert jnp.max(jnp.abs(got.astype(jnp.float32)
+                           - want.astype(jnp.float32))) < tol
+
+
+def test_flash_attention_noncausal():
+    q = jax.random.normal(RNG(1), (2, 32, 2, 16))
+    k = jax.random.normal(RNG(2), (2, 48, 2, 16))
+    v = jax.random.normal(RNG(3), (2, 48, 2, 16))
+    got = FA.flash_attention(q, k, v, causal=False, block_q=16, block_k=16,
+                             interpret=True)
+    want = ref.naive_attention(q, k, v, causal=False)
+    assert jnp.max(jnp.abs(got - want)) < 2e-5
+
+
+@pytest.mark.parametrize("b,h,hkv,s,dh,win", [
+    (2, 8, 2, 64, 32, None),
+    (2, 4, 4, 100, 16, 24),
+    (1, 16, 8, 256, 64, None),
+    (2, 6, 6, 64, 80, 16),
+])
+def test_decode_attention_kernel(b, h, hkv, s, dh, win):
+    q = jax.random.normal(RNG(4), (b, h, dh))
+    kc = jax.random.normal(RNG(5), (b, s, hkv, dh))
+    vc = jax.random.normal(RNG(6), (b, s, hkv, dh))
+    pos = jnp.broadcast_to(jnp.arange(s)[None], (b, s))
+    pos = jnp.where(pos < s - 10, pos, -1)          # ring: empty slots
+    t = jnp.full((b,), s - 12)
+    got = DA.decode_attention(q, kc, vc, pos, t, window=win, block_k=32,
+                              interpret=True)
+    want = ref.decode_attention(q, kc, vc, pos, t, window=win)
+    assert jnp.max(jnp.abs(got - want)) < 2e-5
+
+
+@pytest.mark.parametrize("b,k,ci,co,dt", [
+    (4, 3, 8, 16, jnp.float32),
+    (130, 3, 64, 129, jnp.float32),     # ragged vs 128 blocks
+    (1, 5, 16, 8, jnp.float32),
+    (8, 3, 16, 32, jnp.bfloat16),
+])
+def test_stmc_conv_kernel(b, k, ci, co, dt):
+    w = jax.random.normal(RNG(7), (b, k, ci), dt)
+    ker = jax.random.normal(RNG(8), (k, ci, co), dt)
+    bias = jax.random.normal(RNG(9), (co,), dt)
+    got = SC.stmc_conv(w, ker, bias, interpret=True)
+    # oracle in f32 (the kernel accumulates in f32; a bf16 einsum oracle
+    # would be the less precise side)
+    want = ref.stmc_conv(w.astype(jnp.float32), ker.astype(jnp.float32),
+                         bias.astype(jnp.float32))
+    tol = 2e-1 if dt == jnp.bfloat16 else 1e-4
+    assert jnp.max(jnp.abs(got.astype(jnp.float32) - want)) < tol
+
+
+@pytest.mark.parametrize("b,s,d,h0", [
+    (2, 64, 32, False), (1, 100, 16, True), (3, 256, 128, True),
+])
+def test_lru_scan_kernel(b, s, d, h0):
+    a = jax.nn.sigmoid(jax.random.normal(RNG(10), (b, s, d)))
+    x = jax.random.normal(RNG(11), (b, s, d))
+    h0v = jax.random.normal(RNG(12), (b, d)) if h0 else None
+    got, gl = LS.lru_scan(a, x, h0v, block_s=32, block_d=32, interpret=True)
+    want, wl = ref.lru_scan(a, x, h0v)
+    assert jnp.max(jnp.abs(got - want)) < 1e-4
+    assert jnp.max(jnp.abs(gl - wl)) < 1e-4
+
+
+# --- reference path cross-checks (these run in every lowering) -------------
+
+@pytest.mark.parametrize("hq,hkv,win,pre,cap", [
+    (4, 2, None, 0, None), (4, 4, 7, 0, None), (8, 2, None, 5, 30.0),
+])
+def test_chunked_matches_naive(hq, hkv, win, pre, cap):
+    b, s, dh = 2, 33, 16
+    q = jax.random.normal(RNG(1), (b, s, hq, dh))
+    k = jax.random.normal(RNG(2), (b, s, hkv, dh))
+    v = jax.random.normal(RNG(3), (b, s, hkv, dh))
+    o1 = ref.naive_attention(q, k, v, causal=True, window=win,
+                             prefix_len=pre, logit_softcap=cap)
+    o2 = ref.chunked_flash_attention(q, k, v, causal=True, window=win,
+                                     prefix_len=pre, logit_softcap=cap,
+                                     block_q=8, block_k=16)
+    assert jnp.max(jnp.abs(o1 - o2)) < 2e-5
+
+
+def test_windowed_matches_naive():
+    b, s, h, dh, win = 2, 64, 4, 16, 7
+    q = jax.random.normal(RNG(1), (b, s, h, dh))
+    k = jax.random.normal(RNG(2), (b, s, h, dh))
+    v = jax.random.normal(RNG(3), (b, s, h, dh))
+    o1 = ref.naive_attention(q, k, v, causal=True, window=win)
+    o2 = ref.windowed_flash_attention(q, k, v, window=win, block_q=8)
+    assert jnp.max(jnp.abs(o1 - o2)) < 2e-5
+
+
+def test_mla_shaped_attention_dv_neq_dk():
+    """MLA decompressed attention has d_v != d_qk."""
+    b, s, h = 2, 32, 4
+    q = jax.random.normal(RNG(1), (b, s, h, 24))
+    k = jax.random.normal(RNG(2), (b, s, h, 24))
+    v = jax.random.normal(RNG(3), (b, s, h, 16))
+    o1 = ref.naive_attention(q, k, v, causal=True)
+    o2 = ref.chunked_flash_attention(q, k, v, causal=True, block_q=8,
+                                     block_k=8)
+    assert o1.shape == (b, s, h, 16)
+    assert jnp.max(jnp.abs(o1 - o2)) < 2e-5

@@ -1,0 +1,73 @@
+"""STMC foundation: streaming causal conv == offline causal conv, exactly."""
+
+import jax
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import stmc
+
+
+@settings(deadline=None, max_examples=10)
+@given(
+    b=st.integers(1, 3),
+    t=st.integers(1, 24),
+    k=st.integers(1, 5),
+    cin=st.integers(1, 8),
+    cout=st.integers(1, 8),
+)
+def test_stream_equals_offline(b, t, k, cin, cout):
+    rng = jax.random.PRNGKey(k * 100 + cin)
+    p = stmc.conv_init(rng, k, cin, cout)
+    x = jax.random.normal(jax.random.fold_in(rng, 1), (b, t, cin))
+    y_off = stmc.causal_conv1d(x, p["w"], p["b"])
+    y_on = stmc.stream_scan(p, x)
+    assert jnp.allclose(y_off, y_on, atol=1e-5), float(
+        jnp.max(jnp.abs(y_off - y_on)))
+
+
+@settings(deadline=None, max_examples=5)
+@given(t=st.integers(4, 20), k=st.integers(2, 4), d=st.integers(2, 3))
+def test_dilated_stream_equals_offline(t, k, d):
+    rng = jax.random.PRNGKey(7)
+    p = stmc.conv_init(rng, k, 4, 4)
+    x = jax.random.normal(jax.random.fold_in(rng, 2), (2, t, 4))
+    y_off = stmc.causal_conv1d(x, p["w"], p["b"], dilation=d)
+    state = stmc.stmc_init_state(2, k, 4, dilation=d)
+    ys = []
+    for i in range(t):
+        state, y = stmc.stmc_step(state, x[:, i], p["w"], p["b"], dilation=d)
+        ys.append(y)
+    y_on = jnp.stack(ys, 1)
+    assert jnp.allclose(y_off, y_on, atol=1e-5)
+
+
+def test_strided_offline_is_subsampled_dense():
+    rng = jax.random.PRNGKey(0)
+    p = stmc.conv_init(rng, 3, 4, 6)
+    x = jax.random.normal(jax.random.fold_in(rng, 1), (2, 16, 4))
+    y_dense = stmc.causal_conv1d(x, p["w"], p["b"])
+    y_strided = stmc.causal_conv1d(x, p["w"], p["b"], stride=2)
+    assert jnp.allclose(y_strided, y_dense[:, ::2], atol=1e-6)
+
+
+def test_causality():
+    """Perturbing input at time t never changes outputs before t."""
+    rng = jax.random.PRNGKey(3)
+    p = stmc.conv_init(rng, 3, 4, 4)
+    x = jax.random.normal(jax.random.fold_in(rng, 1), (1, 12, 4))
+    y1 = stmc.causal_conv1d(x, p["w"], p["b"])
+    x2 = x.at[:, 7].add(100.0)
+    y2 = stmc.causal_conv1d(x2, p["w"], p["b"])
+    assert jnp.allclose(y1[:, :7], y2[:, :7], atol=1e-6)
+    assert not jnp.allclose(y1[:, 7:], y2[:, 7:], atol=1e-2)
+
+
+def test_push_matches_step_state():
+    rng = jax.random.PRNGKey(4)
+    p = stmc.conv_init(rng, 3, 4, 4)
+    state = stmc.stmc_init_state(2, 3, 4)
+    frame = jax.random.normal(rng, (2, 4))
+    s1 = stmc.stmc_push(state, frame)
+    s2, _ = stmc.stmc_step(state, frame, p["w"], p["b"])
+    assert jnp.allclose(s1, s2)
