@@ -351,3 +351,13 @@ def analyze(text: str, *, num_partitions: int | None = None) -> dict:
     out["coll_bytes"] = dict(out["coll_bytes"])
     out["num_partitions"] = num_partitions
     return out
+
+
+def flops_of(fn, *args):
+    """Trip-count-aware FLOPs of ``jit(fn)`` lowered on ``args`` (XLA's own
+    cost_analysis visits scan bodies once, under-reporting layer-scanned
+    models — see module docstring). jax imported lazily: the rest of this
+    module stays usable as a pure-text parser for stored dry-run artifacts."""
+    import jax
+    compiled = jax.jit(fn).lower(*args).compile()
+    return analyze(compiled.as_text())["flops"]

@@ -2,13 +2,11 @@
 mid-run (simulated), watch it restore from the latest atomic checkpoint and
 finish; then restore the result onto a *different* device layout (elastic).
 
-    PYTHONPATH=src python examples/fault_tolerant_train.py
+    pip install -e .   (or PYTHONPATH=src)
+    python examples/fault_tolerant_train.py
 """
 
 import shutil
-import sys
-
-sys.path.insert(0, "src")
 
 import jax
 import jax.numpy as jnp

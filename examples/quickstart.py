@@ -3,12 +3,9 @@ hundred steps on CPU with the full production stack — host-sharded data,
 jitted microbatched train step, async atomic checkpoints, restart-safe
 supervisor — then decode a few tokens.
 
-    PYTHONPATH=src python examples/quickstart.py
+    pip install -e .   (or PYTHONPATH=src)
+    python examples/quickstart.py
 """
-
-import sys
-
-sys.path.insert(0, "src")
 
 import jax
 import jax.numpy as jnp

@@ -8,13 +8,11 @@ online inference pattern, and show
   3. equivalence: the streamed (phase-stepped) inference bit-matches the
      offline graph — the deployment path is the trained model.
 
-    PYTHONPATH=src python examples/speech_separation.py [--steps 250]
+    pip install -e .   (or PYTHONPATH=src)
+    python examples/speech_separation.py [--steps 250]
 """
 
 import argparse
-import sys
-
-sys.path.insert(0, "src")
 
 import jax
 import jax.numpy as jnp

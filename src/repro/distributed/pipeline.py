@@ -40,7 +40,11 @@ def pipeline_apply(mesh: Mesh, axis: str, layer_fn, params_stacked, x,
                              + x_shard.shape[1:])
         ticks = microbatches + stages - 1
         # mark carries as stage-varying for shard_map's manual-axes tracking
-        out = jax.lax.pvary(jnp.zeros_like(mb), axis)
+        # (pvary only exists on jax versions with the varying-axes type
+        # system; earlier shard_map needs no annotation)
+        out = jnp.zeros_like(mb)
+        if hasattr(jax.lax, "pvary"):
+            out = jax.lax.pvary(out, axis)
 
         def chunk_fn(c):
             def body(h, lp):
@@ -65,7 +69,9 @@ def pipeline_apply(mesh: Mesh, axis: str, layer_fn, params_stacked, x,
                                     for i in range(stages)])
             return (buf, out), None
 
-        buf0 = jax.lax.pvary(jnp.zeros_like(mb[0]), axis)
+        buf0 = jnp.zeros_like(mb[0])
+        if hasattr(jax.lax, "pvary"):
+            buf0 = jax.lax.pvary(buf0, axis)
         (_, out), _ = jax.lax.scan(tick, (buf0, out), jnp.arange(ticks))
         # only the last stage holds real outputs; broadcast them
         out = jax.lax.psum(

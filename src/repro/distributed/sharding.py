@@ -121,7 +121,9 @@ def spec_for(axes: tuple, shape: tuple, rules: ShardingRules,
                     f"axis {name!r} dim {dim} % mesh {size} != 0 -> replicated")
             entries.append(None)
         else:
-            entries.append(ax)
+            # normalize singleton tuples to the bare axis name: PartitionSpec
+            # treats ('data',) and 'data' as distinct entries on newer jax
+            entries.append(ax_tuple[0] if len(ax_tuple) == 1 else ax)
             used.update(ax_tuple)
     return P(*entries)
 

@@ -1,0 +1,59 @@
+"""``repro.engine`` — the unified inference API: slot-based continuous
+batching with a phase-dispatched SOI generate step.
+
+The paper's contribution is an *inference pattern* (recompute the middle of
+the network only every stride-th step, serve the gaps from estimated partial
+states); this package is the serving substrate that exposes it behind a
+JetStream-style engine instead of caller-managed per-phase stepper lists.
+
+Lifecycle (mirrors production continuous batching)::
+
+    engine = SOIEngine(cfg, max_concurrent_decodes=B, max_len=L)
+    state  = engine.init_decode_state(params)
+
+    prefix = engine.prefill(params, prompt_tokens)     # whole-prompt pass
+    state  = engine.insert(prefix, state, slot=3)      # occupy a free slot
+    ...
+    state, result = engine.generate(params, state)     # ONE step, ALL slots
+    tok = result.get_result_at_slot(3).tokens
+
+* ``prefill`` runs the full-sequence trunk once and returns a ``Prefix``:
+  batch-1 decode caches plus the first generated token. For SOI configs this
+  is the *compressed* trunk — pre segments at full rate, the strided conv
+  squeezing the prompt to ceil(S/stride) frames for the middle caches, and
+  the extrapolated+fused stream for the post segments — leaving the online
+  partial states (conv window buffer, extrapolation queue) exactly where
+  token-by-token streaming would have left them.
+* ``insert`` writes a prefix into one slot (batch row) of the decode state.
+  Slots are independent: each carries its own clock ``t`` in the per-slot
+  ``state["t"]: (B,)`` vector, so requests inserted at different offsets
+  coexist.
+* ``generate`` advances every slot by one token in a SINGLE jitted program.
+  For SOI configs the phase branch ``t % stride`` is resolved *inside* the
+  compiled step: the compressed middle runs under a ``lax.cond`` (skipped
+  entirely when no slot's compression window is complete) and its state
+  updates are masked per slot, so a batch may mix requests at every phase.
+  Phase-aligned slot scheduling recovers the full per-step FLOP saving; a
+  mixed batch still decodes correctly and skips the middle on the steps
+  where every slot is mid-window.
+
+``StreamSession`` (see ``repro.engine.session``) is the synchronous
+push-one/get-one facade over the same machinery, unifying the LM
+scattered-decode driver with the conv U-Net streaming driver (whose phase
+graphs are fused into one program via ``lax.switch``).
+
+Follow-ons recorded in ROADMAP.md: paged middle/outer KV, multi-host
+prefill/generate disaggregation, chunked prefill.
+"""
+
+from repro.engine.api import Engine, Prefix, ResultTokens, SlotData
+from repro.engine.session import (StreamSession, lm_stream_session,
+                                  unet_stream_session)
+from repro.engine.soi_engine import SOIEngine
+from repro.engine.step import generate_step
+
+__all__ = [
+    "Engine", "Prefix", "ResultTokens", "SlotData", "SOIEngine",
+    "StreamSession", "generate_step", "lm_stream_session",
+    "unet_stream_session",
+]

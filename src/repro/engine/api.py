@@ -1,0 +1,103 @@
+"""Engine protocol: the accelerator functions an outer serving loop calls.
+
+The shape follows JetStream's ``engine_api`` (prefill / insert / generate
+with slot-based continuous batching), trimmed to this repo's needs: plain
+dataclasses instead of flax structs, greedy sampling, and ``ResultTokens``
+packing [token, valid, length] per slot into one (B, 3) array so a single
+device->host copy drains a step's results.
+"""
+
+from __future__ import annotations
+
+import abc
+import dataclasses
+from typing import Any, Optional, Tuple
+
+import jax
+import numpy as np
+
+Params = Any
+DecodeState = Any
+
+
+@dataclasses.dataclass(frozen=True)
+class SlotData:
+    """One slot's share of a generate step's output."""
+    tokens: Any           # (1,) int32
+    valid: Any            # (1,) int32 — 0 for unoccupied slots
+    lengths: Any          # (1,) int32 — absolute position after the step
+
+
+@dataclasses.dataclass(frozen=True)
+class ResultTokens:
+    """Tokens emitted by one generate step, one row per slot.
+
+    ``data`` is a single (B, 3) int32 array — [token, valid, length] — kept
+    as one array so the device->host transfer is a single copy; ``logits``
+    (B, V) rides along for sampling/verification harnesses.
+    """
+    data: Any
+    logits: Optional[Any] = None
+    tokens_idx: tuple = (0, 1)
+    valid_idx: tuple = (1, 2)
+    length_idx: tuple = (2, 3)
+
+    def convert_to_numpy(self) -> "ResultTokens":
+        return dataclasses.replace(
+            self, data=np.asarray(self.data),
+            logits=None if self.logits is None else np.asarray(self.logits))
+
+    def get_result_at_slot(self, slot: int) -> SlotData:
+        return SlotData(
+            tokens=self.data[slot, self.tokens_idx[0]:self.tokens_idx[1]],
+            valid=self.data[slot, self.valid_idx[0]:self.valid_idx[1]],
+            lengths=self.data[slot, self.length_idx[0]:self.length_idx[1]],
+        )
+
+
+@dataclasses.dataclass(frozen=True)
+class Prefix:
+    """Result of prefilling one request: batch-1 decode caches positioned at
+    ``length``, plus the first generated token (greedy over the prompt's last
+    logits)."""
+    state: Any            # batch-1 model decode state (t == length)
+    first_token: Any      # (1,) int32
+    logits: Any           # (1, V) float32 — last prompt position
+    length: int
+
+
+class Engine(abc.ABC):
+    """The computational core of the serving loop.
+
+    Implementations must keep ``generate`` a single jitted program per
+    config: slot phases / positions are *data* (the per-slot clock vector),
+    never trace-time constants.
+    """
+
+    @abc.abstractmethod
+    def prefill(self, params: Params, tokens: jax.Array) -> Prefix:
+        """Compute caches for a prompt; returns a slot-insertable Prefix."""
+
+    @abc.abstractmethod
+    def insert(self, prefix: Prefix, decode_state: DecodeState,
+               slot: int) -> DecodeState:
+        """Write ``prefix`` into batch row ``slot`` of the decode state."""
+
+    @abc.abstractmethod
+    def generate(self, params: Params,
+                 decode_state: DecodeState) -> Tuple[DecodeState,
+                                                     ResultTokens]:
+        """Advance every slot by one token (one compiled step)."""
+
+    @abc.abstractmethod
+    def init_decode_state(self, params: Params) -> DecodeState:
+        """Empty decode state with ``max_concurrent_decodes`` free slots."""
+
+    @abc.abstractmethod
+    def free_slot(self, decode_state: DecodeState, slot: int) -> DecodeState:
+        """Mark ``slot`` unoccupied (its results become invalid)."""
+
+    @property
+    @abc.abstractmethod
+    def max_concurrent_decodes(self) -> int:
+        """Total slot capacity."""

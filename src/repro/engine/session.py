@@ -1,0 +1,111 @@
+"""StreamSession: the synchronous push-one/get-one facade over SOI streaming.
+
+The repo has two streaming drivers with the same shape — the LM scattered
+decoder (token in, logits out) and the conv U-Net separator (frame in, frame
+out). Both used to hand-roll ``steppers[t % period]`` dispatch loops; a
+``StreamSession`` hides the phase machinery behind a single compiled step
+that carries its own clock:
+
+  * LM sessions wrap ``repro.engine.step.generate_step`` (phase masked
+    in-program from the per-slot clocks);
+  * U-Net sessions fuse the per-phase graphs of
+    ``repro.models.unet.make_phase_steppers`` into one program with
+    ``lax.switch`` over ``t % period`` — each phase's fixed graph (the
+    paper's MAC saving) still compiles specialized, but dispatch happens on
+    device, inside the one program.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelCfg
+from repro.engine.step import generate_step
+from repro.models import decode as D
+from repro.models.transformer import _noc
+
+
+class StreamSession:
+    """Drives a ``step(state, inp) -> (state, out)`` program over a stream.
+
+    The session owns the carried state (clocks + partial-state pytree);
+    callers just push inputs in arrival order.
+    """
+
+    def __init__(self, step, state):
+        self._step = step
+        self.state = state
+
+    def push(self, inp):
+        """Feed one input (token ids (B,) / frame (B, C)); returns the
+        step's output (logits / separated frame)."""
+        self.state, out = self._step(self.state, inp)
+        return out
+
+    def run(self, xs):
+        """Stream a whole (B, T, ...) sequence; returns stacked outputs."""
+        outs = [self.push(xs[:, i]) for i in range(xs.shape[1])]
+        return jnp.stack(outs, axis=1)
+
+
+def lm_stream_session(params, cfg: ModelCfg, *, batch: int = 1,
+                      max_len: int = 256, prompt=None,
+                      constrain=_noc) -> StreamSession:
+    """Token-streaming session over the unified LM step (SOI or plain).
+
+    With ``prompt`` (B, S), the prompt is prefilled through the compressed
+    trunk (online SOI prefill) before the session starts; the first pushed
+    token then decodes at position S.
+    """
+    jstep = jax.jit(lambda p, s_, tok: generate_step(p, cfg, s_, tok,
+                                                     constrain=constrain))
+    if prompt is not None:
+        _, state = D.prefill(params, cfg, jnp.asarray(prompt),
+                             max_len=max_len, constrain=constrain)
+    else:
+        state = D.init_decode_state(params, cfg, batch, max_len=max_len)
+
+    def step(s_, tok):
+        logits, ns = jstep(params, s_, jnp.asarray(tok, jnp.int32))
+        return ns, logits
+
+    return StreamSession(step, state)
+
+
+@functools.lru_cache(maxsize=None)
+def _unet_step_program(cfg):
+    """One jitted switch-dispatched step per UNetConfig — cached so repeated
+    sessions (e.g. property tests calling stream_infer per example) reuse
+    the compiled program instead of re-tracing every phase branch."""
+    from repro.models import unet as U
+    branches = U.make_phase_steppers(cfg)
+    period = cfg.period
+
+    def raw(p, ns, inner, t, frame):
+        if period == 1:
+            return branches[0](p, ns, inner, frame)
+        return jax.lax.switch(t % period, branches, p, ns, inner, frame)
+
+    return jax.jit(raw)
+
+
+def unet_stream_session(params, nstate, cfg, *, batch: int = 1,
+                        dtype=jnp.float32) -> StreamSession:
+    """Frame-streaming session for the causal U-Net (repro.models.unet).
+
+    One jitted program for all SOI phases: ``lax.switch`` on the carried
+    clock selects the phase graph. cfg is a ``unet.UNetConfig``.
+    """
+    from repro.models import unet as U
+    jstep = _unet_step_program(cfg)
+    state = {"t": jnp.zeros((), jnp.int32),
+             "inner": U.init_stream_state(batch, cfg, dtype=dtype)}
+
+    def step(s_, frame):
+        inner, y = jstep(params, nstate, s_["inner"], s_["t"], frame)
+        return {"t": s_["t"] + 1, "inner": inner}, y
+
+    return StreamSession(step, state)

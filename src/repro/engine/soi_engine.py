@@ -1,0 +1,144 @@
+"""SOIEngine: slot-based continuous batching over the unified generate step.
+
+One instance owns the static serving geometry (config, slot count, max
+sequence length); params flow through every call so the same engine serves
+checkpointed or sharded parameter trees. ``generate`` and ``insert`` are
+jitted once each — slot index and per-slot clocks are traced data, so no
+call ever re-specializes on a request's phase or position.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelCfg, Segment
+from repro.engine.api import Engine, Prefix, ResultTokens
+from repro.engine.step import generate_step
+from repro.models import decode as D
+from repro.models.transformer import _noc, soi_partition
+
+
+def _insert_seg_rows(dst, src, slot, *, axis: int):
+    """Copy batch row 0 of ``src`` into batch row ``slot`` of ``dst`` for one
+    segment's cache pytree (batch axis 1 for scanned segments)."""
+    def put(d, s_):
+        row = jnp.take(s_, 0, axis=axis).astype(d.dtype)
+        return jax.lax.dynamic_update_index_in_dim(d, row, slot, axis)
+    return jax.tree.map(put, dst, src)
+
+
+def _seg_axes(segs) -> list:
+    return [1 if seg.scan else 0 for seg in segs]
+
+
+def insert_state(cfg: ModelCfg, dst: dict, src: dict, slot) -> dict:
+    """Write the batch-1 model state ``src`` into slot ``slot`` of ``dst``.
+
+    Structure-aware: scanned segments stack caches as (layers, B, ...), so
+    the batch axis differs per segment; top-level leaves (clock, conv
+    buffer, queue) insert on axis 0.
+    """
+    out = dict(dst)
+    out["t"] = dst["t"].at[slot].set(src["t"][0])
+    if cfg.soi is None:
+        groups = [("segments", cfg.segments)]
+    else:
+        pre, mid, post = soi_partition(cfg)
+        groups = [("pre", pre), ("mid", mid), ("post", post)]
+        for key in ("conv_buf", "queue"):
+            out[key] = jax.lax.dynamic_update_index_in_dim(
+                dst[key], src[key][0].astype(dst[key].dtype), slot, 0)
+    for key, segs in groups:
+        out[key] = [_insert_seg_rows(d, s_, slot, axis=ax)
+                    for d, s_, ax in zip(dst[key], src[key], _seg_axes(segs))]
+    return out
+
+
+class SOIEngine(Engine):
+    """Engine over the unified step; handles SOI and plain configs alike.
+
+    The decode state is ``{"model": <per-slot caches/clocks>, "tokens": (B,),
+    "active": (B,)}`` — ``tokens`` holds each slot's next input token (the
+    feedback path of greedy decoding; harnesses may overwrite it to force
+    teacher-input evaluation), ``active`` gates result validity.
+    """
+
+    def __init__(self, cfg: ModelCfg, *, max_concurrent_decodes: int = 8,
+                 max_len: int = 256, constrain=_noc):
+        self.cfg = cfg
+        self.max_len = max_len
+        self._slots = max_concurrent_decodes
+        self._constrain = constrain
+
+        def _gen(params, ds):
+            logits, ms = generate_step(params, cfg, ds["model"], ds["tokens"],
+                                       active=ds["active"],
+                                       constrain=constrain)
+            nxt = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+            data = jnp.stack([nxt, ds["active"].astype(jnp.int32),
+                              ms["t"]], axis=1)
+            return ({"model": ms, "tokens": nxt, "active": ds["active"]},
+                    data, logits)
+
+        def _ins(ds, pstate, first_token, slot):
+            return {"model": insert_state(cfg, ds["model"], pstate, slot),
+                    "tokens": ds["tokens"].at[slot].set(first_token[0]),
+                    "active": ds["active"].at[slot].set(True)}
+
+        def _prefill(params, tokens):
+            logits, ms = D.prefill(params, cfg, tokens, max_len=max_len,
+                                   constrain=constrain)
+            return logits, ms
+
+        # donate the decode state: the per-slot KV caches dominate serving
+        # HBM, and without donation every step double-buffers them
+        self._gen = jax.jit(_gen, donate_argnums=(1,))
+        self._ins = jax.jit(_ins, donate_argnums=(0,))
+        self._prefill_fn = jax.jit(_prefill)
+
+    @property
+    def max_concurrent_decodes(self) -> int:
+        return self._slots
+
+    def init_decode_state(self, params):
+        ms = D.init_decode_state(params, self.cfg, self._slots,
+                                 max_len=self.max_len)
+        return {"model": ms,
+                "tokens": jnp.zeros((self._slots,), jnp.int32),
+                "active": jnp.zeros((self._slots,), bool)}
+
+    def prefill(self, params, tokens) -> Prefix:
+        tokens = jnp.asarray(tokens)
+        if tokens.ndim == 1:
+            tokens = tokens[None]
+        if tokens.shape[0] != 1:
+            # insert() copies batch row 0 only; a multi-row prompt would be
+            # silently truncated to its first request
+            raise ValueError(f"prefill takes one request, got batch "
+                             f"{tokens.shape[0]}")
+        if tokens.shape[1] > self.max_len:
+            # the bulk cache fill would silently keep only the tail
+            raise ValueError(
+                f"prompt length {tokens.shape[1]} exceeds engine max_len "
+                f"{self.max_len}")
+        logits, ms = self._prefill_fn(params, tokens)
+        first = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        return Prefix(state=ms, first_token=first, logits=logits,
+                      length=int(tokens.shape[1]))
+
+    def insert(self, prefix: Prefix, decode_state, slot: int):
+        if not 0 <= int(slot) < self._slots:
+            # XLA drops out-of-bounds scatter updates silently
+            raise ValueError(f"slot {slot} out of range "
+                             f"[0, {self._slots})")
+        return self._ins(decode_state, prefix.state, prefix.first_token,
+                         jnp.asarray(slot, jnp.int32))
+
+    def generate(self, params, decode_state):
+        new_ds, data, logits = self._gen(params, decode_state)
+        return new_ds, ResultTokens(data=data, logits=logits)
+
+    def free_slot(self, decode_state, slot: int):
+        return dict(decode_state,
+                    active=decode_state["active"].at[slot].set(False))

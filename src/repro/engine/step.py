@@ -1,0 +1,131 @@
+"""The unified per-token serving step: ONE jitted program per config.
+
+For SOI configs the paper's phase schedule (recompute the compressed middle
+only when ``t % stride == 0``) is resolved *inside* the compiled program from
+the per-slot clock vector ``state["t"]: (B,)``:
+
+  * the pre/post segments and the conv window push run for every slot, every
+    step (they are full-rate in the paper's schedule anyway);
+  * the compressed middle runs under ``lax.cond`` — executed only when at
+    least one slot's compression window is complete, so a phase-aligned (or
+    all-out-of-phase) batch skips the middle's FLOPs entirely on the off
+    phases, exactly like the per-phase specialized steppers did;
+  * middle cache / extrapolation-queue updates are masked per slot, so slots
+    that are mid-window keep serving their cached partial states while
+    their neighbours recompute — mixed-phase batches decode bit-exactly.
+
+This replaces the ``steppers[t % stride]`` caller-side dispatch of
+``make_soi_steppers`` (now a deprecated shim): phase is data, not a
+compiled-program index, which is what makes slot-based continuous batching
+possible.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelCfg
+from repro.models import decode as D
+from repro.models.transformer import (_noc, _split_segment_params,
+                                      cast_params, soi_partition)
+
+
+def _select_rows(mask, new, old, *, axis: int):
+    """Per-slot select over a cache pytree; ``axis`` is the batch axis of the
+    leaves (1 for scanned segments, whose leaves stack a leading layer axis)."""
+    def sel(n, o):
+        shape = [1] * n.ndim
+        shape[axis] = mask.shape[0]
+        return jnp.where(mask.reshape(shape), n, o)
+    return jax.tree.map(sel, new, old)
+
+
+def _run_segments(parts_p, parts_s, caches, cfg, x, t, constrain):
+    new = []
+    for seg_p, seg_c, seg in zip(parts_p, caches, parts_s):
+        x, nc = D._segment_decode(seg_p, seg_c, seg, cfg, x, t,
+                                  constrain=constrain)
+        new.append(nc)
+    return x, new
+
+
+def generate_step(params, cfg: ModelCfg, state: dict, tokens, *,
+                  active=None, constrain=_noc):
+    """Advance every slot one token. tokens: (B,) int32; state["t"]: (B,).
+
+    Returns (logits (B, V), new_state). Non-SOI configs take the standard
+    per-slot decode path; SOI configs take the masked scattered-decode path
+    described in the module docstring. Exactly one compiled program per
+    config — slot phases are data.
+
+    ``active`` (optional (B,) bool) marks occupied slots: inactive slots'
+    clocks freeze and never trigger the middle's ``lax.cond``, so a
+    partially occupied engine keeps the runtime FLOP skip. ``None`` means
+    all slots active.
+    """
+    if cfg.soi is None:
+        logits, ns = D.decode_step(params, cfg, state, tokens,
+                                   constrain=constrain)
+        if active is not None:
+            ns["t"] = jnp.where(active, ns["t"], state["t"])
+        return logits, ns
+
+    params = cast_params(params, cfg)
+    soi = cfg.soi
+    st = soi.stride
+    fp = soi.mode == "fp"
+    pre_s, mid_s, post_s = soi_partition(cfg)
+    pre_p, mid_p, post_p = _split_segment_params(params["segments"], cfg)
+    soi_p = params["soi"]
+
+    b = tokens.shape[0]
+    t = jnp.broadcast_to(jnp.asarray(state["t"], jnp.int32), (b,))
+    phase = t % st
+    run_mid = phase == 0              # (B,) — this slot's window is complete
+    if active is not None:
+        run_mid = run_mid & active
+    new_state = dict(state)
+
+    x = D._embed_one(params, cfg, tokens, constrain, t=t)
+    x, new_state["pre"] = _run_segments(pre_p, pre_s, state["pre"], cfg, x, t,
+                                        constrain)
+    skip = x
+    window = jnp.concatenate([state["conv_buf"], x[:, None]], axis=1)
+    xc = jnp.einsum("bkd,kde->be", window, soi_p["compress"].astype(x.dtype))
+    s_pos = t // st                   # per-slot compressed position
+
+    def middle(_):
+        xm, new_mid = _run_segments(mid_p, mid_s, state["mid"], cfg, xc,
+                                    s_pos, constrain)
+        # Slots mid-window ran the middle on a garbage window — keep their
+        # old caches; only complete-window slots commit frame s_pos.
+        new_mid = [_select_rows(run_mid, nc, oc, axis=1 if seg.scan else 0)
+                   for nc, oc, seg in zip(new_mid, state["mid"], mid_s)]
+        return xm, new_mid
+
+    def skip_middle(_):
+        return jnp.zeros_like(xc), state["mid"]
+
+    xm, new_state["mid"] = jax.lax.cond(jnp.any(run_mid), middle, skip_middle,
+                                        None)
+
+    queue = state["queue"]
+    rows = jnp.arange(b)
+    if fp:
+        # FP serves strictly-past data: even on a complete window the output
+        # comes from the queue head (the previous middle frame).
+        xu = queue[rows, jnp.minimum(phase, st - 1)]
+    else:
+        stale = queue[rows, jnp.clip(phase - 1, 0, st - 1)]
+        xu = jnp.where(run_mid[:, None], xm, stale)
+    new_state["queue"] = jnp.where(run_mid[:, None, None],
+                                   jnp.repeat(xm[:, None], st, axis=1), queue)
+    new_state["conv_buf"] = window[:, 1:]
+
+    fused = jnp.einsum("bc,cd->bd", jnp.concatenate([xu, skip], axis=-1),
+                       soi_p["fuse"].astype(x.dtype))
+    x, new_state["post"] = _run_segments(post_p, post_s, state["post"], cfg,
+                                         fused, t, constrain)
+    new_state["t"] = t + 1 if active is None else jnp.where(active, t + 1, t)
+    return D._logits_one(params, cfg, x), new_state

@@ -1,10 +1,12 @@
-"""Serving driver: batched prefill + decode, with SOI scattered decode.
+"""Serving driver: slot-based continuous batching through ``repro.engine``.
 
 On the CPU container use ``--smoke``; the full-size serving cells are
-validated through the AOT dry-run. With ``--soi pp|fp`` the decode loop cycles
-the per-phase compiled steppers (the paper's inference pattern): the middle of
-the network is recomputed only every stride-th token, and with fp it runs on
-strictly-past data (precomputable between token arrivals).
+validated through the AOT dry-run. Requests are prefilled individually (with
+staggered prompt lengths, so slots sit at *different* SOI phases) and
+inserted into engine slots; one jitted generate step then advances every
+slot per iteration — the paper's scattered-recompute pattern is resolved
+inside the compiled step from the per-slot clocks, not by cycling per-phase
+programs on the host.
 """
 
 from __future__ import annotations
@@ -13,12 +15,11 @@ import argparse
 import time
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 
 import repro.configs as configs
 from repro.distributed.sharding import split_axes
-from repro.models import decode as D
+from repro.engine import SOIEngine
 from repro.models import transformer as T
 
 
@@ -30,6 +31,9 @@ def main(argv=None):
     ap.add_argument("--batch", type=int, default=4)
     ap.add_argument("--prompt-len", type=int, default=32)
     ap.add_argument("--gen-len", type=int, default=64)
+    ap.add_argument("--stagger", type=int, default=1,
+                    help="request i's prompt is shortened by i*stagger tokens "
+                         "(mixed SOI phases in one batch; 0 = aligned)")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
 
@@ -45,41 +49,41 @@ def main(argv=None):
     prompt = jax.random.randint(jax.random.fold_in(rng, 1),
                                 (b, args.prompt_len), 0, cfg.vocab)
     max_len = args.prompt_len + args.gen_len
+    plens = [max(1, args.prompt_len - i * args.stagger) for i in range(b)]
+
+    engine = SOIEngine(cfg, max_concurrent_decodes=b, max_len=max_len)
+    state = engine.init_decode_state(params)
 
     t0 = time.time()
-    if cfg.soi is None:
-        logits, state = D.prefill(params, cfg, prompt, max_len=max_len)
-        step = jax.jit(lambda p, s, t: D.decode_step(p, cfg, s, t))
-        steppers = None
-    else:
-        # SOI: stream the prompt through the phase steppers (online prefill —
-        # the paper's setting), then keep decoding.
-        steppers = [jax.jit(fn) for fn in D.make_soi_steppers(params, cfg)]
-        state = D.init_decode_state(params, cfg, b, max_len=max_len)
-        logits = None
-        for t in range(args.prompt_len):
-            logits, state = steppers[t % cfg.soi.stride](params, state,
-                                                         prompt[:, t])
+    first = {}
+    for slot in range(b):
+        prefix = engine.prefill(params, prompt[slot, :plens[slot]])
+        state = engine.insert(prefix, state, slot)
+        first[slot] = int(prefix.first_token[0])
     t_prefill = time.time() - t0
 
-    tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
-    out = [tok]
+    out = {slot: [first[slot]] for slot in range(b)}
+    n_steps = args.gen_len - 1   # every slot gains one token per step
     t0 = time.time()
-    for i in range(args.gen_len - 1):
-        t_abs = args.prompt_len + i
-        if steppers is None:
-            logits, state = step(params, state, tok)
-        else:
-            logits, state = steppers[t_abs % cfg.soi.stride](params, state,
-                                                             tok)
-        tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
-        out.append(tok)
+    done = 0
+    for _ in range(n_steps):
+        state, result = engine.generate(params, state)
+        data = np.asarray(result.data)   # (B, 3) — skip the (B, V) logits
+        for slot in range(b):
+            if len(out[slot]) < args.gen_len:
+                out[slot].append(int(data[slot, 0]))
+                if len(out[slot]) == args.gen_len:
+                    state = engine.free_slot(state, slot)
+                    done += 1
+        if done == b:
+            break
     dt = time.time() - t0
-    seqs = np.stack([np.asarray(t) for t in out], axis=1)
+    total = sum(len(v) for v in out.values())
+    seqs = np.stack([np.asarray(out[s][:args.gen_len]) for s in range(b)])
     print(f"arch={cfg.name} soi={args.soi or 'off'}  "
-          f"prefill {args.prompt_len} tok in {t_prefill:.2f}s, "
-          f"decoded {args.gen_len} tok x batch {b} in {dt:.2f}s "
-          f"({b * args.gen_len / max(dt, 1e-9):.1f} tok/s)")
+          f"prefill {b} reqs (lens {plens}) in {t_prefill:.2f}s, "
+          f"decoded {total} tok across {b} slots in {dt:.2f}s "
+          f"({total / max(dt, 1e-9):.1f} tok/s)")
     print("sample:", seqs[0, :16].tolist())
     return seqs
 

@@ -76,18 +76,15 @@ def make_train_step(cfg: ModelCfg, rules: ShardingRules = None, mesh=None, *,
 
 
 def make_serve_step(cfg: ModelCfg, rules: ShardingRules = None, mesh=None):
+    """One serving step for SOI and plain configs alike: the unified engine
+    step (per-slot clocks, SOI phase resolved in-program) — a single
+    compiled program per config, so the dry-run lowers exactly what
+    deployment runs."""
     constrain = make_constrain(rules, mesh)
-
-    if cfg.soi is not None:
-        def serve_step(params, state, token):
-            # dry-run lowers the worst-case (full-recompute) phase; deployment
-            # cycles the per-phase compiled programs from make_soi_steppers.
-            steppers = D.make_soi_steppers(params, cfg)
-            return steppers[0](params, state, token, constrain=constrain)
-        return serve_step
+    from repro.engine.step import generate_step
 
     def serve_step(params, state, token):
-        return D.decode_step(params, cfg, state, token, constrain=constrain)
+        return generate_step(params, cfg, state, token, constrain=constrain)
 
     return serve_step
 

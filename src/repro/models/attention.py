@@ -84,13 +84,27 @@ def init_cache(cfg: AttnCfg, batch: int, max_len: int, dtype=jnp.bfloat16,
 
 
 def _cache_write(cache: dict, t, **entries) -> dict:
-    """Write one token at absolute position t (ring indexed)."""
+    """Write one token at absolute position t (ring indexed).
+
+    t may be a scalar (whole batch at one position) or (B,) — per-slot decode
+    clocks, where each batch row writes its own ring slot (continuous
+    batching: requests in the same batch sit at different positions).
+    """
     s = cache["pos"].shape[1]
+    t = jnp.asarray(t, jnp.int32)
     slot = t % s
     new = dict(cache)
-    for name, val in entries.items():
-        new[name] = cache[name].at[:, slot].set(val.astype(cache[name].dtype))
-    new["pos"] = cache["pos"].at[:, slot].set(t)
+    if t.ndim == 0:
+        for name, val in entries.items():
+            new[name] = cache[name].at[:, slot].set(
+                val.astype(cache[name].dtype))
+        new["pos"] = cache["pos"].at[:, slot].set(t)
+    else:
+        rows = jnp.arange(cache["pos"].shape[0])
+        for name, val in entries.items():
+            new[name] = cache[name].at[rows, slot].set(
+                val.astype(cache[name].dtype))
+        new["pos"] = cache["pos"].at[rows, slot].set(t)
     return new
 
 

@@ -5,16 +5,22 @@ State layout mirrors the model's segment structure; scanned segments carry
 stacked (n_groups, ...) cache trees so the per-token step is itself a single
 ``lax.scan`` over layers (small HLO, fast compile, production-standard).
 
-Scattered decode (cfg.soi): two compiled phase steppers, cycled at deployment:
-  even (t = stride*s):   pre -> compress conv (window buffer) -> middle decode
-                         @ compressed position s (half-length caches) ->
-                         extrapolation queue -> fuse with fresh skip -> post
+Scattered decode (cfg.soi), per-slot phase = t % stride:
+  window complete (phase 0): pre -> compress conv (window buffer) -> middle
+                         decode @ compressed position t//stride (half-length
+                         caches) -> extrapolation queue -> fuse with fresh
+                         skip -> post
   other phases:          pre -> push buffer -> pop queue (cached partial state)
                          -> fuse -> post        [middle entirely absent]
 The middle block's KV caches hold S/stride entries: its attention cost drops
 ~stride^2-fold and its MLP cost stride-fold — the LM analogue of the paper's
 MAC savings. "fp" mode serves from strictly-past middle outputs so the middle
 can be *precomputed* between token arrivals (paper's FP latency win).
+
+Deployment dispatch lives in ``repro.engine``: ONE jitted step resolves the
+phase from the per-slot clocks (``state["t"]: (B,)``), so batches may mix
+requests at different phases. ``make_soi_steppers`` below is the deprecated
+phase-specialized shim (uniform-phase batches only; FLOP accounting).
 """
 
 from __future__ import annotations
@@ -123,22 +129,30 @@ def _fill_cross_kv(params_segments, segments, enc_out):
     return out
 
 
+def soi_mid_len(max_len: int, stride: int) -> int:
+    """Length of the compressed middle caches: ceil(max_len/stride) positions,
+    rounded up to a shardable multiple (a 16385-long cache would fall back to
+    replication on a 16-way model axis — measured 3.4x decode state blow-up,
+    EXPERIMENTS §Perf)."""
+    mid_len = -(-max_len // stride)
+    return -(-mid_len // 256) * 256 if mid_len > 256 else mid_len
+
+
 def init_decode_state(params, cfg: ModelCfg, batch: int, max_len: int, *,
                       enc_out=None) -> dict:
+    """Decode state with per-slot clocks: state["t"] is (B,) so each batch row
+    (a serving *slot*) carries its own absolute position — the substrate for
+    continuous batching, where requests at different offsets (and different
+    SOI phases) coexist in one batch."""
     dt = _dtype(cfg)
     d = cfg.d_model
-    state = {"t": jnp.zeros((), jnp.int32)}
+    state = {"t": jnp.zeros((batch,), jnp.int32)}
     if cfg.soi is None:
         state["segments"] = _segments_cache(cfg.segments, batch, max_len, d, dt)
     else:
         pre, mid, post = soi_partition(cfg)
         st = cfg.soi.stride
-        # middle caches hold ceil(max_len/stride) compressed positions,
-        # rounded up to a shardable multiple (a 16385-long cache would fall
-        # back to replication on a 16-way model axis — measured 3.4x decode
-        # state blow-up, EXPERIMENTS §Perf)
-        mid_len = -(-max_len // st)
-        mid_len = -(-mid_len // 256) * 256 if mid_len > 256 else mid_len
+        mid_len = soi_mid_len(max_len, st)
         state["pre"] = _segments_cache(pre, batch, max_len, d, dt)
         state["mid"] = _segments_cache(mid, batch, mid_len, d, dt)
         state["post"] = _segments_cache(post, batch, max_len, d, dt)
@@ -251,8 +265,13 @@ def _logits_one(params, cfg: ModelCfg, x):
 # ---------------------------------------------------------------------------
 
 def decode_step(params, cfg: ModelCfg, state: dict, token, *, constrain=_noc):
-    """token: (B,) int32. Returns (logits (B,V), new_state)."""
-    assert cfg.soi is None, "use make_soi_steppers for SOI models"
+    """token: (B,) int32. Returns (logits (B,V), new_state).
+
+    state["t"] may be scalar or per-slot (B,): every position-dependent op
+    (RoPE, ring-cache write, causal mask) handles per-row positions, so a
+    batch may mix requests at different offsets (continuous batching).
+    """
+    assert cfg.soi is None, "SOI models: use repro.engine (generate_step)"
     from repro.models.transformer import cast_params
     params = cast_params(params, cfg)
     t = state["t"]
@@ -277,11 +296,18 @@ def decode_step(params, cfg: ModelCfg, state: dict, token, *, constrain=_noc):
 # ---------------------------------------------------------------------------
 
 def make_soi_steppers(params, cfg: ModelCfg):
-    """Returns [phase_0_step, ..., phase_{stride-1}_step]; phase = t % stride.
+    """DEPRECATED shim — use ``repro.engine`` instead.
 
-    Phase stride-1... wait — compressed frame s completes when token s*stride
-    arrives (causal conv window ends there), so the middle runs on phase 0 and
-    the other phases reuse cached partial states.
+    Returns [phase_0_step, ..., phase_{stride-1}_step]; phase = t % stride.
+    Every stepper assumes the *whole batch* sits at the same SOI phase, which
+    rules out continuous batching; ``repro.engine.step.generate_step`` is the
+    replacement: one jitted program with the phase branch resolved in-program
+    from the per-slot clocks, so mixed-phase batches decode correctly. Kept
+    only for phase-specialized FLOP accounting and legacy callers.
+
+    Phase semantics: compressed frame s completes when token s*stride arrives
+    (causal conv window ends there), so the middle runs on phase 0 and the
+    other phases reuse cached partial states.
     """
     soi = cfg.soi
     st = soi.stride
@@ -356,12 +382,18 @@ def prefill(params, cfg: ModelCfg, tokens, *, prefix_embeds=None,
             encoder_frames=None, max_len: int | None = None, constrain=_noc):
     """Run the full-sequence path once, filling decode caches.
 
-    Returns (last_logits (B, V), state) ready for decode_step at position S.
-    (SOI models: use the offline path then re-prefill middle caches — provided
-    by examples/scattered_decode.py; production prefill for SOI uses the same
-    compressed trunk with fill_cache, wired here for the non-SOI case.)
+    Returns (last_logits (B, V), state) ready for a decode step at position S
+    (state["t"] = S per slot). SOI models stream the prompt through the
+    *compressed* trunk: the pre segments fill full-rate caches, the strided
+    conv compresses the prompt to ceil(S/stride) frames which fill the middle
+    caches, and the extrapolated+fused stream fills the post caches — plus
+    the online partial states (conv window buffer, extrapolation queue) are
+    left exactly where token-by-token streaming would have left them, so
+    scattered decode continues bit-exactly.
+
+    Pure-recurrence layers (RG-LRU) collect no prefill state on the
+    full-sequence path; prefill supports the attention / MLA / RWKV stacks.
     """
-    assert cfg.soi is None, "SOI prefill: see examples/scattered_decode.py"
     from repro.models.transformer import cast_params
     params = cast_params(params, cfg)
     b, s = tokens.shape
@@ -377,16 +409,70 @@ def prefill(params, cfg: ModelCfg, tokens, *, prefix_embeds=None,
     positions = jnp.arange(x.shape[1])[None]
     prefix_len = cfg.frontend_len if cfg.prefix_lm else 0
 
-    caches = []
-    for seg_p, seg in zip(params["segments"], cfg.segments):
+    if cfg.soi is None:
+        caches = []
+        for seg_p, seg in zip(params["segments"], cfg.segments):
+            x, _, c = _segment_forward(seg_p, seg, cfg, x, positions=positions,
+                                       prefix_len=prefix_len, enc_out=enc_out,
+                                       collect_cache=True, batch=b,
+                                       max_len=max_len, constrain=constrain)
+            caches.append(c)
+        state = {"t": jnp.full((b,), x.shape[1], jnp.int32),
+                 "segments": caches}
+        if enc_out is not None:
+            state["cross_kv"] = _fill_cross_kv(params["segments"],
+                                               cfg.segments, enc_out)
+        logits = _logits_one(params, cfg, x[:, -1])
+        return logits, state
+
+    assert prefix_embeds is None and enc_out is None and not cfg.prefix_lm, \
+        "SOI prefill: decoder-only causal token stacks"
+    soi = cfg.soi
+    st = soi.stride
+    pre_s, mid_s, post_s = soi_partition(cfg)
+    pre_p, mid_p, post_p = _split_segment_params(params["segments"], cfg)
+    state = {"t": jnp.full((b,), s, jnp.int32)}
+
+    pre_c = []
+    for seg_p, seg in zip(pre_p, pre_s):
         x, _, c = _segment_forward(seg_p, seg, cfg, x, positions=positions,
-                                   prefix_len=prefix_len, enc_out=enc_out,
                                    collect_cache=True, batch=b,
                                    max_len=max_len, constrain=constrain)
-        caches.append(c)
-    state = {"t": jnp.asarray(x.shape[1], jnp.int32), "segments": caches}
-    if enc_out is not None:
-        state["cross_kv"] = _fill_cross_kv(params["segments"], cfg.segments,
-                                           enc_out)
+        pre_c.append(c)
+    skip = x
+    # Streaming conv window: the last stride-1 pre-trunk frames (zero-padded
+    # for prompts shorter than the window) — what the online step would hold.
+    if st > 1:
+        padded = jnp.pad(x, ((0, 0), (st - 1, 0), (0, 0)))
+        state["conv_buf"] = padded[:, padded.shape[1] - (st - 1):]
+    else:
+        state["conv_buf"] = x[:, :0]
+
+    # Compressed middle: frame j sees tokens <= j*stride; a prompt of any
+    # length yields ceil(S/stride) complete frames — the same set streaming
+    # would have computed by token S-1.
+    from repro.models.transformer import soi_compress
+    xc = soi_compress(params["soi"], soi, x)
+    cpos = jnp.arange(xc.shape[1])[None]
+    mid_len = soi_mid_len(max_len, st)
+    mid_c = []
+    for seg_p, seg in zip(mid_p, mid_s):
+        xc, _, c = _segment_forward(seg_p, seg, cfg, xc, positions=cpos,
+                                    collect_cache=True, batch=b,
+                                    max_len=mid_len, constrain=constrain)
+        mid_c.append(c)
+    # Extrapolation queue: stride copies of the last computed middle frame.
+    state["queue"] = jnp.repeat(xc[:, -1:], st, axis=1)
+
+    from repro.models.transformer import soi_extrapolate, soi_fuse
+    xu = soi_extrapolate(soi, xc, s)
+    x = soi_fuse(params["soi"], xu, skip)
+    post_c = []
+    for seg_p, seg in zip(post_p, post_s):
+        x, _, c = _segment_forward(seg_p, seg, cfg, x, positions=positions,
+                                   collect_cache=True, batch=b,
+                                   max_len=max_len, constrain=constrain)
+        post_c.append(c)
+    state["pre"], state["mid"], state["post"] = pre_c, mid_c, post_c
     logits = _logits_one(params, cfg, x[:, -1])
     return logits, state

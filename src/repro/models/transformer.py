@@ -7,6 +7,7 @@ Entry points:
   loss_fn(params, cfg, batch, ...) -> (loss, metrics)      [train]
   forward(params, cfg, tokens,...) -> last-position logits [eval]
   init_decode_state / prefill / decode_step                [serving]
+  (slot-based continuous batching: repro.engine)
 
 SOI-LM (cfg.soi): layers [first_layer, last_layer) form the *compressed middle*
 — a width-2 stride-2 causal conv over token embeddings compresses time before
@@ -335,11 +336,14 @@ def _split_segment_params(params_segments, cfg: ModelCfg):
 def soi_compress(soi_p, soi: SOILMCfg, x):
     """S-CC compress: width-`stride` stride-`stride` *causal* conv over time —
     compressed frame s sees tokens <= s*stride (left-padded), so duplication
-    extrapolation stays causal (PP) exactly as in the paper's conv setting."""
+    extrapolation stays causal (PP) exactly as in the paper's conv setting.
+
+    Any length S yields ceil(S/stride) frames — exactly the set of complete
+    compression windows, which is what online prefill needs for prompts that
+    aren't stride-multiples (training always uses multiples)."""
     from repro.core.stmc import causal_conv1d
-    st = soi.stride
-    assert x.shape[1] % st == 0
-    return causal_conv1d(x, soi_p["compress"].astype(x.dtype), stride=st)
+    return causal_conv1d(x, soi_p["compress"].astype(x.dtype),
+                         stride=soi.stride)
 
 
 def soi_extrapolate(soi: SOILMCfg, xc, out_len: int):

@@ -15,7 +15,8 @@ Execution modes (numerically consistent — property-tested):
         *inference pattern*. Phase t mod P recomputes only the layers whose
         compression windows are complete; everything else reuses cached partial
         states (conv ring buffers, extrapolation queues).
-  * ``stream_infer``        — drives the steppers over a sequence.
+  * ``stream_infer``        — streams a sequence through ONE compiled step
+        (``lax.switch`` phase dispatch, via ``repro.engine.session``).
 
 Supported FP configurations (the paper's Table 2 space):
   * SS-CC   : ``mode="fp", shift_pos=None`` — 1-frame shift fused after the
@@ -359,14 +360,14 @@ def make_phase_steppers(cfg: UNetConfig):
 
 def stream_infer(params: dict, nstate: dict, x: Array, cfg: UNetConfig) -> Array:
     """Run the streaming inference pattern over a whole sequence (reference
-    harness for the offline==online equivalence property)."""
-    steppers = make_phase_steppers(cfg)
-    state = init_stream_state(x.shape[0], cfg, dtype=x.dtype)
-    outs = []
-    for t in range(x.shape[1]):
-        state, y = steppers[t % cfg.period](params, nstate, state, x[:, t])
-        outs.append(y)
-    return jnp.stack(outs, axis=1)
+    harness for the offline==online equivalence property).
+
+    Phase dispatch lives in the engine layer: one compiled step with
+    ``lax.switch`` over the per-phase graphs, clocked by carried state."""
+    from repro.engine.session import unet_stream_session
+    session = unet_stream_session(params, nstate, cfg, batch=x.shape[0],
+                                  dtype=x.dtype)
+    return session.run(x)
 
 
 # ---------------------------------------------------------------------------

@@ -36,17 +36,20 @@ def _cfg(arch, mode):
 @pytest.mark.parametrize("arch", ARCHS)
 @pytest.mark.parametrize("mode", ["pp", "fp"])
 def test_scattered_decode_equals_offline(arch, mode):
+    """Scattered decode through the unified engine step (phase resolved
+    in-program from the per-slot clocks) == offline compressed graph."""
+    from repro.engine import generate_step
     cfg = _cfg(arch, mode)
     params, _ = split_axes(T.init(jax.random.PRNGKey(0), cfg))
     b, s = 2, 16
     tokens = jax.random.randint(jax.random.PRNGKey(1), (b, s), 0, cfg.vocab)
     full = T.forward(params, cfg, tokens)
     assert bool(jnp.all(jnp.isfinite(full)))
-    steppers = D.make_soi_steppers(params, cfg)
-    assert len(steppers) == cfg.soi.stride
+    assert len(D.make_soi_steppers(params, cfg)) == cfg.soi.stride  # shim
+    jstep = jax.jit(lambda p, st_, tk: generate_step(p, cfg, st_, tk))
     state = D.init_decode_state(params, cfg, b, max_len=s)
     for t in range(s):
-        lg, state = steppers[t % cfg.soi.stride](params, state, tokens[:, t])
+        lg, state = jstep(params, state, tokens[:, t])
         assert jnp.max(jnp.abs(lg - full[:, t])) < 5e-4, (arch, mode, t)
 
 

@@ -4,6 +4,8 @@ every mode, causality, and exact reproduction of the paper's complexity rows."""
 import jax
 import jax.numpy as jnp
 import pytest
+
+pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st
 
 from repro.configs import soi_unet_dns
