@@ -15,6 +15,7 @@ accounting tool; deployment dispatch is in-program).
 
 from __future__ import annotations
 
+import json
 import time
 
 import jax
@@ -35,7 +36,7 @@ def _flops_of(fn, *args):
     return flops_of(fn, *args)
 
 
-def run(csv=False):
+def run(csv=False, out_json="BENCH_soi_lm.json"):
     cfg_soi = Q.smoke_config(soi="pp")
     cfg_std = Q.smoke_config()
     params_soi, _ = split_axes(T.init(jax.random.PRNGKey(0), cfg_soi))
@@ -85,6 +86,10 @@ def run(csv=False):
         "avg_reduction_%": 100 * (1 - avg / f_std),
         "odd_reduction_%": 100 * (1 - f_odd / f_std),
     }
+    rows["wallclock_step_std_s"] = t_std
+    rows["wallclock_step_soi_s"] = t_soi
+    with open(out_json, "w") as f:
+        json.dump(rows, f, indent=2)
     if csv:
         print(f"soi_lm_decode/avg,{t_soi*1e6:.0f},"
               f"reduction={rows['avg_reduction_%']:.1f}%")

@@ -42,18 +42,49 @@ push-one/get-one facade over the same machinery, unifying the LM
 scattered-decode driver with the conv U-Net streaming driver (whose phase
 graphs are fused into one program via ``lax.switch``).
 
-Follow-ons recorded in ROADMAP.md: paged middle/outer KV, multi-host
-prefill/generate disaggregation, chunked prefill.
+Paged KV (``SOIEngine(..., paged=True)``)
+-----------------------------------------
+
+By default every slot owns dense ``max_len`` ring caches, so serving HBM is
+``max_concurrent_decodes × max_len`` whatever the occupancy. With
+``paged=True`` the attention caches become shared pools of fixed-size pages
+(``(n_pages, page_size, ...)`` per layer; see ``models/attention.py``)
+addressed through per-slot page lists managed host-side by
+``repro.engine.pages.PageTable``:
+
+* ``insert`` allocates ``ceil(prompt_len / page_size)`` pages and copies the
+  prefix's cache rows as page *contents* (not max_len batch rows);
+* ``generate`` grows a live slot by one page exactly when its clock crosses
+  a page boundary — the page map enters the ONE compiled step as data, so
+  allocation never retraces;
+* ``free_slot`` returns the pages (scrubbed: their position lanes reset to
+  the empty sentinel) for immediate reuse by the next insert.
+
+Page id 0 is a reserved null page backing unallocated map entries; reads
+through it are masked before the softmax max, which is why the paged read is
+*bit-exact* vs the dense ring over the same logical contents (regression:
+``tests/test_paged.py``). Pools are sized by ``n_pages`` / ``n_pages_mid``
+(rows incl. the null page): size them for the resident token population —
+``benchmarks/paged_kv_bench.py`` measures ~4x fewer decode-state bytes/slot
+at 16 slots with 4 resident — and the SOI middle pool allocates at 1/stride
+the outer rate, turning the paper's partial-state compression directly into
+fewer resident pages. The compromise: a paged engine makes host allocation
+decisions between steps, so one engine instance drives one live decode
+state through its own ``insert``/``generate``/``free_slot`` calls.
+
+Follow-ons recorded in ROADMAP.md: multi-host prefill/generate
+disaggregation, chunked prefill, phase-aligned slot scheduling.
 """
 
 from repro.engine.api import Engine, Prefix, ResultTokens, SlotData
+from repro.engine.pages import PageTable
 from repro.engine.session import (StreamSession, lm_stream_session,
                                   unet_stream_session)
 from repro.engine.soi_engine import SOIEngine
 from repro.engine.step import generate_step
 
 __all__ = [
-    "Engine", "Prefix", "ResultTokens", "SlotData", "SOIEngine",
+    "Engine", "PageTable", "Prefix", "ResultTokens", "SlotData", "SOIEngine",
     "StreamSession", "generate_step", "lm_stream_session",
     "unet_stream_session",
 ]

@@ -1,0 +1,106 @@
+"""Host-side page tables for the paged KV decode caches.
+
+Physical cache memory is a pool of fixed-size pages shared by every serving
+slot (``models/attention.py`` holds the device layout); this module is the
+*allocator*: per-slot page lists, alloc on insert, grow-by-one as a slot's
+clock crosses a page boundary, free on ``free_slot``. It is deliberately
+plain numpy/python — allocation decisions are host control flow between
+jitted steps (the page map enters the compiled program as data), exactly the
+split production paged-attention engines use.
+
+Page id 0 is the reserved **null page**: it backs every unallocated map
+entry, soaks up the discarded writes of inactive slots, and is masked on
+every read. A pool that should serve N real pages therefore needs N + 1
+rows.
+
+The SOI payoff: the compressed middle gets its own table whose logical
+length is ``ceil(max_len / stride)`` — a slot allocates middle pages at
+1/stride the rate of outer pages, so the paper's partial-state compression
+shows up directly as fewer resident pages per request.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+
+class PageTable:
+    """Page allocator for ONE cache group (outer full-rate, or SOI middle).
+
+    ``map`` is the (n_slots, pages_per_slot) int32 page-list matrix the
+    jitted step indexes through; rows are dense in *logical page index*
+    (logical position ``l`` lives in map column ``l // page_size``), with 0
+    marking unallocated entries. Ring semantics are inherited from the
+    logical index: position ``t`` maps to ``t % logical_len`` first.
+    """
+
+    def __init__(self, n_slots: int, logical_len: int, page_size: int,
+                 n_pages: int):
+        if logical_len % page_size:
+            raise ValueError(f"page_size {page_size} must divide the "
+                             f"logical cache length {logical_len}")
+        if n_pages < 2:
+            raise ValueError("n_pages must be >= 2 (page 0 is the reserved "
+                             "null page)")
+        self.page_size = page_size
+        self.logical_len = logical_len
+        self.n_slots = n_slots
+        self.n_pages = n_pages
+        self.pages_per_slot = logical_len // page_size
+        self.map = np.zeros((n_slots, self.pages_per_slot), np.int32)
+        self._free = list(range(n_pages - 1, 0, -1))   # pop() -> lowest id
+
+    @property
+    def free_pages(self) -> int:
+        return len(self._free)
+
+    def _alloc_one(self, slot: int, idx: int) -> int:
+        if not self._free:
+            raise RuntimeError(
+                f"KV page pool exhausted ({self.n_pages - 1} pages of "
+                f"{self.page_size} positions): free slots or size the pool "
+                f"for the resident token population")
+        pid = self._free.pop()
+        self.map[slot, idx] = pid
+        return pid
+
+    def pages_needed(self, n_positions: int) -> int:
+        """Pages ``alloc_slot(slot, n_positions)`` would consume."""
+        return -(-min(n_positions, self.logical_len) // self.page_size)
+
+    def can_realloc(self, slot: int, n_positions: int) -> bool:
+        """Would releasing ``slot`` leave room to re-insert ``n_positions``?
+        (The eviction pre-check: free + the slot's own pages.)"""
+        owned = int((self.map[slot] > 0).sum())
+        return self.free_pages + owned >= self.pages_needed(n_positions)
+
+    def alloc_slot(self, slot: int, n_positions: int) -> np.ndarray:
+        """Allocate pages covering logical positions [0, n_positions)
+        (clamped to the ring length) for a freshly inserted request.
+        Returns a copy of the slot's page row."""
+        if self.map[slot].any():
+            raise RuntimeError(f"slot {slot} still owns pages; release it "
+                               f"before re-inserting")
+        n_positions = min(n_positions, self.logical_len)
+        n = -(-n_positions // self.page_size)
+        for i in range(n):
+            self._alloc_one(slot, i)
+        return self.map[slot].copy()
+
+    def ensure(self, slot: int, position: int):
+        """Make sure the page backing absolute ``position`` exists (the
+        grow-by-one step of decode). Returns the newly allocated page id, or
+        None if the position was already backed."""
+        idx = (position % self.logical_len) // self.page_size
+        if self.map[slot, idx] == 0:
+            return self._alloc_one(slot, idx)
+        return None
+
+    def release(self, slot: int) -> np.ndarray:
+        """Return the slot's pages to the free list. Returns the released
+        row (page ids, 0-padded) so the caller can scrub device metadata."""
+        row = self.map[slot].copy()
+        for pid in row[row > 0]:
+            self._free.append(int(pid))
+        self.map[slot] = 0
+        return row

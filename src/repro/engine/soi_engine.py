@@ -5,18 +5,39 @@ sequence length); params flow through every call so the same engine serves
 checkpointed or sharded parameter trees. ``generate`` and ``insert`` are
 jitted once each — slot index and per-slot clocks are traced data, so no
 call ever re-specializes on a request's phase or position.
+
+Two cache layouts, selected by the ``paged`` flag:
+
+* dense rings (default): every slot owns ``max_len`` cache rows up front —
+  simple, but serving HBM scales with ``max_concurrent_decodes × max_len``
+  regardless of occupancy;
+* paged pools: slots hold page *lists* into shared pools
+  (``repro.engine.pages``), allocated on insert, grown one page at a time as
+  a slot's clock crosses a page boundary, and released on ``free_slot``.
+  Slot count can then far exceed the resident batch: the pool is sized for
+  live tokens, not capacity. The SOI middle pages at 1/stride the outer
+  rate, so the paper's compression directly becomes fewer resident pages.
+
+Paged engines make host-side allocation decisions between jitted steps, so
+one engine instance drives ONE live decode state and must see every
+lifecycle transition (``insert`` / ``generate`` / ``free_slot``) of it; the
+page maps enter the compiled step as data, never as trace-time constants.
 """
 
 from __future__ import annotations
+
+import numpy as np
 
 import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ModelCfg, Segment
 from repro.engine.api import Engine, Prefix, ResultTokens
+from repro.engine.pages import PageTable
 from repro.engine.step import generate_step
 from repro.models import decode as D
-from repro.models.transformer import _noc, soi_partition
+from repro.models.attention import PagedKV
+from repro.models.transformer import _dtype, _noc, soi_partition
 
 
 def _insert_seg_rows(dst, src, slot, *, axis: int):
@@ -28,30 +49,141 @@ def _insert_seg_rows(dst, src, slot, *, axis: int):
     return jax.tree.map(put, dst, src)
 
 
+def _paged_put(pool, dense, rows, axis: int):
+    """Map a batch-1 dense prefill cache onto freshly allocated pages.
+
+    ``dense`` is (..., 1, s_log, ...) with the batch at ``axis``; the s_log
+    rows split into (n_pp, page_size) pages scattered to pool rows ``rows``
+    (0-entries land on the always-masked null page, so prefix rows beyond
+    the allocated prompt pages are discarded, not silently kept)."""
+    n_pp = rows.shape[0]
+    p_sz = pool.shape[axis + 1]
+    row = jnp.take(dense, 0, axis=axis)
+    lead = row.shape[:axis]
+    vals = row.reshape(lead + (n_pp, p_sz) + row.shape[axis + 1:])
+    vals = vals.astype(pool.dtype)
+    if axis == 0:
+        return pool.at[rows].set(vals)
+    return pool.at[:, rows].set(vals)
+
+
+def _insert_block(dstc: dict, srcc: dict, slot, axis: int, pages_row):
+    """One block's cache dict: attention goes through pages (when paged),
+    per-slot leaves (recurrence states) insert as batch rows."""
+    out = {}
+    for k, d in dstc.items():
+        if pages_row is not None and k == "attn":
+            out[k] = {kk: _paged_put(dd, srcc[k][kk], pages_row, axis)
+                      for kk, dd in d.items()}
+        else:
+            out[k] = _insert_seg_rows(d, srcc[k], slot, axis=axis)
+    return out
+
+
+def _insert_seg_cache(dst, src, slot, axis: int, pages_row):
+    if pages_row is None:
+        return _insert_seg_rows(dst, src, slot, axis=axis)
+    if isinstance(dst, dict):                      # scanned: {sub_i: block}
+        return {k: _insert_block(v, src[k], slot, axis, pages_row)
+                for k, v in dst.items()}
+    return [_insert_block(d, s_, slot, axis, pages_row)
+            for d, s_ in zip(dst, src)]
+
+
 def _seg_axes(segs) -> list:
     return [1 if seg.scan else 0 for seg in segs]
 
 
-def insert_state(cfg: ModelCfg, dst: dict, src: dict, slot) -> dict:
+def _insert_cross_kv(cfg: ModelCfg, dst: dict, src: dict, slot):
+    """Per-slot encoder K/V: copy the prefix's row in, with loud errors for
+    mismatched encoder state (a silent drop here decodes garbage later)."""
+    if ("cross_kv" in dst) != ("cross_kv" in src):
+        have, lack = (("decode state", "prefix") if "cross_kv" in dst
+                      else ("prefix", "decode state"))
+        raise ValueError(
+            f"encoder state mismatch on insert: the {have} carries "
+            f"cross-attention K/V but the {lack} does not — prefill "
+            f"encoder-decoder configs with encoder_frames and build the "
+            f"decode state from the same config")
+    if "cross_kv" not in dst:
+        return None
+
+    def check(d, s_, ax):
+        d_row = d.shape[:ax] + d.shape[ax + 1:]
+        s_row = s_.shape[:ax] + s_.shape[ax + 1:]
+        if d_row != s_row:
+            raise ValueError(
+                f"encoder state mismatch on insert: decode-state cross-KV "
+                f"leaf {d.shape} vs prefix {s_.shape} — the prefill ran "
+                f"with a different encoder frame count than the engine's "
+                f"decode state was sized for")
+
+    out = []
+    for d, s_, ax in zip(dst["cross_kv"], src["cross_kv"],
+                         _seg_axes(cfg.segments)):
+        if d is None and s_ is None:
+            out.append(None)
+            continue
+        if (d is None) != (s_ is None):
+            raise ValueError("encoder state mismatch on insert: cross-KV "
+                             "present for different segments")
+        jax.tree.map(lambda dd, ss: check(dd, ss, ax), d, s_)
+        out.append(_insert_seg_rows(d, s_, slot, axis=ax))
+    return out
+
+
+def insert_state(cfg: ModelCfg, dst: dict, src: dict, slot, *,
+                 page_rows=None) -> dict:
     """Write the batch-1 model state ``src`` into slot ``slot`` of ``dst``.
 
     Structure-aware: scanned segments stack caches as (layers, B, ...), so
     the batch axis differs per segment; top-level leaves (clock, conv
-    buffer, queue) insert on axis 0.
+    buffer, queue) insert on axis 0; per-slot encoder cross-KV copies its
+    row. With ``page_rows`` ({"outer": (n_pp,), "mid": (n_ppm,)} freshly
+    allocated page ids) the attention caches copy page *contents* into the
+    shared pools instead of max_len batch rows.
     """
     out = dict(dst)
     out["t"] = dst["t"].at[slot].set(src["t"][0])
+    po = None if page_rows is None else page_rows.get("outer")
+    pmid = None if page_rows is None else page_rows.get("mid")
     if cfg.soi is None:
-        groups = [("segments", cfg.segments)]
+        groups = [("segments", cfg.segments, po)]
     else:
         pre, mid, post = soi_partition(cfg)
-        groups = [("pre", pre), ("mid", mid), ("post", post)]
+        groups = [("pre", pre, po), ("mid", mid, pmid), ("post", post, po)]
         for key in ("conv_buf", "queue"):
             out[key] = jax.lax.dynamic_update_index_in_dim(
                 dst[key], src[key][0].astype(dst[key].dtype), slot, 0)
-    for key, segs in groups:
-        out[key] = [_insert_seg_rows(d, s_, slot, axis=ax)
-                    for d, s_, ax in zip(dst[key], src[key], _seg_axes(segs))]
+    for key, segs, prow in groups:
+        out[key] = [_insert_seg_cache(d, s_, slot, ax, prow)
+                    for d, s_, ax in zip(dst[key], src[key],
+                                         _seg_axes(segs))]
+    ckv = _insert_cross_kv(cfg, dst, src, slot)
+    if ckv is not None:
+        out["cross_kv"] = ckv
+    return out
+
+
+def _scrub_group(seg_caches, segs, rows):
+    """Mark the released pages' cache rows empty (pos = -1) so a later
+    owner's reads can't resurrect a freed request's tokens."""
+    out = []
+    for seg_c, seg in zip(seg_caches, segs):
+        axis = 1 if seg.scan else 0
+
+        def scrub(blk):
+            if "attn" not in blk:
+                return blk
+            a = dict(blk["attn"])
+            a["pos"] = (a["pos"].at[:, rows].set(-1) if axis
+                        else a["pos"].at[rows].set(-1))
+            return dict(blk, attn=a)
+
+        if seg.scan:
+            out.append({k: scrub(v) for k, v in seg_c.items()})
+        else:
+            out.append([scrub(b) for b in seg_c])
     return out
 
 
@@ -62,14 +194,44 @@ class SOIEngine(Engine):
     "active": (B,)}`` — ``tokens`` holds each slot's next input token (the
     feedback path of greedy decoding; harnesses may overwrite it to force
     teacher-input evaluation), ``active`` gates result validity.
+
+    ``paged=True`` swaps the dense ring caches for shared page pools.
+    ``n_pages`` / ``n_pages_mid`` size the pools (pool rows incl. the null
+    page); the default gives every slot full-length backing — byte-neutral
+    but bit-exact vs dense, so correctness never depends on pool sizing.
+    Servers shrink the pool to the resident token population; the page
+    tables then enforce it, raising when the pool is truly exhausted.
     """
 
     def __init__(self, cfg: ModelCfg, *, max_concurrent_decodes: int = 8,
-                 max_len: int = 256, constrain=_noc):
+                 max_len: int = 256, constrain=_noc, paged: bool = False,
+                 page_size: int = 16, n_pages: int | None = None,
+                 n_pages_mid: int | None = None):
         self.cfg = cfg
         self.max_len = max_len
         self._slots = max_concurrent_decodes
         self._constrain = constrain
+        self._paged = bool(paged)
+        self._spec = None
+        self._pt_outer = self._pt_mid = None
+        if self._paged:
+            outer_len, mid_len = D.paged_group_lens(cfg, max_len)
+            if not outer_len and not mid_len:
+                raise ValueError("paged=True needs attention caches to page "
+                                 f"(config '{cfg.name}' has none)")
+            for name, ln in (("outer", outer_len), ("middle", mid_len)):
+                if ln and ln % page_size:
+                    raise ValueError(
+                        f"page_size {page_size} must divide the {name} "
+                        f"cache length {ln}")
+            if n_pages is None:
+                n_pages = max_concurrent_decodes * (outer_len // page_size) + 1
+            if n_pages_mid is None:
+                n_pages_mid = (max_concurrent_decodes
+                               * (mid_len // page_size) + 1)
+            self._outer_len, self._mid_len = outer_len, mid_len
+            self._spec = PagedKV(page_size, max(n_pages, 2),
+                                 max(n_pages_mid, 2))
 
         def _gen(params, ds):
             logits, ms = generate_step(params, cfg, ds["model"], ds["tokens"],
@@ -81,34 +243,77 @@ class SOIEngine(Engine):
             return ({"model": ms, "tokens": nxt, "active": ds["active"]},
                     data, logits)
 
-        def _ins(ds, pstate, first_token, slot):
-            return {"model": insert_state(cfg, ds["model"], pstate, slot),
+        def _ins(ds, pstate, first_token, slot, page_rows):
+            model = insert_state(cfg, ds["model"], pstate, slot,
+                                 page_rows=page_rows)
+            return {"model": model,
                     "tokens": ds["tokens"].at[slot].set(first_token[0]),
                     "active": ds["active"].at[slot].set(True)}
 
-        def _prefill(params, tokens):
-            logits, ms = D.prefill(params, cfg, tokens, max_len=max_len,
-                                   constrain=constrain)
-            return logits, ms
+        def _prefill(params, tokens, encoder_frames):
+            return D.prefill(params, cfg, tokens,
+                             encoder_frames=encoder_frames,
+                             max_len=max_len, constrain=constrain)
+
+        def _release(ds, slot, rows):
+            m = dict(ds["model"])
+            if cfg.soi is None:
+                if "outer" in rows:
+                    m["segments"] = _scrub_group(m["segments"], cfg.segments,
+                                                 rows["outer"])
+            else:
+                pre, mid, post = soi_partition(cfg)
+                if "outer" in rows:
+                    m["pre"] = _scrub_group(m["pre"], pre, rows["outer"])
+                    m["post"] = _scrub_group(m["post"], post, rows["outer"])
+                if "mid" in rows:
+                    m["mid"] = _scrub_group(m["mid"], mid, rows["mid"])
+            return {"model": m, "tokens": ds["tokens"],
+                    "active": ds["active"].at[slot].set(False)}
 
         # donate the decode state: the per-slot KV caches dominate serving
         # HBM, and without donation every step double-buffers them
         self._gen = jax.jit(_gen, donate_argnums=(1,))
         self._ins = jax.jit(_ins, donate_argnums=(0,))
         self._prefill_fn = jax.jit(_prefill)
+        self._release_fn = jax.jit(_release, donate_argnums=(0,))
 
     @property
     def max_concurrent_decodes(self) -> int:
         return self._slots
 
+    def _page_maps(self) -> dict:
+        maps = {}
+        if self._pt_outer is not None:
+            maps["outer"] = jnp.asarray(self._pt_outer.map)
+        if self._pt_mid is not None:
+            maps["mid"] = jnp.asarray(self._pt_mid.map)
+        return maps
+
     def init_decode_state(self, params):
+        enc0 = None
+        if self.cfg.encoder is not None:
+            # per-slot encoder K/V buffers, zero until an insert fills them
+            enc0 = jnp.zeros((self._slots, self.cfg.encoder.n_frames,
+                              self.cfg.d_model), _dtype(self.cfg))
         ms = D.init_decode_state(params, self.cfg, self._slots,
-                                 max_len=self.max_len)
+                                 max_len=self.max_len, enc_out=enc0,
+                                 paged=self._spec)
+        if self._paged:
+            p_sz = self._spec.page_size
+            self._pt_outer = (PageTable(self._slots, self._outer_len, p_sz,
+                                        self._spec.n_pages)
+                              if self._outer_len else None)
+            self._pt_mid = (PageTable(self._slots, self._mid_len, p_sz,
+                                      self._spec.n_pages_mid)
+                            if self._mid_len else None)
+            self._clock = np.zeros(self._slots, np.int64)
+            self._occupied = np.zeros(self._slots, bool)
         return {"model": ms,
                 "tokens": jnp.zeros((self._slots,), jnp.int32),
                 "active": jnp.zeros((self._slots,), bool)}
 
-    def prefill(self, params, tokens) -> Prefix:
+    def prefill(self, params, tokens, encoder_frames=None) -> Prefix:
         tokens = jnp.asarray(tokens)
         if tokens.ndim == 1:
             tokens = tokens[None]
@@ -117,12 +322,14 @@ class SOIEngine(Engine):
             # silently truncated to its first request
             raise ValueError(f"prefill takes one request, got batch "
                              f"{tokens.shape[0]}")
+        if tokens.shape[1] == 0:
+            raise ValueError("prefill requires a non-empty prompt")
         if tokens.shape[1] > self.max_len:
             # the bulk cache fill would silently keep only the tail
             raise ValueError(
                 f"prompt length {tokens.shape[1]} exceeds engine max_len "
                 f"{self.max_len}")
-        logits, ms = self._prefill_fn(params, tokens)
+        logits, ms = self._prefill_fn(params, tokens, encoder_frames)
         first = jnp.argmax(logits, axis=-1).astype(jnp.int32)
         return Prefix(state=ms, first_token=first, logits=logits,
                       length=int(tokens.shape[1]))
@@ -132,13 +339,78 @@ class SOIEngine(Engine):
             # XLA drops out-of-bounds scatter updates silently
             raise ValueError(f"slot {slot} out of range "
                              f"[0, {self._slots})")
-        return self._ins(decode_state, prefix.state, prefix.first_token,
-                         jnp.asarray(slot, jnp.int32))
+        if not self._paged:
+            return self._ins(decode_state, prefix.state, prefix.first_token,
+                             jnp.asarray(slot, jnp.int32), None)
+        s_i = int(slot)
+        frames = (-(-prefix.length // self.cfg.soi.stride)
+                  if self.cfg.soi is not None else 0)
+        if self._occupied[s_i]:
+            # Pre-check capacity BEFORE evicting: free_slot donates the old
+            # decode state, so failing after it would strand the caller with
+            # invalidated buffers and a half-released slot.
+            for pt, need in ((self._pt_outer, prefix.length),
+                             (self._pt_mid, frames)):
+                if pt is not None and not pt.can_realloc(s_i, need):
+                    raise RuntimeError(
+                        f"KV page pool exhausted: re-inserting into slot "
+                        f"{s_i} needs {pt.pages_needed(need)} pages but "
+                        f"only {pt.free_pages} (+ the slot's own) are free")
+            decode_state = self.free_slot(decode_state, s_i)
+        page_rows = {}
+        try:
+            if self._pt_outer is not None:
+                page_rows["outer"] = jnp.asarray(
+                    self._pt_outer.alloc_slot(s_i, prefix.length))
+            if self._pt_mid is not None:
+                page_rows["mid"] = jnp.asarray(
+                    self._pt_mid.alloc_slot(s_i, frames))
+            new_ds = self._ins(decode_state, prefix.state,
+                               prefix.first_token,
+                               jnp.asarray(slot, jnp.int32), page_rows)
+        except Exception:
+            # transactional: a failed insert (pool exhausted mid-way,
+            # mismatched prefix state) must not leak pages into an
+            # unoccupied slot — the never-written pages go straight back
+            for pt in (self._pt_outer, self._pt_mid):
+                if pt is not None:
+                    pt.release(s_i)
+            raise
+        self._clock[s_i] = prefix.length
+        self._occupied[s_i] = True
+        return new_ds
 
     def generate(self, params, decode_state):
+        if self._paged:
+            # grow-by-one allocation: back the cache row each live slot
+            # writes this step, then hand the updated maps to the compiled
+            # step as data
+            st = self.cfg.soi.stride if self.cfg.soi is not None else 0
+            for slot in np.nonzero(self._occupied)[0]:
+                t = int(self._clock[slot])
+                if self._pt_outer is not None:
+                    self._pt_outer.ensure(slot, t)
+                if self._pt_mid is not None and t % st == 0:
+                    self._pt_mid.ensure(slot, t // st)
+            decode_state = dict(decode_state)
+            model = dict(decode_state["model"])
+            model["pages"] = self._page_maps()
+            decode_state["model"] = model
+            self._clock[self._occupied] += 1
         new_ds, data, logits = self._gen(params, decode_state)
         return new_ds, ResultTokens(data=data, logits=logits)
 
     def free_slot(self, decode_state, slot: int):
-        return dict(decode_state,
-                    active=decode_state["active"].at[slot].set(False))
+        if not self._paged:
+            return dict(decode_state,
+                        active=decode_state["active"].at[slot].set(False))
+        s_i = int(slot)
+        rows = {}
+        if self._pt_outer is not None:
+            rows["outer"] = jnp.asarray(self._pt_outer.release(s_i))
+        if self._pt_mid is not None:
+            rows["mid"] = jnp.asarray(self._pt_mid.release(s_i))
+        self._occupied[s_i] = False
+        self._clock[s_i] = 0
+        return self._release_fn(decode_state, jnp.asarray(s_i, jnp.int32),
+                                rows)

@@ -41,11 +41,42 @@ def _select_rows(mask, new, old, *, axis: int):
     return jax.tree.map(sel, new, old)
 
 
-def _run_segments(parts_p, parts_s, caches, cfg, x, t, constrain):
+def _select_mid_caches(mask, new, old, segs, *, paged: bool):
+    """Commit the middle's cache updates only for complete-window slots.
+
+    Dense layout: a per-slot ``where`` over the batch axis. Paged layout:
+    attention pools have NO batch axis — their writes were already masked by
+    routing mid-window slots through the null page — so only the per-slot
+    leaves (recurrence states) still select by row.
+    """
+    out = []
+    for nc, oc, seg in zip(new, old, segs):
+        axis = 1 if seg.scan else 0
+        if not paged:
+            out.append(_select_rows(mask, nc, oc, axis=axis))
+            continue
+
+        def blk(n_blk, o_blk):
+            return {k: (n_blk[k] if k == "attn"
+                        else _select_rows(mask, n_blk[k], o_blk[k],
+                                          axis=axis))
+                    for k in n_blk}
+
+        if seg.scan:
+            out.append({sub: blk(n_blk, oc[sub])
+                        for sub, n_blk in nc.items()})
+        else:
+            out.append([blk(n_blk, o_blk)
+                        for n_blk, o_blk in zip(nc, oc)])
+    return out
+
+
+def _run_segments(parts_p, parts_s, caches, cfg, x, t, constrain,
+                  pages=None):
     new = []
     for seg_p, seg_c, seg in zip(parts_p, caches, parts_s):
         x, nc = D._segment_decode(seg_p, seg_c, seg, cfg, x, t,
-                                  constrain=constrain)
+                                  pages=pages, constrain=constrain)
         new.append(nc)
     return x, new
 
@@ -87,21 +118,30 @@ def generate_step(params, cfg: ModelCfg, state: dict, tokens, *,
         run_mid = run_mid & active
     new_state = dict(state)
 
+    pages = state.get("pages", {})
+    outer_pg = pages.get("outer") if pages else None
+    mid_pg = pages.get("mid") if pages else None
+
     x = D._embed_one(params, cfg, tokens, constrain, t=t)
     x, new_state["pre"] = _run_segments(pre_p, pre_s, state["pre"], cfg, x, t,
-                                        constrain)
+                                        constrain, pages=outer_pg)
     skip = x
     window = jnp.concatenate([state["conv_buf"], x[:, None]], axis=1)
     xc = jnp.einsum("bkd,kde->be", window, soi_p["compress"].astype(x.dtype))
     s_pos = t // st                   # per-slot compressed position
 
     def middle(_):
+        # Paged middle: mid-window slots must not commit, so their page rows
+        # are masked to the null page — the write lands on discarded memory
+        # and their (garbage-window) read sees an empty cache.
+        mp = None if mid_pg is None else jnp.where(run_mid[:, None],
+                                                   mid_pg, 0)
         xm, new_mid = _run_segments(mid_p, mid_s, state["mid"], cfg, xc,
-                                    s_pos, constrain)
+                                    s_pos, constrain, pages=mp)
         # Slots mid-window ran the middle on a garbage window — keep their
         # old caches; only complete-window slots commit frame s_pos.
-        new_mid = [_select_rows(run_mid, nc, oc, axis=1 if seg.scan else 0)
-                   for nc, oc, seg in zip(new_mid, state["mid"], mid_s)]
+        new_mid = _select_mid_caches(run_mid, new_mid, state["mid"], mid_s,
+                                     paged=mid_pg is not None)
         return xm, new_mid
 
     def skip_middle(_):
@@ -126,6 +166,6 @@ def generate_step(params, cfg: ModelCfg, state: dict, tokens, *,
     fused = jnp.einsum("bc,cd->bd", jnp.concatenate([xu, skip], axis=-1),
                        soi_p["fuse"].astype(x.dtype))
     x, new_state["post"] = _run_segments(post_p, post_s, state["post"], cfg,
-                                         fused, t, constrain)
+                                         fused, t, constrain, pages=outer_pg)
     new_state["t"] = t + 1 if active is None else jnp.where(active, t + 1, t)
     return D._logits_one(params, cfg, x), new_state

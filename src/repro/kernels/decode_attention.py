@@ -6,6 +6,13 @@ grouped here, unlike prefill: at decode the q side is tiny and the cache read
 is the bottleneck, so we never materialize broadcast KV). Masking uses the
 cache's absolute-position lane (-1 = empty slot), which makes the same kernel
 correct for linear and ring-buffer (sliding-window) caches.
+
+``paged_decode_attention`` is the same online-softmax walk over *paged*
+pools: the per-slot page list rides in as a scalar-prefetch operand, so the
+BlockSpec index map sends block (bi, hi, ki) straight to pool row
+``page_map[bi, ki]`` — the K/V pages stream from HBM exactly like the dense
+ring blocks, with no gathered intermediate. Null-page entries (id 0) are
+masked inside the kernel body.
 """
 
 from __future__ import annotations
@@ -96,4 +103,92 @@ def decode_attention(q, k_cache, v_cache, cache_positions, q_position, *,
         ],
         interpret=interpret,
     )(qg, kc, vc, pos, qp)
+    return out.reshape(b, h, dh)
+
+
+def _paged_kernel(pm_ref, q_ref, k_ref, v_ref, pos_ref, t_ref, o_ref,
+                  m_scr, l_scr, acc_scr, *, scale, n_k, window):
+    bi = pl.program_id(0)
+    ki = pl.program_id(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q = q_ref[0, 0].astype(jnp.float32)           # (G, dh)
+    k = k_ref[0, :, 0].astype(jnp.float32)        # (page_size, dh)
+    v = v_ref[0, :, 0].astype(jnp.float32)
+    pos = pos_ref[0]                              # (page_size,)
+    t = t_ref[0]
+
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ()))) * scale
+    # null-page entries (unallocated map slots / discarded writes) are dead
+    allow = (pos >= 0) & (pos <= t) & (pm_ref[bi, ki] > 0)
+    if window is not None:
+        allow = allow & (pos > t - window)
+    s = jnp.where(allow[None, :], s, NEG_INF)
+
+    m_prev = m_scr[...]
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=1))
+    p = jnp.exp(s - m_new[:, None])
+    corr = jnp.exp(m_prev - m_new)
+    l_scr[...] = corr * l_scr[...] + jnp.sum(p, axis=1)
+    acc_scr[...] = (corr[:, None] * acc_scr[...]
+                    + jax.lax.dot_general(p, v, (((1,), (0,)), ((), ()))))
+    m_scr[...] = m_new
+
+    @pl.when(ki == n_k - 1)
+    def _finalize():
+        denom = jnp.maximum(l_scr[...], 1e-30)[:, None]
+        o_ref[0, 0] = (acc_scr[...] / denom).astype(o_ref.dtype)
+
+
+def paged_decode_attention(q, k_pool, v_pool, pos_pool, page_map, q_position,
+                           *, window=None, scale=None, interpret=False):
+    """q: (B, H, dh); pools: (n_pages, page_size, Hkv, dh); page_map:
+    (B, n_pp) int32 (0 = null page); q_position: (B,). Returns (B, H, dh).
+
+    One grid step per (slot, kv-head, page): the page id is scalar-prefetched
+    and used directly in the K/V/pos index maps, so each step DMAs exactly
+    one page — the paged analogue of the ring kernel's k-blocks.
+    """
+    b, h, dh = q.shape
+    _, p_sz, hkv, _ = k_pool.shape
+    n_pp = page_map.shape[1]
+    g = h // hkv
+    scale = dh ** -0.5 if scale is None else scale
+    qg = q.reshape(b, hkv, g, dh)
+    qp = jnp.broadcast_to(jnp.asarray(q_position, jnp.int32), (b,))
+    pm = jnp.asarray(page_map, jnp.int32)
+
+    kernel = functools.partial(_paged_kernel, scale=scale, n_k=n_pp,
+                               window=window)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(b, hkv, n_pp),
+        in_specs=[
+            pl.BlockSpec((1, 1, g, dh), lambda bi, hi, ki, pm_: (bi, hi, 0, 0)),
+            pl.BlockSpec((1, p_sz, 1, dh),
+                         lambda bi, hi, ki, pm_: (pm_[bi, ki], 0, hi, 0)),
+            pl.BlockSpec((1, p_sz, 1, dh),
+                         lambda bi, hi, ki, pm_: (pm_[bi, ki], 0, hi, 0)),
+            pl.BlockSpec((1, p_sz), lambda bi, hi, ki, pm_: (pm_[bi, ki], 0)),
+            pl.BlockSpec((1,), lambda bi, hi, ki, pm_: (bi,)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, g, dh),
+                               lambda bi, hi, ki, pm_: (bi, hi, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((g,), jnp.float32),
+            pltpu.VMEM((g,), jnp.float32),
+            pltpu.VMEM((g, dh), jnp.float32),
+        ],
+    )
+    out = pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((b, hkv, g, dh), q.dtype),
+        interpret=interpret,
+    )(pm, qg, k_pool, v_pool, pos_pool, qp)
     return out.reshape(b, h, dh)

@@ -62,6 +62,34 @@ def decode_attention(q, k_cache, v_cache, cache_positions, q_position, *,
                                 logit_softcap=logit_softcap)
 
 
+def paged_decode_attention(q, k_pool, v_pool, pos_pool, page_map, q_position,
+                           *, window=None, scale=None, logit_softcap=None):
+    """Single-token attention against paged KV pools.
+
+    Pools are ``(n_pages, page_size, Hkv, dh)`` (page 0 = reserved null
+    page); ``page_map``: (B, n_pp) int32 per-slot page lists, 0 marking
+    unallocated entries. On TPU the Pallas kernel walks the page list with
+    scalar prefetch (the page id indexes the K/V block directly — no
+    materialized gather); the reference path gathers a slot-major dense view
+    and reuses the ring-cache oracle, which keeps the paged read bit-exact
+    vs the dense layout.
+    """
+    mode = _mode()
+    if mode in ("pallas", "interpret") and logit_softcap is None:
+        from repro.kernels import decode_attention as da
+        return da.paged_decode_attention(
+            q, k_pool, v_pool, pos_pool, page_map, q_position, window=window,
+            scale=scale, interpret=(mode == "interpret"))
+    b, n_pp = page_map.shape
+    p_sz = pos_pool.shape[1]
+    k = k_pool[page_map].reshape((b, n_pp * p_sz) + k_pool.shape[2:])
+    v = v_pool[page_map].reshape((b, n_pp * p_sz) + v_pool.shape[2:])
+    pos = pos_pool[page_map].reshape(b, n_pp * p_sz)
+    pos = jnp.where(jnp.repeat(page_map > 0, p_sz, axis=1), pos, -1)
+    return ref.decode_attention(q, k, v, pos, q_position, window=window,
+                                scale=scale, logit_softcap=logit_softcap)
+
+
 def stmc_conv(window, w, b=None):
     mode = _mode()
     if mode in ("pallas", "interpret"):

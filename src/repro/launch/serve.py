@@ -34,6 +34,10 @@ def main(argv=None):
     ap.add_argument("--stagger", type=int, default=1,
                     help="request i's prompt is shortened by i*stagger tokens "
                          "(mixed SOI phases in one batch; 0 = aligned)")
+    ap.add_argument("--paged", action="store_true",
+                    help="paged KV caches: shared page pools + per-slot page "
+                         "lists instead of dense per-slot rings")
+    ap.add_argument("--page-size", type=int, default=16)
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
 
@@ -51,7 +55,8 @@ def main(argv=None):
     max_len = args.prompt_len + args.gen_len
     plens = [max(1, args.prompt_len - i * args.stagger) for i in range(b)]
 
-    engine = SOIEngine(cfg, max_concurrent_decodes=b, max_len=max_len)
+    engine = SOIEngine(cfg, max_concurrent_decodes=b, max_len=max_len,
+                       paged=args.paged, page_size=args.page_size)
     state = engine.init_decode_state(params)
 
     t0 = time.time()

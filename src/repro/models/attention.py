@@ -6,9 +6,24 @@ and cross attention (enc-dec). All sequence-mixing math routes through
 KV caches are ring buffers when the architecture is windowed: absolute
 positions are stored alongside K/V so masking is layout-independent, and a
 500k-token context costs O(window) memory.
+
+Two physical layouts share that logical contract:
+
+* dense rings — ``(B, S, ...)`` per-slot arrays (the default); and
+* paged pools — ``(n_pages, page_size, ...)`` arrays shared by every serving
+  slot, addressed through per-slot page lists (``repro.engine.pages``). A
+  slot's logical ring index ``l = t % s_log`` lives at row
+  ``page_map[slot, l // page_size]``, offset ``l % page_size``. Page id 0 is
+  the reserved *null page*: reads through it are masked (``pos`` forced to
+  -1) and writes to it are discarded garbage, so unallocated map entries and
+  inactive slots are safe by construction. Because the mask is applied
+  before the online-softmax max, a paged read is bit-identical to the dense
+  ring read over the same logical contents.
 """
 
 from __future__ import annotations
+
+import dataclasses
 
 import jax
 import jax.numpy as jnp
@@ -81,6 +96,74 @@ def init_cache(cfg: AttnCfg, batch: int, max_len: int, dtype=jnp.bfloat16,
         "v": jnp.zeros((batch, s, cfg.n_kv, cfg.head_dim), dtype),
         "pos": jnp.full((batch, s), -1, jnp.int32),
     }
+
+
+@dataclasses.dataclass(frozen=True)
+class PagedKV:
+    """Geometry of the paged decode-cache pools.
+
+    ``n_pages`` / ``n_pages_mid`` count pool rows *including* the reserved
+    null page 0, so a pool that should hold N real pages needs N + 1 rows.
+    The memory win of paging: the pool is sized for the *resident* token
+    population (active slots × their actual lengths), not
+    ``max_concurrent_decodes × max_len``.
+    """
+    page_size: int
+    n_pages: int              # outer (full-rate pre/post) pool rows
+    n_pages_mid: int = 0      # SOI compressed-middle pool rows
+
+
+def init_paged_cache(cfg: AttnCfg, page_size: int, n_pages: int,
+                     dtype=jnp.bfloat16) -> dict:
+    """Pooled decode cache: pages are shared across slots via a page map."""
+    if cfg.is_mla:
+        return {
+            "latent": jnp.zeros((n_pages, page_size, cfg.kv_lora), dtype),
+            "rope": jnp.zeros((n_pages, page_size, cfg.qk_rope), dtype),
+            "pos": jnp.full((n_pages, page_size), -1, jnp.int32),
+        }
+    return {
+        "k": jnp.zeros((n_pages, page_size, cfg.n_kv, cfg.head_dim), dtype),
+        "v": jnp.zeros((n_pages, page_size, cfg.n_kv, cfg.head_dim), dtype),
+        "pos": jnp.full((n_pages, page_size), -1, jnp.int32),
+    }
+
+
+def _paged_cache_write(cache: dict, pages, t, **entries) -> dict:
+    """Write one token at absolute position t through per-slot page lists.
+
+    ``pages``: (B, n_pp) int32 page ids (0 = unallocated/null). Slots whose
+    target entry is the null page scatter onto page 0, which reads always
+    mask — the host allocator guarantees real pages for live slots.
+    """
+    p_sz = cache["pos"].shape[1]
+    s_log = pages.shape[1] * p_sz
+    tb = jnp.broadcast_to(jnp.asarray(t, jnp.int32), (pages.shape[0],))
+    l = tb % s_log
+    page = jnp.take_along_axis(pages, (l // p_sz)[:, None], axis=1)[:, 0]
+    off = l % p_sz
+    new = dict(cache)
+    for name, val in entries.items():
+        new[name] = cache[name].at[page, off].set(val.astype(cache[name].dtype))
+    new["pos"] = cache["pos"].at[page, off].set(tb)
+    return new
+
+
+def paged_view(cache: dict, pages) -> dict:
+    """Gather a slot-major dense view (B, n_pp*page_size, ...) of the pools.
+
+    Entries reached through the null page read ``pos = -1`` (masked), so the
+    view is logically identical to the dense ring cache of the same slot.
+    """
+    p_sz = cache["pos"].shape[1]
+    b, n_pp = pages.shape
+    out = {}
+    for name, pool in cache.items():
+        g = pool[pages]                                 # (B, n_pp, P, ...)
+        out[name] = g.reshape((b, n_pp * p_sz) + g.shape[3:])
+    valid = jnp.repeat(pages > 0, p_sz, axis=1)
+    out["pos"] = jnp.where(valid, out["pos"], -1)
+    return out
 
 
 def _cache_write(cache: dict, t, **entries) -> dict:
@@ -228,12 +311,16 @@ def _mla_forward(p, cfg: AttnCfg, x, *, positions, norm_eps, fill_cache,
 
 def attn_decode(p: dict, cfg: AttnCfg, x: Array, cache: dict, t, *,
                 norm_eps: float = 1e-6, cross_kv: tuple | None = None,
-                constrain=lambda x, axes: x):
-    """x: (B, d) one token at absolute position t. Returns (y, new_cache)."""
+                pages=None, constrain=lambda x, axes: x):
+    """x: (B, d) one token at absolute position t. Returns (y, new_cache).
+
+    ``pages`` (B, n_pp) selects the paged-pool cache layout: writes and the
+    attention read go through the per-slot page lists instead of batch rows.
+    """
     b, d = x.shape
     if cfg.is_mla:
         return _mla_decode(p, cfg, x, cache, t, norm_eps=norm_eps,
-                           constrain=constrain)
+                           pages=pages, constrain=constrain)
     if cfg.kind == "cross":
         k, v = cross_kv
         q = jnp.einsum("bd,dhk->bhk", x, p["wq"])
@@ -254,15 +341,24 @@ def attn_decode(p: dict, cfg: AttnCfg, x: Array, cache: dict, t, *,
                        theta=cfg.rope_theta)[:, 0]
         k = apply_rope(k[:, None], tb[:, None], pct=cfg.rope_pct,
                        theta=cfg.rope_theta)[:, 0]
-    cache = _cache_write(cache, t, k=k, v=v)
-    out = kops.decode_attention(q, cache["k"], cache["v"], cache["pos"], tb,
-                                window=cfg.window, scale=cfg.softmax_scale,
-                                logit_softcap=cfg.logit_softcap)
+    if pages is not None:
+        cache = _paged_cache_write(cache, pages, t, k=k, v=v)
+        out = kops.paged_decode_attention(
+            q, cache["k"], cache["v"], cache["pos"], pages, tb,
+            window=cfg.window, scale=cfg.softmax_scale,
+            logit_softcap=cfg.logit_softcap)
+    else:
+        cache = _cache_write(cache, t, k=k, v=v)
+        out = kops.decode_attention(q, cache["k"], cache["v"], cache["pos"],
+                                    tb, window=cfg.window,
+                                    scale=cfg.softmax_scale,
+                                    logit_softcap=cfg.logit_softcap)
     y = jnp.einsum("bhk,hkd->bd", out, p["wo"])
     return y, cache
 
 
-def _mla_decode(p, cfg: AttnCfg, x, cache, t, *, norm_eps, constrain):
+def _mla_decode(p, cfg: AttnCfg, x, cache, t, *, norm_eps, pages=None,
+                constrain=lambda x, axes: x):
     """Absorbed-matmul MLA decode: attention runs in the 512-d latent space;
     per-token cache is kv_lora + qk_rope floats (the paper-faithful memory win
     of MLA)."""
@@ -283,20 +379,31 @@ def _mla_decode(p, cfg: AttnCfg, x, cache, t, *, norm_eps, constrain):
                         eps=norm_eps)
     k_rope = apply_rope(dkv[:, None, cfg.kv_lora:], tb[:, None],
                         theta=cfg.rope_theta)[:, 0]
-    cache = _cache_write(cache, t, latent=latent, rope=k_rope)
+    if pages is not None:
+        cache = _paged_cache_write(cache, pages, t, latent=latent,
+                                   rope=k_rope)
+        # XLA-gathered dense view per step: correct everywhere, but on TPU
+        # this re-materializes the slot's logical cache each token — a
+        # scalar-prefetch paged kernel for the absorbed latent attention
+        # (like the GQA one) is the ROADMAP follow-on before serving MLA
+        # paged at scale
+        view = paged_view(cache, pages)
+    else:
+        cache = _cache_write(cache, t, latent=latent, rope=k_rope)
+        view = cache
 
     # absorb W_UK into q: scores over the latent cache directly
     q_lat = jnp.einsum("bhk,lhk->bhl", q_nope, p["wuk"])
     scale = (cfg.qk_nope + cfg.qk_rope) ** -0.5
     scores = (jnp.einsum("bhl,bsl->bhs", q_lat.astype(jnp.float32),
-                         cache["latent"].astype(jnp.float32))
+                         view["latent"].astype(jnp.float32))
               + jnp.einsum("bhk,bsk->bhs", q_rope.astype(jnp.float32),
-                           cache["rope"].astype(jnp.float32))) * scale
-    allow = (cache["pos"] >= 0) & (cache["pos"] <= tb[:, None])
+                           view["rope"].astype(jnp.float32))) * scale
+    allow = (view["pos"] >= 0) & (view["pos"] <= tb[:, None])
     scores = jnp.where(allow[:, None], scores, -1e30)
     probs = jax.nn.softmax(scores, axis=-1)
     o_lat = jnp.einsum("bhs,bsl->bhl", probs,
-                       cache["latent"].astype(jnp.float32)).astype(x.dtype)
+                       view["latent"].astype(jnp.float32)).astype(x.dtype)
     out = jnp.einsum("bhl,lhk->bhk", o_lat, p["wuv"])
     y = jnp.einsum("bhk,hkd->bd", out, p["wo"])
     return y, cache

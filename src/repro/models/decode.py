@@ -48,10 +48,14 @@ Array = jax.Array
 # Cache init
 # ---------------------------------------------------------------------------
 
-def _block_cache(b: BlockCfg, batch: int, max_len: int, d: int, dt) -> dict:
+def _block_cache(b: BlockCfg, batch: int, max_len: int, d: int, dt,
+                 paged=None) -> dict:
     c = {}
     if b.attn is not None:
-        c["attn"] = attn.init_cache(b.attn, batch, max_len, dt)
+        if paged is not None:
+            c["attn"] = attn.init_paged_cache(b.attn, paged[0], paged[1], dt)
+        else:
+            c["attn"] = attn.init_cache(b.attn, batch, max_len, dt)
     if b.rglru is not None:
         c["rglru"] = rgm.rglru_init_state(b.rglru, d, batch, dt)
     if b.rwkv is not None:
@@ -72,22 +76,25 @@ def _stack(tree, n: int):
     return jax.tree.map(lambda x: jnp.repeat(x[None], n, axis=0), tree)
 
 
-def _segment_cache(seg: Segment, batch: int, max_len: int, d: int, dt):
+def _segment_cache(seg: Segment, batch: int, max_len: int, d: int, dt,
+                   paged=None):
     if seg.scan:
-        group = {f"sub{i}": _block_cache(b, batch, max_len, d, dt)
+        group = {f"sub{i}": _block_cache(b, batch, max_len, d, dt, paged)
                  for i, b in enumerate(seg.blocks)}
         group = {k: {kk: vv for kk, vv in v.items() if vv is not None}
                  for k, v in group.items()}
         return _stack(group, seg.n_groups)
     out = []
     for j in range(seg.n_layers):
-        c = _block_cache(seg.blocks[j % len(seg.blocks)], batch, max_len, d, dt)
+        c = _block_cache(seg.blocks[j % len(seg.blocks)], batch, max_len, d,
+                         dt, paged)
         out.append({k: v for k, v in c.items() if v is not None})
     return out
 
 
-def _segments_cache(segments, batch, max_len, d, dt):
-    return [_segment_cache(s, batch, max_len, d, dt) for s in segments]
+def _segments_cache(segments, batch, max_len, d, dt, paged=None):
+    return [_segment_cache(s, batch, max_len, d, dt, paged)
+            for s in segments]
 
 
 def _fill_cross_kv(params_segments, segments, enc_out):
@@ -129,6 +136,35 @@ def _fill_cross_kv(params_segments, segments, enc_out):
     return out
 
 
+def _attn_logical_len(segments, max_len: int) -> int:
+    """Logical (ring) cache length shared by a cache group's attention
+    layers. Paging keys physical pages by logical index, so one page map
+    serves a group only if every layer in it rings at the same length."""
+    lens = set()
+    for seg in segments:
+        for b in seg.blocks:
+            if b.attn is not None:
+                lens.add(max_len if b.attn.window is None
+                         else min(max_len, b.attn.window))
+    if len(lens) > 1:
+        raise NotImplementedError(
+            f"paged KV needs a uniform ring length per cache group; "
+            f"got window-capped lengths {sorted(lens)} — mixed-window "
+            f"stacks need per-length page maps (not implemented)")
+    return lens.pop() if lens else 0
+
+
+def paged_group_lens(cfg: ModelCfg, max_len: int) -> tuple:
+    """(outer_len, mid_len): logical cache lengths of the full-rate (outer)
+    and compressed-middle cache groups; 0 = the group has no attention."""
+    if cfg.soi is None:
+        return _attn_logical_len(cfg.segments, max_len), 0
+    pre, mid, post = soi_partition(cfg)
+    outer = _attn_logical_len(list(pre) + list(post), max_len)
+    mid_l = _attn_logical_len(mid, soi_mid_len(max_len, cfg.soi.stride))
+    return outer, mid_l
+
+
 def soi_mid_len(max_len: int, stride: int) -> int:
     """Length of the compressed middle caches: ceil(max_len/stride) positions,
     rounded up to a shardable multiple (a 16385-long cache would fall back to
@@ -139,23 +175,51 @@ def soi_mid_len(max_len: int, stride: int) -> int:
 
 
 def init_decode_state(params, cfg: ModelCfg, batch: int, max_len: int, *,
-                      enc_out=None) -> dict:
+                      enc_out=None, paged=None) -> dict:
     """Decode state with per-slot clocks: state["t"] is (B,) so each batch row
     (a serving *slot*) carries its own absolute position — the substrate for
     continuous batching, where requests at different offsets (and different
-    SOI phases) coexist in one batch."""
+    SOI phases) coexist in one batch.
+
+    ``paged`` (an ``attention.PagedKV``) swaps the per-slot ring caches for
+    shared page pools plus per-slot page maps in ``state["pages"]``; the
+    compressed middle gets its own (smaller) pool — SOI's 1/stride state
+    rate directly becomes 1/stride page-allocation rate. Recurrence states
+    (RG-LRU, RWKV) and encoder cross-KV stay per-slot dense: they are O(1)
+    or fixed-length per slot, so paging them buys nothing.
+    """
     dt = _dtype(cfg)
     d = cfg.d_model
     state = {"t": jnp.zeros((batch,), jnp.int32)}
+    po = pm = None
+    if paged is not None:
+        outer_len, mid_l = paged_group_lens(cfg, max_len)
+        pages = {}
+        if outer_len:
+            if outer_len % paged.page_size:
+                raise ValueError(f"page_size {paged.page_size} must divide "
+                                 f"the outer cache length {outer_len}")
+            po = (paged.page_size, paged.n_pages)
+            pages["outer"] = jnp.zeros(
+                (batch, outer_len // paged.page_size), jnp.int32)
+        if mid_l:
+            if mid_l % paged.page_size:
+                raise ValueError(f"page_size {paged.page_size} must divide "
+                                 f"the middle cache length {mid_l}")
+            pm = (paged.page_size, paged.n_pages_mid)
+            pages["mid"] = jnp.zeros(
+                (batch, mid_l // paged.page_size), jnp.int32)
+        state["pages"] = pages
     if cfg.soi is None:
-        state["segments"] = _segments_cache(cfg.segments, batch, max_len, d, dt)
+        state["segments"] = _segments_cache(cfg.segments, batch, max_len, d,
+                                            dt, paged=po)
     else:
         pre, mid, post = soi_partition(cfg)
         st = cfg.soi.stride
         mid_len = soi_mid_len(max_len, st)
-        state["pre"] = _segments_cache(pre, batch, max_len, d, dt)
-        state["mid"] = _segments_cache(mid, batch, mid_len, d, dt)
-        state["post"] = _segments_cache(post, batch, max_len, d, dt)
+        state["pre"] = _segments_cache(pre, batch, max_len, d, dt, paged=po)
+        state["mid"] = _segments_cache(mid, batch, mid_len, d, dt, paged=pm)
+        state["post"] = _segments_cache(post, batch, max_len, d, dt, paged=po)
         state["conv_buf"] = jnp.zeros((batch, st - 1, d), dt)
         state["queue"] = jnp.zeros((batch, st, d), dt)
     if enc_out is not None:
@@ -169,14 +233,14 @@ def init_decode_state(params, cfg: ModelCfg, batch: int, max_len: int, *,
 # ---------------------------------------------------------------------------
 
 def _block_decode(bp, b: BlockCfg, cfg: ModelCfg, x, cache, t, *,
-                  cross_kv=None, constrain=_noc):
+                  cross_kv=None, pages=None, constrain=_noc):
     eps = cfg.norm_eps
     new_c = dict(cache)
     if b.attn is not None:
         h = norm_apply(b.norm, bp["ln1"], x, eps=eps)
         h, new_c["attn"] = attn.attn_decode(bp["attn"], b.attn, h,
                                             cache["attn"], t, norm_eps=eps,
-                                            constrain=constrain)
+                                            pages=pages, constrain=constrain)
         x = x + h
     if b.rglru is not None:
         h = norm_apply(b.norm, bp["ln1"], x, eps=eps)
@@ -212,7 +276,10 @@ def _block_decode(bp, b: BlockCfg, cfg: ModelCfg, x, cache, t, *,
 
 
 def _segment_decode(seg_p, seg_c, seg: Segment, cfg: ModelCfg, x, t, *,
-                    cross_kv=None, constrain=_noc):
+                    cross_kv=None, pages=None, constrain=_noc):
+    # `pages` (the per-slot page map) is shared by every layer of the
+    # segment: it rides into the scan body as a closure constant, not a
+    # scanned operand.
     if seg.scan:
         def body(x, inp):
             gp, gc, ckv = inp
@@ -221,7 +288,7 @@ def _segment_decode(seg_p, seg_c, seg: Segment, cfg: ModelCfg, x, t, *,
                 sub_ckv = None if ckv is None else ckv.get(f"sub{i}")
                 x, new_gc[f"sub{i}"] = _block_decode(
                     gp[f"sub{i}"], b, cfg, x, gc[f"sub{i}"], t,
-                    cross_kv=sub_ckv, constrain=constrain)
+                    cross_kv=sub_ckv, pages=pages, constrain=constrain)
             return x, new_gc
 
         if cross_kv is None:
@@ -236,7 +303,7 @@ def _segment_decode(seg_p, seg_c, seg: Segment, cfg: ModelCfg, x, t, *,
             b = seg.blocks[j % len(seg.blocks)]
             ckv = None if cross_kv is None else cross_kv[j]
             x, nc = _block_decode(bp, b, cfg, x, bc, t, cross_kv=ckv,
-                                  constrain=constrain)
+                                  pages=pages, constrain=constrain)
             new_list.append(nc)
         return x, new_list
 
@@ -271,19 +338,25 @@ def decode_step(params, cfg: ModelCfg, state: dict, token, *, constrain=_noc):
     (RoPE, ring-cache write, causal mask) handles per-row positions, so a
     batch may mix requests at different offsets (continuous batching).
     """
-    assert cfg.soi is None, "SOI models: use repro.engine (generate_step)"
+    if cfg.soi is not None:
+        # a hard error, not an assert: under `python -O` an assert vanishes
+        # and SOI state (conv buffer / queue / middle caches) silently rots
+        raise NotImplementedError(
+            "decode_step does not run SOI configs: use repro.engine "
+            "(generate_step resolves the phase schedule in-program)")
     from repro.models.transformer import cast_params
     params = cast_params(params, cfg)
     t = state["t"]
     x = _embed_one(params, cfg, token, constrain, t=t)
     ckv_list = state.get("cross_kv")
+    pg = state["pages"].get("outer") if "pages" in state else None
     new_segments = []
     for i, (seg_p, seg_c, seg) in enumerate(zip(params["segments"],
                                                 state["segments"],
                                                 cfg.segments)):
         ckv = ckv_list[i] if ckv_list is not None else None
         x, nc = _segment_decode(seg_p, seg_c, seg, cfg, x, t, cross_kv=ckv,
-                                constrain=constrain)
+                                pages=pg, constrain=constrain)
         new_segments.append(nc)
     new_state = dict(state)
     new_state["segments"] = new_segments
@@ -391,16 +464,26 @@ def prefill(params, cfg: ModelCfg, tokens, *, prefix_embeds=None,
     left exactly where token-by-token streaming would have left them, so
     scattered decode continues bit-exactly.
 
-    Pure-recurrence layers (RG-LRU) collect no prefill state on the
-    full-sequence path; prefill supports the attention / MLA / RWKV stacks.
+    Recurrence layers (RG-LRU, RWKV) collect their final scan state, so
+    hybrid stacks (recurrentgemma) resume decode from position S too.
     """
     from repro.models.transformer import cast_params
     params = cast_params(params, cfg)
     b, s = tokens.shape
+    if s == 0 and prefix_embeds is None:
+        # zero tokens means zero complete SOI compression frames and no last
+        # position to read logits from — reject instead of emitting a
+        # malformed extrapolation queue / garbage logits
+        raise ValueError("prefill requires a non-empty prompt")
     max_len = max_len or s
     dt = _dtype(cfg)
     enc_out = None
     if cfg.encoder is not None:
+        if encoder_frames is None:
+            raise ValueError(
+                f"config '{cfg.name}' has an encoder: prefill needs "
+                f"encoder_frames (B, {cfg.encoder.n_frames}, "
+                f"{cfg.encoder.d_model})")
         enc_out = encode(params, cfg, encoder_frames, constrain)
     from repro.models.transformer import _embed_tokens
     x = _embed_tokens(params, cfg, tokens, constrain)
@@ -425,8 +508,12 @@ def prefill(params, cfg: ModelCfg, tokens, *, prefix_embeds=None,
         logits = _logits_one(params, cfg, x[:, -1])
         return logits, state
 
-    assert prefix_embeds is None and enc_out is None and not cfg.prefix_lm, \
-        "SOI prefill: decoder-only causal token stacks"
+    if prefix_embeds is not None or enc_out is not None or cfg.prefix_lm:
+        # hard error (assert would vanish under `python -O` and the SOI
+        # stream state below would be built from misaligned positions)
+        raise NotImplementedError(
+            "SOI prefill supports decoder-only causal token stacks "
+            "(no prefix embeds / encoder / prefix-LM)")
     soi = cfg.soi
     st = soi.stride
     pre_s, mid_s, post_s = soi_partition(cfg)
@@ -462,7 +549,15 @@ def prefill(params, cfg: ModelCfg, tokens, *, prefix_embeds=None,
                                     max_len=mid_len, constrain=constrain)
         mid_c.append(c)
     # Extrapolation queue: stride copies of the last computed middle frame.
-    state["queue"] = jnp.repeat(xc[:, -1:], st, axis=1)
+    # Any prompt of length >= 1 completes frame 0 (frame j sees tokens
+    # <= j*stride, zero-padded like the streaming conv buffer at t=0); if a
+    # caller nevertheless lands here with zero frames, fall back to the
+    # zeros that token-by-token streaming holds before its first phase-0
+    # step instead of silently emitting a zero-length queue.
+    if xc.shape[1] == 0:
+        state["queue"] = jnp.zeros((b, st, xc.shape[-1]), xc.dtype)
+    else:
+        state["queue"] = jnp.repeat(xc[:, -1:], st, axis=1)
 
     from repro.models.transformer import soi_extrapolate, soi_fuse
     xu = soi_extrapolate(soi, xc, s)

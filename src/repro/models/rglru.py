@@ -78,7 +78,14 @@ def _a_and_b(p, xb, nh):
 
 def rglru_forward(p: dict, cfg: RGLRUCfg, x: Array, *,
                   constrain=lambda x, axes: x):
-    """Full-sequence forward. x: (B, S, d) -> (B, S, d)."""
+    """Full-sequence forward. x: (B, S, d) -> (B, S, d).
+
+    Also returns the final recurrence state — the same pytree
+    ``rglru_init_state`` builds and ``rglru_decode`` carries — so prefill
+    can resume token-by-token decode from position S instead of only from
+    t=0 (the conv window holds the last conv_width-1 *pre-conv* frames,
+    zero-padded exactly like the streaming buffer for short sequences).
+    """
     nh = cfg.n_heads or 1
     ga = jax.nn.gelu(jnp.einsum("bsd,dw->bsw", x, p["wa"]))
     xb = jnp.einsum("bsd,dw->bsw", x, p["wb"])
@@ -89,10 +96,11 @@ def rglru_forward(p: dict, cfg: RGLRUCfg, x: Array, *,
     xc = sum(xp[:, i:xb.shape[1] + i] * p["conv"][i] for i in range(k))
     xc = xc + p["conv_b"]
     a, bx = _a_and_b(p, xc, nh)
-    h, _ = kops.lru_scan(a, bx)
+    h, h_last = kops.lru_scan(a, bx)
     h = h.astype(x.dtype)
     y = jnp.einsum("bsw,wd->bsd", h * ga, p["wo"])
-    return y
+    conv_tail = xp[:, xb.shape[1]:]               # last k-1 conv inputs
+    return y, {"h": h_last, "conv": conv_tail}
 
 
 def rglru_init_state(cfg: RGLRUCfg, d: int, batch: int, dtype=jnp.float32):

@@ -182,8 +182,11 @@ def _block_apply(p: dict, b: BlockCfg, cfg: ModelCfg, x, *, positions,
             cache_out["attn"] = c
     if b.rglru is not None:
         h = norm_apply(b.norm, p["ln1"], x, eps=eps)
-        h = rgm.rglru_forward(p["rglru"], b.rglru, h, constrain=constrain)
+        h, rg_state = rgm.rglru_forward(p["rglru"], b.rglru, h,
+                                        constrain=constrain)
         x = x + h
+        if fill_cache is not None:
+            cache_out["rglru"] = rg_state
     if b.rwkv is not None:
         h = norm_apply(b.norm, p["ln1"], x, eps=eps)
         prev_tm = None if rwkv_prev is None else rwkv_prev.get("x_prev_tm")

@@ -1,0 +1,347 @@
+"""Paged KV serving + engine bugfix regressions.
+
+The structural claims under test:
+  * the paged cache layout (shared pools + per-slot page lists) decodes
+    BIT-exactly vs the dense ring layout — across GQA, MLA (absorbed
+    decode), and windowed-ring caches, and through the full engine
+    lifecycle: mixed SOI phases, a mid-decode insert, and slot
+    free/re-insert with page reuse under a deliberately tight pool;
+  * the Pallas paged-attention kernel (scalar-prefetched page walk) matches
+    the gather reference;
+  * engine serving bugfixes hold: enc-dec insert round-trips per-slot
+    encoder K/V (and rejects mismatched encoder state), RG-LRU prefill
+    leaves a resumable recurrence state, short prompts prefill correctly at
+    any stride, and the serving guards raise real errors (not asserts).
+"""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+import repro.configs as C
+import repro.configs.qwen3_1_7b as Q
+import repro.configs.whisper_tiny as W
+from repro.distributed.sharding import split_axes
+from repro.engine import SOIEngine, generate_step
+from repro.engine.pages import PageTable
+from repro.models import decode as D
+from repro.models import transformer as T
+from repro.models.attention import PagedKV
+
+
+def _params(cfg):
+    params, _ = split_axes(T.init(jax.random.PRNGKey(0), cfg))
+    return params
+
+
+def _f32_dropless(cfg):
+    segs = []
+    for s in cfg.segments:
+        blocks = []
+        for b in s.blocks:
+            if b.moe is not None:
+                b = dataclasses.replace(
+                    b, moe=dataclasses.replace(b.moe, capacity_factor=8.0))
+            blocks.append(b)
+        segs.append(dataclasses.replace(s, blocks=tuple(blocks)))
+    return dataclasses.replace(cfg, dtype="float32", segments=tuple(segs))
+
+
+# ---------------------------------------------------------------------------
+# Paged layout == dense ring, bit for bit
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("arch", ["deepseek-v2-236b", "h2o-danube-1.8b"])
+def test_paged_decode_step_bit_matches_dense(arch):
+    """MLA latent pools and windowed ring pools read/write through pages
+    exactly like their dense layouts (static full page map, no engine)."""
+    cfg = _f32_dropless(C.get_smoke(arch))
+    params = _params(cfg)
+    b, s = 2, 12
+    tokens = jax.random.randint(jax.random.PRNGKey(1), (b, s), 0, cfg.vocab)
+    outer_len, _ = D.paged_group_lens(cfg, s)
+    p_sz = 4
+    assert outer_len % p_sz == 0
+    n_pp = outer_len // p_sz
+    sd = D.init_decode_state(params, cfg, b, max_len=s)
+    sp = D.init_decode_state(params, cfg, b, max_len=s,
+                             paged=PagedKV(p_sz, b * n_pp + 1))
+    sp["pages"] = {"outer": jnp.arange(b * n_pp,
+                                       dtype=jnp.int32).reshape(b, n_pp) + 1}
+    jd = jax.jit(lambda st, tok: D.decode_step(params, cfg, st, tok))
+    for t in range(s):
+        ld, sd = jd(sd, tokens[:, t])
+        lp, sp = jd(sp, tokens[:, t])
+        assert np.array_equal(np.asarray(ld), np.asarray(lp)), (arch, t)
+
+
+@pytest.mark.parametrize("mode", ["pp", "fp"])
+def test_paged_engine_lifecycle_bit_matches_dense(mode):
+    """Mixed-phase SOI batch through the paged engine == dense engine, bit
+    for bit, including a mid-decode insert and slot free/re-insert with
+    page reuse under a pool sized exactly for the resident batch."""
+    cfg = dataclasses.replace(Q.smoke_config(soi=mode), dtype="float32")
+    params = _params(cfg)
+    n_req, s = 4, 16
+    tokens = jax.random.randint(jax.random.PRNGKey(1), (n_req, s), 0,
+                                cfg.vocab)
+    full = T.forward(params, cfg, tokens)
+
+    dense = SOIEngine(cfg, max_concurrent_decodes=4, max_len=s)
+    # 3 resident requests x 4 outer pages: the final insert only succeeds
+    # because free_slot really recycles pages
+    paged = SOIEngine(cfg, max_concurrent_decodes=4, max_len=s, paged=True,
+                      page_size=4, n_pages=13, n_pages_mid=7)
+    prefixes = {}
+
+    def run(eng):
+        ds = eng.init_decode_state(params)
+        cur = {}
+        outs = []
+
+        def insert(ds, r, off, slot):
+            key = (r, off)
+            if key not in prefixes:      # prefill is layout-independent
+                prefixes[key] = eng.prefill(params, tokens[r, :off])
+            cur[slot] = (r, off)
+            return eng.insert(prefixes[key], ds, slot)
+
+        def step(ds):
+            forced = ds["tokens"]
+            for sl, (r, c) in cur.items():
+                if c < s:
+                    forced = forced.at[sl].set(tokens[r, c])
+            ds, res = eng.generate(params, dict(ds, tokens=forced))
+            for sl, (r, c) in list(cur.items()):
+                if c < s:
+                    outs.append((r, c, np.asarray(res.logits[sl])))
+                    cur[sl] = (r, c + 1)
+            return ds
+
+        ds = insert(ds, 0, 5, 0)         # stride 2: phases 1 and 0 coexist
+        ds = insert(ds, 1, 6, 1)
+        for _ in range(3):
+            ds = step(ds)
+        ds = insert(ds, 2, 8, 2)         # mid-decode insert
+        for _ in range(2):
+            ds = step(ds)
+        ds = eng.free_slot(ds, 0)        # slot reuse: r0 out, r3 in
+        del cur[0]
+        ds = insert(ds, 3, 7, 0)
+        for _ in range(9):
+            ds = step(ds)
+        return outs
+
+    outs_d = run(dense)
+    outs_p = run(paged)
+    assert len(outs_d) == len(outs_p)
+    for (rd, cd, ld), (rp, cp, lp) in zip(outs_d, outs_p):
+        assert (rd, cd) == (rp, cp)
+        assert np.array_equal(ld, lp), (mode, rd, cd,
+                                        float(np.max(np.abs(ld - lp))))
+        # and both match the offline forward (absolute correctness)
+        assert float(np.max(np.abs(lp - np.asarray(full[rp, cp])))) < 5e-4
+    # every request actually decoded past its prompt
+    decoded = {r for r, _, _ in outs_p}
+    assert decoded == set(range(n_req))
+
+
+def test_page_pool_exhaustion_raises():
+    cfg = dataclasses.replace(Q.smoke_config(soi="pp"), dtype="float32")
+    params = _params(cfg)
+    s = 16
+    eng = SOIEngine(cfg, max_concurrent_decodes=4, max_len=s, paged=True,
+                    page_size=4, n_pages=5, n_pages_mid=3)  # 1 slot's worth
+    ds = eng.init_decode_state(params)
+    prefix = eng.prefill(params, jnp.arange(1, 14, dtype=jnp.int32))
+    ds = eng.insert(prefix, ds, 0)       # 13 tokens: all 4 outer pages
+    with pytest.raises(RuntimeError, match="page pool exhausted"):
+        eng.insert(prefix, ds, 1)
+    # the failed insert rolled its allocation back: after a free, the same
+    # slot takes the request (no leaked pages, no poisoned slot)
+    ds = eng.free_slot(ds, 0)
+    ds = eng.insert(prefix, ds, 1)
+    ds, res = eng.generate(params, ds)
+    assert int(res.convert_to_numpy().get_result_at_slot(1).valid[0]) == 1
+    # re-insert into the occupied slot: capacity precheck passes (the
+    # slot's own pages count), old request evicted, new one decodes
+    ds = eng.insert(prefix, ds, 1)
+    ds, res = eng.generate(params, ds)
+    assert int(res.convert_to_numpy().get_result_at_slot(1).valid[0]) == 1
+
+
+def test_page_table_lifecycle():
+    pt = PageTable(n_slots=2, logical_len=16, page_size=4, n_pages=6)
+    row = pt.alloc_slot(0, 9)            # 3 pages
+    assert (row > 0).sum() == 3 and pt.free_pages == 2
+    assert pt.ensure(0, 9) is None       # already backed
+    assert pt.ensure(0, 12) is not None  # crosses into page 3
+    released = pt.release(0)
+    assert (released > 0).sum() == 4 and pt.free_pages == 5
+    assert not pt.map.any()
+    with pytest.raises(ValueError):
+        PageTable(2, 15, 4, 6)           # page size must divide length
+
+
+# ---------------------------------------------------------------------------
+# Pallas paged kernel
+# ---------------------------------------------------------------------------
+
+def test_paged_kernel_matches_gather_ref():
+    from repro.kernels import decode_attention as da
+    from repro.kernels import ops as kops
+    ks = jax.random.split(jax.random.PRNGKey(0), 3)
+    b, h, hkv, dh, p_sz, n_pages, n_pp = 3, 8, 4, 16, 4, 11, 4
+    q = jax.random.normal(ks[0], (b, h, dh), jnp.float32)
+    k_pool = jax.random.normal(ks[1], (n_pages, p_sz, hkv, dh), jnp.float32)
+    v_pool = jax.random.normal(ks[2], (n_pages, p_sz, hkv, dh), jnp.float32)
+    page_map = jnp.array([[1, 2, 0, 0], [3, 4, 5, 6], [7, 0, 0, 0]],
+                         jnp.int32)
+    pos_pool = jnp.full((n_pages, p_sz), -1, jnp.int32)
+    for pid, logical in {1: 0, 2: 1, 3: 0, 4: 1, 5: 2, 6: 3, 7: 0}.items():
+        pos_pool = pos_pool.at[pid].set(logical * p_sz + jnp.arange(p_sz))
+    pos_pool = pos_pool.at[0].set(3)     # garbage on the null page: masked
+    t = jnp.array([6, 14, 2], jnp.int32)
+    for window in (None, 5):
+        want = kops.paged_decode_attention(q, k_pool, v_pool, pos_pool,
+                                           page_map, t, window=window)
+        got = da.paged_decode_attention(q, k_pool, v_pool, pos_pool,
+                                        page_map, t, window=window,
+                                        interpret=True)
+        assert jnp.max(jnp.abs(want - got)) < 1e-5, window
+
+
+# ---------------------------------------------------------------------------
+# Engine serving bugfixes
+# ---------------------------------------------------------------------------
+
+def test_encdec_engine_insert_roundtrip():
+    """whisper: per-slot encoder K/V survives prefill -> insert -> generate
+    (used to crash on cross_kv=None after any engine insert)."""
+    cfg = dataclasses.replace(W.smoke_config(), dtype="float32")
+    params = _params(cfg)
+    b, s = 2, 10
+    tokens = jax.random.randint(jax.random.PRNGKey(1), (b, s), 0, cfg.vocab)
+    frames = 0.1 * jax.random.normal(
+        jax.random.PRNGKey(3), (b, cfg.encoder.n_frames, cfg.encoder.d_model))
+    enc_out = jnp.concatenate(
+        [T.encode(params, cfg, frames[i:i + 1]) for i in range(b)])
+    full = T.forward(params, cfg, tokens, enc_out=enc_out)
+
+    eng = SOIEngine(cfg, max_concurrent_decodes=3, max_len=s + 2)
+    ds = eng.init_decode_state(params)
+    offs = [4, 6]
+    cur = {}
+    for slot, off in enumerate(offs):
+        prefix = eng.prefill(params, tokens[slot, :off],
+                             encoder_frames=frames[slot:slot + 1])
+        assert jnp.max(jnp.abs(prefix.logits[0] - full[slot, off - 1])) < 5e-4
+        ds = eng.insert(prefix, ds, slot)
+        cur[slot] = off
+    for _ in range(s - min(offs)):
+        forced = ds["tokens"]
+        for r, c in cur.items():
+            if c < s:
+                forced = forced.at[r].set(tokens[r, c])
+        ds, res = eng.generate(params, dict(ds, tokens=forced))
+        for r, c in list(cur.items()):
+            if c < s:
+                assert jnp.max(jnp.abs(res.logits[r] - full[r, c])) < 5e-4, \
+                    (r, c)
+                cur[r] = c + 1
+    assert min(cur.values()) == s
+
+
+def test_encdec_mismatched_encoder_state_rejected():
+    cfg = dataclasses.replace(W.smoke_config(), dtype="float32")
+    params = _params(cfg)
+    eng = SOIEngine(cfg, max_concurrent_decodes=2, max_len=8)
+    ds = eng.init_decode_state(params)
+    with pytest.raises(ValueError, match="encoder"):
+        eng.prefill(params, jnp.array([1, 2, 3], jnp.int32))   # no frames
+    bad = 0.1 * jax.random.normal(jax.random.PRNGKey(4),
+                                  (1, 8, cfg.encoder.d_model))
+    prefix = eng.prefill(params, jnp.array([1, 2, 3], jnp.int32),
+                         encoder_frames=bad)
+    with pytest.raises(ValueError, match="encoder state mismatch"):
+        eng.insert(prefix, ds, 0)
+
+
+def test_rglru_prefill_matches_decode_from_zero():
+    """recurrentgemma: prefill collects the RG-LRU scan state, so decode
+    continues from position S exactly where decode-from-0 lands."""
+    cfg = dataclasses.replace(C.get_smoke("recurrentgemma-9b"),
+                              dtype="float32")
+    params = _params(cfg)
+    b, s, p = 2, 12, 6
+    tokens = jax.random.randint(jax.random.PRNGKey(1), (b, s), 0, cfg.vocab)
+    full = T.forward(params, cfg, tokens)
+    jd = jax.jit(lambda st, tok: D.decode_step(params, cfg, st, tok))
+    s0 = D.init_decode_state(params, cfg, b, max_len=s)
+    for t in range(p):
+        _, s0 = jd(s0, tokens[:, t])
+    lg, sp = D.prefill(params, cfg, tokens[:, :p], max_len=s)
+    assert jnp.max(jnp.abs(lg - full[:, p - 1])) < 3e-4
+    # recurrence states land where streaming left them
+    for seg0, segp in zip(s0["segments"], sp["segments"]):
+        for sub, blk in seg0.items():
+            if "rglru" in blk:
+                np.testing.assert_allclose(
+                    np.asarray(segp[sub]["rglru"]["h"]),
+                    np.asarray(blk["rglru"]["h"]), atol=2e-4)
+                np.testing.assert_allclose(
+                    np.asarray(segp[sub]["rglru"]["conv"]),
+                    np.asarray(blk["rglru"]["conv"]), atol=2e-4)
+    for t in range(p, s):
+        l0, s0 = jd(s0, tokens[:, t])
+        lp, sp = jd(sp, tokens[:, t])
+        assert jnp.max(jnp.abs(lp - full[:, t])) < 3e-4, t
+        assert jnp.max(jnp.abs(lp - l0)) < 3e-4, t
+
+
+@pytest.mark.parametrize("mode,stride", [("pp", 2), ("fp", 2), ("pp", 4),
+                                         ("fp", 4)])
+def test_soi_short_prompt_prefill(mode, stride):
+    """Prompts shorter than the stride still produce the partial states
+    token-by-token streaming would hold (frame 0 completes at t=0)."""
+    cfg = dataclasses.replace(Q.smoke_config(soi=mode), dtype="float32")
+    cfg = dataclasses.replace(cfg,
+                              soi=dataclasses.replace(cfg.soi, stride=stride))
+    params = _params(cfg)
+    b, s = 2, 12
+    tokens = jax.random.randint(jax.random.PRNGKey(1), (b, s), 0, cfg.vocab)
+    full = T.forward(params, cfg, tokens)
+    jstep = jax.jit(lambda st, tok: generate_step(params, cfg, st, tok))
+    # streaming-from-0 reference states after p tokens
+    for p in range(1, stride):
+        st_ref = D.init_decode_state(params, cfg, b, max_len=s)
+        for t in range(p):
+            _, st_ref = jstep(st_ref, tokens[:, t])
+        lg, st = D.prefill(params, cfg, tokens[:, :p], max_len=s)
+        assert jnp.max(jnp.abs(lg - full[:, p - 1])) < 5e-4, (mode, p)
+        # the online partial states match streaming exactly
+        np.testing.assert_allclose(np.asarray(st["queue"]),
+                                   np.asarray(st_ref["queue"]), atol=2e-4)
+        np.testing.assert_allclose(np.asarray(st["conv_buf"]),
+                                   np.asarray(st_ref["conv_buf"]), atol=2e-4)
+        assert np.array_equal(np.asarray(st["t"]), np.asarray(st_ref["t"]))
+        for t in range(p, s):
+            lg, st = jstep(st, tokens[:, t])
+            assert jnp.max(jnp.abs(lg - full[:, t])) < 5e-4, (mode, p, t)
+
+
+def test_serving_guards_raise_not_assert():
+    """The SOI guards survive `python -O`: they are exceptions, not asserts."""
+    cfg = dataclasses.replace(Q.smoke_config(soi="pp"), dtype="float32")
+    params = _params(cfg)
+    state = D.init_decode_state(params, cfg, 1, max_len=8)
+    with pytest.raises(NotImplementedError, match="repro.engine"):
+        D.decode_step(params, cfg, state, jnp.zeros((1,), jnp.int32))
+    with pytest.raises(ValueError, match="non-empty"):
+        D.prefill(params, cfg, jnp.zeros((1, 0), jnp.int32), max_len=8)
+    with pytest.raises(NotImplementedError, match="decoder-only"):
+        D.prefill(params, cfg, jnp.zeros((1, 4), jnp.int32), max_len=8,
+                  prefix_embeds=jnp.zeros((1, 2, cfg.d_model)))
