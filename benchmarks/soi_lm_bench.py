@@ -75,6 +75,27 @@ def run(csv=False, out_json="BENCH_soi_lm.json"):
         lg, st = jsoi(params_soi, st, tok)
     t_soi = (time.time() - t0) / 20
 
+    # lax.cond middle-skip, measured per branch: hold the clock vector fixed
+    # (the returned state is discarded) so EVERY timed step takes the same
+    # branch — all-phase-0 executes the middle, all-off-phase skips it. The
+    # gap is the runtime saving phase-aligned slot scheduling can bank; if
+    # the off-phase step is NOT faster than phase-0 (or the phase-0 step not
+    # slower than std+middle), the cond's skip is being lost in lowering —
+    # the regression BENCH_soi_lm.json history is watching for.
+    def _time_fixed_phase(state, n=50):
+        lg, _ = jsoi(params_soi, state, tok)
+        jax.block_until_ready(lg)
+        t0 = time.time()
+        for _ in range(n):
+            lg, _ = jsoi(params_soi, state, tok)
+            jax.block_until_ready(lg)
+        return (time.time() - t0) / n
+
+    st_p0 = dict(state_soi, t=jnp.zeros((b,), jnp.int32))
+    st_off = dict(state_soi, t=jnp.ones((b,), jnp.int32))
+    t_phase0 = _time_fixed_phase(st_p0)
+    t_offphase = _time_fixed_phase(st_off)
+
     rows = {
         "std_step_flops": f_std,
         # static count of the ONE program: includes BOTH lax.cond branches;
@@ -88,6 +109,9 @@ def run(csv=False, out_json="BENCH_soi_lm.json"):
     }
     rows["wallclock_step_std_s"] = t_std
     rows["wallclock_step_soi_s"] = t_soi
+    rows["wallclock_step_soi_phase0_s"] = t_phase0
+    rows["wallclock_step_soi_offphase_s"] = t_offphase
+    rows["offphase_speedup_vs_phase0_x"] = t_phase0 / t_offphase
     with open(out_json, "w") as f:
         json.dump(rows, f, indent=2)
     if csv:

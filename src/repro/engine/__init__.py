@@ -72,8 +72,44 @@ fewer resident pages. The compromise: a paged engine makes host allocation
 decisions between steps, so one engine instance drives one live decode
 state through its own ``insert``/``generate``/``free_slot`` calls.
 
+Bucketed and chunked prefill (O(1) prefill compiles)
+----------------------------------------------------
+
+Plain ``prefill`` jits one program per *tensor shape*, i.e. per distinct
+prompt length — real traffic (every request a different length) would pay a
+multi-second retrace at the front door per new length. Two policies bound
+the compile count; both honor the ``true_length`` contract: the ``Prefix``
+carries the REAL token count, the decode clock starts there, the first
+token comes from the logits at ``true_length - 1``, paged insert allocates
+pages by it (pad rows land on the null page), and pad never enters the
+attention caches (``pos`` stays -1), the SOI conv window, the extrapolation
+queue, or the compressed-middle frames.
+
+* **Bucketed** (``SOIEngine(..., prefill_buckets="pow2"|lengths)``, the
+  default): prompts pad to the next bucket boundary and the bucket's
+  compiled program masks by true length — at most ``len(buckets)`` prefill
+  compiles ever, results bit-equal to unpadded prefill (regressions:
+  ``tests/test_prefill.py``).
+* **Chunked** (``SOIEngine(..., prefill_chunk=C)``): ONE compiled program
+  appends ``C`` tokens to the caches at a traced position offset; the host
+  loops it ``ceil(true_length / C)`` times. Chunk attention reads the cache
+  rows of earlier chunks through the same absolute-position masks decode
+  uses, so this is also the substrate for prefix-cache page sharing and
+  prefill/decode interleaving. SOI configs require ``stride | C``: the conv
+  carry (``conv_buf``) supplies cross-chunk window context and the
+  extrapolation queue carries the previous chunk's last frame (what fp mode
+  serves at each chunk's first position).
+
+Configs that can't mask pad (prefix-LM / bidirectional attention, where
+pad inside the prefix window is visible to EVERY query; RG-LRU / RWKV scan
+states; MoE expert capacity — see
+``repro.models.decode.supports_masked_prefill``) fall back to exact-length
+prefill; ``SOIEngine.prefill_compiles`` counts traces so serving
+dashboards (and ``launch/serve.py``) surface recompiles either way.
+
 Follow-ons recorded in ROADMAP.md: multi-host prefill/generate
-disaggregation, chunked prefill, phase-aligned slot scheduling.
+disaggregation, prefix-cache page sharing over chunked prefill,
+phase-aligned slot scheduling.
 """
 
 from repro.engine.api import Engine, Prefix, ResultTokens, SlotData

@@ -58,12 +58,25 @@ class ResultTokens:
 @dataclasses.dataclass(frozen=True)
 class Prefix:
     """Result of prefilling one request: batch-1 decode caches positioned at
-    ``length``, plus the first generated token (greedy over the prompt's last
-    logits)."""
-    state: Any            # batch-1 model decode state (t == length)
+    ``true_length``, plus the first generated token (greedy over the
+    prompt's last real position's logits).
+
+    Bucketed/chunked prefill pads the prompt to a bucket or chunk boundary;
+    ``true_length`` is the REAL token count — the decode clock, the paged
+    page allocation, and the first-token logits all follow it (pad rows stay
+    masked in the caches and never become readable). ``length`` mirrors it
+    for unpadded prefills and remains the prompt-length field callers key
+    accounting off.
+    """
+    state: Any            # batch-1 model decode state (t == true_length)
     first_token: Any      # (1,) int32
-    logits: Any           # (1, V) float32 — last prompt position
+    logits: Any           # (1, V) float32 — last real prompt position
     length: int
+    true_length: Optional[int] = None
+
+    def __post_init__(self):
+        if self.true_length is None:
+            object.__setattr__(self, "true_length", self.length)
 
 
 class Engine(abc.ABC):

@@ -166,8 +166,10 @@ def insert_state(cfg: ModelCfg, dst: dict, src: dict, slot, *,
 
 
 def _scrub_group(seg_caches, segs, rows):
-    """Mark the released pages' cache rows empty (pos = -1) so a later
-    owner's reads can't resurrect a freed request's tokens."""
+    """Mark released cache rows empty (pos = -1) so a later owner's reads
+    can't resurrect a freed request's tokens. ``rows`` indexes the leading
+    cache axis: released page ids into the shared pools (paged engines) or
+    the freed slot's batch row in the dense rings (dense engines)."""
     out = []
     for seg_c, seg in zip(seg_caches, segs):
         axis = 1 if seg.scan else 0
@@ -201,12 +203,29 @@ class SOIEngine(Engine):
     but bit-exact vs dense, so correctness never depends on pool sizing.
     Servers shrink the pool to the resident token population; the page
     tables then enforce it, raising when the pool is truly exhausted.
+
+    Prefill compiles O(1) programs regardless of traffic:
+
+    * ``prefill_buckets`` (default "pow2") pads prompts to a bucket length
+      and masks the pad by TRUE length — one compiled prefill per bucket
+      instead of one per distinct prompt length, bit-exact vs unpadded;
+    * ``prefill_chunk=C`` switches to chunked prefill: ONE compiled program
+      appends C tokens to the caches at a traced position offset, looped on
+      the host — the substrate for prefix-cache page sharing and
+      prefill/decode interleaving.
+
+    Configs that can't mask pad — prefix-LM / bidirectional attention (pad
+    inside the prefix window is visible to every query), recurrence scan
+    states, MoE expert capacity; see
+    ``repro.models.decode.supports_masked_prefill`` — silently fall back to
+    exact-length prefill; an explicit ``prefill_chunk`` raises.
     """
 
     def __init__(self, cfg: ModelCfg, *, max_concurrent_decodes: int = 8,
                  max_len: int = 256, constrain=_noc, paged: bool = False,
                  page_size: int = 16, n_pages: int | None = None,
-                 n_pages_mid: int | None = None):
+                 n_pages_mid: int | None = None,
+                 prefill_buckets="pow2", prefill_chunk: int | None = None):
         self.cfg = cfg
         self.max_len = max_len
         self._slots = max_concurrent_decodes
@@ -214,6 +233,38 @@ class SOIEngine(Engine):
         self._paged = bool(paged)
         self._spec = None
         self._pt_outer = self._pt_mid = None
+        if cfg.learned_pos_len and max_len > cfg.learned_pos_len:
+            # jnp.take clamps out-of-bounds rows, so decodes past the table
+            # would silently reuse the LAST position embedding forever —
+            # fail at construction, not garbage at token learned_pos_len
+            raise ValueError(
+                f"max_len {max_len} exceeds config '{cfg.name}'s learned "
+                f"position table ({cfg.learned_pos_len} rows): positions "
+                f">= {cfg.learned_pos_len} would silently clamp to the last "
+                f"embedding — shrink max_len or grow learned_pos_len")
+        self._masked_ok = D.supports_masked_prefill(cfg)
+        self._buckets = self._resolve_buckets(prefill_buckets)
+        self._chunk = int(prefill_chunk) if prefill_chunk else None
+        if self._chunk is not None:
+            if not self._masked_ok:
+                raise ValueError(
+                    f"chunked prefill is unsupported for config "
+                    f"'{cfg.name}' (prefix-LM/bidirectional attention, "
+                    f"recurrence, or MoE; see "
+                    f"repro.models.decode.supports_masked_prefill)")
+            if cfg.encoder is not None or cfg.prefix_lm:
+                raise ValueError("chunked prefill supports decoder-only "
+                                 "causal token stacks")
+            if cfg.soi is not None and self._chunk % cfg.soi.stride:
+                raise ValueError(
+                    f"prefill_chunk {self._chunk} must be a multiple of "
+                    f"the SOI stride {cfg.soi.stride}")
+            if self._chunk > max_len:
+                raise ValueError(f"prefill_chunk {self._chunk} exceeds "
+                                 f"max_len {max_len}")
+        # traces of the jitted prefill programs (one per bucket, or exactly
+        # one chunk program): the serving-visible recompile counter
+        self.prefill_compiles = 0
         if self._paged:
             outer_len, mid_len = D.paged_group_lens(cfg, max_len)
             if not outer_len and not mid_len:
@@ -250,12 +301,26 @@ class SOIEngine(Engine):
                     "tokens": ds["tokens"].at[slot].set(first_token[0]),
                     "active": ds["active"].at[slot].set(True)}
 
-        def _prefill(params, tokens, encoder_frames):
+        def _prefill(params, tokens, true_length, encoder_frames):
+            self.prefill_compiles += 1      # body runs once per trace
             return D.prefill(params, cfg, tokens,
                              encoder_frames=encoder_frames,
-                             max_len=max_len, constrain=constrain)
+                             max_len=max_len, true_length=true_length,
+                             constrain=constrain)
+
+        def _prefill_chunk(params, ms, tokens, offset, true_length):
+            self.prefill_compiles += 1      # traces ONCE for all chunks
+            return D.prefill_chunk(params, cfg, ms, tokens, offset,
+                                   true_length, constrain=constrain)
+
+        def _fresh_prefix_state(params):
+            return D.init_decode_state(params, cfg, 1, max_len=max_len)
 
         def _release(ds, slot, rows):
+            # ``rows`` indexes what gets scrubbed: released page rows in the
+            # pools (paged) or the slot's own batch row (dense) — same
+            # ``pos = -1`` hygiene either way, so a freed request's tokens
+            # are unreadable even before the slot is re-inserted.
             m = dict(ds["model"])
             if cfg.soi is None:
                 if "outer" in rows:
@@ -276,7 +341,43 @@ class SOIEngine(Engine):
         self._gen = jax.jit(_gen, donate_argnums=(1,))
         self._ins = jax.jit(_ins, donate_argnums=(0,))
         self._prefill_fn = jax.jit(_prefill)
+        self._prefill_chunk_fn = jax.jit(_prefill_chunk, donate_argnums=(1,))
+        self._fresh_prefix_fn = jax.jit(_fresh_prefix_state)
         self._release_fn = jax.jit(_release, donate_argnums=(0,))
+
+    def _resolve_buckets(self, policy):
+        """Prefill bucket lengths: None (exact-length, one compile per
+        distinct prompt length), "pow2" (powers of two up to max_len — the
+        default), or an explicit iterable of lengths. Configs that can't
+        honor true-length masking (recurrence/MoE) fall back to exact."""
+        if policy is None or not self._masked_ok:
+            return None
+        if policy == "pow2":
+            out, b = [], 16
+            while b < self.max_len:
+                out.append(b)
+                b *= 2
+            out.append(self.max_len)
+            return tuple(out)
+        buckets = sorted({int(x) for x in policy})
+        if not buckets or buckets[0] < 1:
+            raise ValueError(f"invalid prefill buckets {policy}")
+        if buckets[-1] > self.max_len:
+            raise ValueError(f"prefill bucket {buckets[-1]} exceeds "
+                             f"max_len {self.max_len}")
+        if buckets[-1] < self.max_len:
+            buckets.append(self.max_len)   # every admissible prompt fits
+        return tuple(buckets)
+
+    @property
+    def prefill_buckets(self):
+        """Active bucket lengths (None = exact-length prefill)."""
+        return self._buckets
+
+    @property
+    def prefill_chunk(self):
+        """Active chunk size (None = whole-prompt prefill)."""
+        return self._chunk
 
     @property
     def max_concurrent_decodes(self) -> int:
@@ -313,7 +414,8 @@ class SOIEngine(Engine):
                 "tokens": jnp.zeros((self._slots,), jnp.int32),
                 "active": jnp.zeros((self._slots,), bool)}
 
-    def prefill(self, params, tokens, encoder_frames=None) -> Prefix:
+    def prefill(self, params, tokens, encoder_frames=None,
+                true_length: int | None = None) -> Prefix:
         tokens = jnp.asarray(tokens)
         if tokens.ndim == 1:
             tokens = tokens[None]
@@ -329,10 +431,57 @@ class SOIEngine(Engine):
             raise ValueError(
                 f"prompt length {tokens.shape[1]} exceeds engine max_len "
                 f"{self.max_len}")
-        logits, ms = self._prefill_fn(params, tokens, encoder_frames)
+        tl = int(true_length) if true_length is not None \
+            else int(tokens.shape[1])
+        if not 0 < tl <= tokens.shape[1]:
+            raise ValueError(f"true_length {tl} outside (0, "
+                             f"{tokens.shape[1]}]")
+        if self._chunk is not None:
+            if encoder_frames is not None:
+                raise ValueError("chunked prefill supports decoder-only "
+                                 "stacks (no encoder_frames)")
+            return self._prefill_chunked(params, tokens, tl)
+        if self._buckets is not None:
+            bucket = next(b for b in self._buckets if b >= tl)
+            pad = bucket - int(tokens.shape[1])
+            if pad > 0:
+                tokens = jnp.pad(tokens, ((0, 0), (0, pad)))
+            elif pad < 0:
+                tokens = tokens[:, :bucket]
+            logits, ms = self._prefill_fn(params, tokens,
+                                          jnp.asarray(tl, jnp.int32),
+                                          encoder_frames)
+        else:
+            if tl != tokens.shape[1]:
+                tokens = tokens[:, :tl]   # exact-length path: drop the pad
+            logits, ms = self._prefill_fn(params, tokens, None,
+                                          encoder_frames)
         first = jnp.argmax(logits, axis=-1).astype(jnp.int32)
         return Prefix(state=ms, first_token=first, logits=logits,
-                      length=int(tokens.shape[1]))
+                      length=tl, true_length=tl)
+
+    def _prefill_chunked(self, params, tokens, tl: int) -> Prefix:
+        """Host loop over the ONE compiled chunk program: pad the prompt to
+        a chunk multiple, append chunk by chunk at growing offsets, keep the
+        logits of the chunk holding position true_length-1 (chunks past it
+        would be all-pad no-ops and are skipped)."""
+        c = self._chunk
+        n = (tl - 1) // c + 1
+        pad = n * c - int(tokens.shape[1])
+        if pad > 0:
+            tokens = jnp.pad(tokens, ((0, 0), (0, pad)))
+        elif pad < 0:
+            tokens = tokens[:, :n * c]   # trailing all-pad chunks: no-ops
+        ms = self._fresh_prefix_fn(params)
+        tl_dev = jnp.asarray(tl, jnp.int32)
+        logits = None
+        for i in range(n):
+            logits, ms = self._prefill_chunk_fn(
+                params, ms, tokens[:, i * c:(i + 1) * c],
+                jnp.asarray(i * c, jnp.int32), tl_dev)
+        first = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        return Prefix(state=ms, first_token=first, logits=logits,
+                      length=tl, true_length=tl)
 
     def insert(self, prefix: Prefix, decode_state, slot: int):
         if not 0 <= int(slot) < self._slots:
@@ -343,13 +492,16 @@ class SOIEngine(Engine):
             return self._ins(decode_state, prefix.state, prefix.first_token,
                              jnp.asarray(slot, jnp.int32), None)
         s_i = int(slot)
-        frames = (-(-prefix.length // self.cfg.soi.stride)
+        # pages cover the TRUE prompt only: a bucketed/chunked prefix's pad
+        # rows map to the null page (masked on read, discarded on write)
+        true_len = prefix.true_length
+        frames = (-(-true_len // self.cfg.soi.stride)
                   if self.cfg.soi is not None else 0)
         if self._occupied[s_i]:
             # Pre-check capacity BEFORE evicting: free_slot donates the old
             # decode state, so failing after it would strand the caller with
             # invalidated buffers and a half-released slot.
-            for pt, need in ((self._pt_outer, prefix.length),
+            for pt, need in ((self._pt_outer, true_len),
                              (self._pt_mid, frames)):
                 if pt is not None and not pt.can_realloc(s_i, need):
                     raise RuntimeError(
@@ -361,7 +513,7 @@ class SOIEngine(Engine):
         try:
             if self._pt_outer is not None:
                 page_rows["outer"] = jnp.asarray(
-                    self._pt_outer.alloc_slot(s_i, prefix.length))
+                    self._pt_outer.alloc_slot(s_i, true_len))
             if self._pt_mid is not None:
                 page_rows["mid"] = jnp.asarray(
                     self._pt_mid.alloc_slot(s_i, frames))
@@ -376,7 +528,7 @@ class SOIEngine(Engine):
                 if pt is not None:
                     pt.release(s_i)
             raise
-        self._clock[s_i] = prefix.length
+        self._clock[s_i] = true_len
         self._occupied[s_i] = True
         return new_ds
 
@@ -402,8 +554,15 @@ class SOIEngine(Engine):
 
     def free_slot(self, decode_state, slot: int):
         if not self._paged:
-            return dict(decode_state,
-                        active=decode_state["active"].at[slot].set(False))
+            # scrub the slot's cache positions like the paged path scrubs
+            # released pages: a freed request's tokens must be unreadable —
+            # the slot's rows keep absorbing (masked, garbage) writes while
+            # free, and insert() rewrites them wholesale on reuse
+            s_i = jnp.asarray(int(slot), jnp.int32)
+            rows = {"outer": s_i}
+            if self.cfg.soi is not None:
+                rows["mid"] = s_i
+            return self._release_fn(decode_state, s_i, rows)
         s_i = int(slot)
         rows = {}
         if self._pt_outer is not None:

@@ -48,6 +48,22 @@ def flash_attention(q, k, v, *, causal=True, window=None, prefix_len=0,
         block_q=block_q, block_k=block_k)
 
 
+def chunk_attention(q, k, v, q_positions, k_positions, *, window=None,
+                    scale=None, logit_softcap=None):
+    """Chunked-prefill attention: C queries at absolute ``q_positions``
+    against cache+chunk K/V rows carrying absolute ``k_positions`` (-1 marks
+    empty ring slots). Position-based masking makes it layout-independent,
+    exactly like ``decode_attention`` — this IS the decode read generalized
+    to C queries. Reference path only for now (the score matrix materializes
+    at (B, H, C, Sk), fine for serving chunk sizes); a Pallas flash variant
+    that tiles Sk is the TPU follow-on.
+    """
+    return ref.naive_attention(q, k, v, causal=True, window=window,
+                               q_positions=q_positions,
+                               k_positions=k_positions, scale=scale,
+                               logit_softcap=logit_softcap)
+
+
 def decode_attention(q, k_cache, v_cache, cache_positions, q_position, *,
                      window=None, scale=None, logit_softcap=None,
                      block_k=1024):

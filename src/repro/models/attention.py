@@ -197,14 +197,22 @@ def _cache_write(cache: dict, t, **entries) -> dict:
 
 def attn_forward(p: dict, cfg: AttnCfg, x: Array, *, positions: Array,
                  prefix_len: int = 0, norm_eps: float = 1e-6,
-                 fill_cache: dict | None = None, kv_x: Array | None = None,
+                 fill_cache: dict | None = None, fill_true_length=None,
+                 kv_x: Array | None = None,
                  constrain=lambda x, axes: x):
     """Full-sequence attention. Returns (y, cache) — cache is None unless
-    ``fill_cache`` (a fresh decode cache) was passed (prefill mode)."""
+    ``fill_cache`` (a fresh decode cache) was passed (prefill mode).
+
+    ``fill_true_length`` (traced or static) marks the real prompt length of a
+    right-padded prefill batch: cache rows at positions beyond it stay empty
+    (``pos`` = -1), so bucketed prefill never makes pad tokens readable.
+    Causality already keeps pad out of the real positions' outputs."""
     b, s, d = x.shape
     if cfg.is_mla:
         return _mla_forward(p, cfg, x, positions=positions, norm_eps=norm_eps,
-                            fill_cache=fill_cache, constrain=constrain)
+                            fill_cache=fill_cache,
+                            fill_true_length=fill_true_length,
+                            constrain=constrain)
 
     src = x if kv_x is None else kv_x
     q = jnp.einsum("bsd,dhk->bshk", x, p["wq"])
@@ -242,37 +250,70 @@ def attn_forward(p: dict, cfg: AttnCfg, x: Array, *, positions: Array,
 
     cache = None
     if fill_cache is not None:
-        cache = _bulk_fill(fill_cache, positions, k=cache_k, v=cache_v)
+        cache = _bulk_fill(fill_cache, positions, fill_true_length,
+                           k=cache_k, v=cache_v)
     return y, cache
 
 
-def _bulk_fill(cache: dict, positions: Array, **entries) -> dict:
-    """Prefill: write a whole sequence into the (possibly smaller ring) cache."""
+def _bulk_fill(cache: dict, positions: Array, true_length=None,
+               **entries) -> dict:
+    """Prefill: write a from-position-0 sequence into the (possibly smaller
+    ring) cache.
+
+    ``true_length`` (traced or static) is the real prompt length inside a
+    right-padded batch; rows at positions >= it are pad and must never
+    become readable cache entries (their ``pos`` lane stays -1). The fill is
+    a *gather*, not a scatter: ring slot ``l`` takes the newest real
+    position ``p < true_length`` with ``p % s_cache == l`` — so the padded
+    fill of a prompt is bit-identical to the unpadded fill of the same
+    prompt, at any pad amount, including ring overflow (windowed caches).
+    """
     s_cache = cache["pos"].shape[1]
     s = positions.shape[-1]
+    tl = jnp.asarray(s if true_length is None else true_length, jnp.int32)
+    l = jnp.arange(s_cache, dtype=jnp.int32)
+    p = tl - 1 - ((tl - 1 - l) % s_cache)
+    valid = p >= 0
+    idx = jnp.clip(p, 0, s - 1)
     new = dict(cache)
-    if s <= s_cache:
-        for name, val in entries.items():
-            new[name] = jax.lax.dynamic_update_slice_in_dim(
-                cache[name], val.astype(cache[name].dtype), 0, axis=1)
-        pos2 = jnp.broadcast_to(positions, (cache["pos"].shape[0], s))
-        new["pos"] = jax.lax.dynamic_update_slice_in_dim(
-            cache["pos"], pos2.astype(jnp.int32), 0, axis=1)
-    else:
-        # keep the last s_cache tokens, ring-aligned so slot = pos % s_cache
-        start = s - s_cache
-        for name, val in entries.items():
-            tail = jax.lax.dynamic_slice_in_dim(val, start, s_cache, axis=1)
-            shift = (start % s_cache)
-            new[name] = jnp.roll(tail.astype(cache[name].dtype), shift, axis=1)
-        tailp = jnp.broadcast_to(positions[..., start:],
-                                 (cache["pos"].shape[0], s_cache))
-        new["pos"] = jnp.roll(tailp.astype(jnp.int32), start % s_cache, axis=1)
+    for name, val in entries.items():
+        g = jnp.take(val, idx, axis=1).astype(cache[name].dtype)
+        mask = valid.reshape((1, s_cache) + (1,) * (g.ndim - 2))
+        new[name] = jnp.where(mask, g, jnp.zeros_like(g))
+    pos_row = jnp.where(valid, p, -1)
+    new["pos"] = jnp.broadcast_to(pos_row,
+                                  cache["pos"].shape).astype(jnp.int32)
+    return new
+
+
+def _chunk_cache_merge(cache: dict, offset, end, **entries) -> dict:
+    """Merge one prefill chunk (positions [offset, offset+C)) into a ring
+    cache already holding earlier chunks.
+
+    ``end`` = min(offset + C, true_length): chunk rows at or past it are pad
+    and keep the cache's previous contents. Gather-based like ``_bulk_fill``
+    (scatter with C > s_cache ring collisions would be order-dependent):
+    ring slot ``l`` takes the newest position ``p < end`` with
+    ``p % s_cache == l`` — from this chunk when ``p >= offset``, otherwise
+    whatever earlier chunks left there.
+    """
+    s_cache = cache["pos"].shape[1]
+    c = next(iter(entries.values())).shape[1]
+    l = jnp.arange(s_cache, dtype=jnp.int32)
+    p = end - 1 - ((end - 1 - l) % s_cache)
+    from_chunk = p >= offset          # also rejects p < 0 (offset >= 0)
+    idx = jnp.clip(p - offset, 0, c - 1)
+    new = dict(cache)
+    for name, val in entries.items():
+        g = jnp.take(val, idx, axis=1).astype(cache[name].dtype)
+        mask = from_chunk.reshape((1, s_cache) + (1,) * (g.ndim - 2))
+        new[name] = jnp.where(mask, g, cache[name])
+    new["pos"] = jnp.where(from_chunk, p, cache["pos"]).astype(jnp.int32)
     return new
 
 
 def _mla_forward(p, cfg: AttnCfg, x, *, positions, norm_eps, fill_cache,
-                 constrain):
+                 fill_true_length=None, constrain=lambda x, axes: x):
     b, s, d = x.shape
     if cfg.q_lora:
         ql = norm_apply("rmsnorm", p["q_norm"],
@@ -301,8 +342,104 @@ def _mla_forward(p, cfg: AttnCfg, x, *, positions, norm_eps, fill_cache,
     y = jnp.einsum("bshk,hkd->bsd", out, p["wo"])
     cache = None
     if fill_cache is not None:
-        cache = _bulk_fill(fill_cache, positions, latent=latent, rope=k_rope)
+        cache = _bulk_fill(fill_cache, positions, fill_true_length,
+                           latent=latent, rope=k_rope)
     return y, cache
+
+
+# ---------------------------------------------------------------------------
+# Chunked prefill (C tokens appended at a position offset)
+# ---------------------------------------------------------------------------
+
+def attn_chunk(p: dict, cfg: AttnCfg, x: Array, cache: dict, positions,
+               true_length, *, norm_eps: float = 1e-6,
+               constrain=lambda x, axes: x):
+    """Chunked-prefill attention: ``x`` (B, C, d) at absolute ``positions``
+    ((C,) int32, traced) attends to the cache (earlier chunks) plus itself
+    (causally), then merges into the ring cache. Pad rows (positions >=
+    ``true_length``) are masked out of both the scores and the merge, so ONE
+    compiled chunk program serves every chunk of every prompt — offset and
+    true length are data. Returns (y, new_cache).
+    """
+    b, c, d = x.shape
+    if cfg.is_mla:
+        return _mla_chunk(p, cfg, x, cache, positions, true_length,
+                          norm_eps=norm_eps, constrain=constrain)
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"])
+    k = jnp.einsum("bsd,dhk->bshk", x, p["wk"])
+    v = jnp.einsum("bsd,dhk->bshk", x, p["wv"])
+    q = constrain(q, ("batch", "seq", "heads", "head_dim"))
+    k = constrain(k, ("batch", "seq", "kv_heads", "head_dim"))
+    v = constrain(v, ("batch", "seq", "kv_heads", "head_dim"))
+    if cfg.qk_norm:
+        q = norm_apply("rmsnorm", p["q_norm"], q, eps=norm_eps)
+        k = norm_apply("rmsnorm", p["k_norm"], k, eps=norm_eps)
+    if cfg.rope:
+        q = apply_rope(q, positions[None], pct=cfg.rope_pct,
+                       theta=cfg.rope_theta)
+        k = apply_rope(k, positions[None], pct=cfg.rope_pct,
+                       theta=cfg.rope_theta)
+    k_all = jnp.concatenate([cache["k"].astype(k.dtype), k], axis=1)
+    v_all = jnp.concatenate([cache["v"].astype(v.dtype), v], axis=1)
+    new_pos = jnp.where(positions < true_length, positions, -1)
+    kp = jnp.concatenate(
+        [cache["pos"], jnp.broadcast_to(new_pos, (b, c))], axis=1)
+    qp = jnp.broadcast_to(positions[None], (b, c))
+    out = kops.chunk_attention(q, k_all, v_all, qp, kp, window=cfg.window,
+                               scale=cfg.softmax_scale,
+                               logit_softcap=cfg.logit_softcap)
+    out = constrain(out, ("batch", "seq", "heads", "head_dim"))
+    y = jnp.einsum("bshk,hkd->bsd", out, p["wo"])
+    end = jnp.minimum(positions[0] + c, jnp.asarray(true_length, jnp.int32))
+    return y, _chunk_cache_merge(cache, positions[0], end, k=k, v=v)
+
+
+def _mla_chunk(p, cfg: AttnCfg, x, cache, positions, true_length, *,
+               norm_eps, constrain=lambda x, axes: x):
+    """Absorbed-matmul MLA over cache + chunk latents (C-query analogue of
+    ``_mla_decode``; scores materialize at (B, H, C, s_cache + C))."""
+    b, c, d = x.shape
+    if cfg.q_lora:
+        ql = norm_apply("rmsnorm", p["q_norm"],
+                        jnp.einsum("bsd,dl->bsl", x, p["wdq"]), eps=norm_eps)
+        q = jnp.einsum("bsl,lhk->bshk", ql, p["wuq"])
+    else:
+        q = jnp.einsum("bsd,dhk->bshk", x, p["wq"])
+    q = constrain(q, ("batch", "seq", "heads", "head_dim"))
+    q_nope, q_rope = q[..., :cfg.qk_nope], q[..., cfg.qk_nope:]
+    q_rope = apply_rope(q_rope, positions[None], theta=cfg.rope_theta)
+
+    dkv = jnp.einsum("bsd,dl->bsl", x, p["wdkv"])
+    latent = norm_apply("rmsnorm", p["kv_norm"], dkv[..., :cfg.kv_lora],
+                        eps=norm_eps)
+    k_rope = apply_rope(dkv[..., cfg.kv_lora:], positions[None],
+                        theta=cfg.rope_theta)
+
+    lat_all = jnp.concatenate([cache["latent"].astype(latent.dtype), latent],
+                              axis=1)
+    rope_all = jnp.concatenate([cache["rope"].astype(k_rope.dtype), k_rope],
+                               axis=1)
+    new_pos = jnp.where(positions < true_length, positions, -1)
+    kp = jnp.concatenate(
+        [cache["pos"], jnp.broadcast_to(new_pos, (b, c))], axis=1)
+    qp = jnp.broadcast_to(positions[None], (b, c))
+
+    q_lat = jnp.einsum("bshk,lhk->bshl", q_nope, p["wuk"])
+    scale = (cfg.qk_nope + cfg.qk_rope) ** -0.5
+    scores = (jnp.einsum("bshl,bkl->bhsk", q_lat.astype(jnp.float32),
+                         lat_all.astype(jnp.float32))
+              + jnp.einsum("bshk,bek->bhse", q_rope.astype(jnp.float32),
+                           rope_all.astype(jnp.float32))) * scale
+    allow = (kp[:, None] >= 0) & (kp[:, None] <= qp[..., None])
+    scores = jnp.where(allow[:, None], scores, -1e30)
+    probs = jax.nn.softmax(scores, axis=-1)
+    o_lat = jnp.einsum("bhsk,bkl->bshl", probs,
+                       lat_all.astype(jnp.float32)).astype(x.dtype)
+    out = jnp.einsum("bshl,lhk->bshk", o_lat, p["wuv"])
+    y = jnp.einsum("bshk,hkd->bsd", out, p["wo"])
+    end = jnp.minimum(positions[0] + c, jnp.asarray(true_length, jnp.int32))
+    return y, _chunk_cache_merge(cache, positions[0], end,
+                                 latent=latent, rope=k_rope)
 
 
 # ---------------------------------------------------------------------------

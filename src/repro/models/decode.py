@@ -451,8 +451,45 @@ def make_soi_steppers(params, cfg: ModelCfg):
 # Prefill
 # ---------------------------------------------------------------------------
 
+def supports_masked_prefill(cfg: ModelCfg) -> bool:
+    """Whether ``prefill(..., true_length=...)`` / ``prefill_chunk`` cover
+    this config. True-length masking relies on CAUSALITY to keep right-pad
+    out of the real positions' outputs; it breaks where pad can flow
+    backward or into non-positional state: prefix-LM / bidirectional
+    decoder attention lets every query see positions inside the prefix
+    window (incl. pad rows under ``frontend_len``), recurrent mixers
+    (RG-LRU, RWKV) would carry pad into their scan state, and MoE routing
+    lets pad compete for expert capacity. Those configs fall back to
+    exact-length prefill (one compile per distinct prompt length)."""
+    if cfg.prefix_lm:
+        return False
+    for seg in cfg.segments:
+        for b in seg.blocks:
+            if b.rglru is not None or b.rwkv is not None or b.moe is not None:
+                return False
+            if b.attn is not None and b.attn.kind == "bidir":
+                return False
+    return True
+
+
+def _prefill_clock(b: int, s: int, tl):
+    """Per-slot clocks after prefill: the TRUE prompt length (pad rows never
+    advance the clock)."""
+    return jnp.broadcast_to(jnp.asarray(s if tl is None else tl, jnp.int32),
+                            (b,))
+
+
+def _last_real(x, tl):
+    """(B, S, d) -> (B, d): hidden state of the last REAL position (the row
+    next-token logits are read from)."""
+    if tl is None:
+        return x[:, -1]
+    return jax.lax.dynamic_index_in_dim(x, tl - 1, axis=1, keepdims=False)
+
+
 def prefill(params, cfg: ModelCfg, tokens, *, prefix_embeds=None,
-            encoder_frames=None, max_len: int | None = None, constrain=_noc):
+            encoder_frames=None, max_len: int | None = None,
+            true_length=None, constrain=_noc):
     """Run the full-sequence path once, filling decode caches.
 
     Returns (last_logits (B, V), state) ready for a decode step at position S
@@ -464,8 +501,17 @@ def prefill(params, cfg: ModelCfg, tokens, *, prefix_embeds=None,
     left exactly where token-by-token streaming would have left them, so
     scattered decode continues bit-exactly.
 
+    ``true_length`` (static or TRACED) enables bucketed prefill: ``tokens``
+    is right-padded to a bucket length and only the first ``true_length``
+    positions are real. Causality keeps pad out of the real positions'
+    outputs; the cache fills, SOI partial states (conv window, extrapolation
+    queue, compressed-middle frames) and last-token logits are all read at
+    the true length, so the result is bit-identical to the unpadded prefill
+    — while the compiled program is shared by every prompt in the bucket.
+
     Recurrence layers (RG-LRU, RWKV) collect their final scan state, so
-    hybrid stacks (recurrentgemma) resume decode from position S too.
+    hybrid stacks (recurrentgemma) resume decode from position S too (those
+    stacks don't support ``true_length``; see ``supports_masked_prefill``).
     """
     from repro.models.transformer import cast_params
     params = cast_params(params, cfg)
@@ -475,6 +521,19 @@ def prefill(params, cfg: ModelCfg, tokens, *, prefix_embeds=None,
         # position to read logits from — reject instead of emitting a
         # malformed extrapolation queue / garbage logits
         raise ValueError("prefill requires a non-empty prompt")
+    tl = None
+    if true_length is not None:
+        if not supports_masked_prefill(cfg):
+            raise NotImplementedError(
+                f"config '{cfg.name}' cannot mask pad (prefix-LM/"
+                f"bidirectional attention, recurrence, or MoE — see "
+                f"supports_masked_prefill): length-masked (bucketed) "
+                f"prefill would leak pad tokens — prefill at the exact "
+                f"prompt length instead")
+        if prefix_embeds is not None:
+            raise NotImplementedError(
+                "true_length does not compose with prefix_embeds")
+        tl = jnp.asarray(true_length, jnp.int32)
     max_len = max_len or s
     dt = _dtype(cfg)
     enc_out = None
@@ -498,14 +557,14 @@ def prefill(params, cfg: ModelCfg, tokens, *, prefix_embeds=None,
             x, _, c = _segment_forward(seg_p, seg, cfg, x, positions=positions,
                                        prefix_len=prefix_len, enc_out=enc_out,
                                        collect_cache=True, batch=b,
-                                       max_len=max_len, constrain=constrain)
+                                       max_len=max_len, true_length=tl,
+                                       constrain=constrain)
             caches.append(c)
-        state = {"t": jnp.full((b,), x.shape[1], jnp.int32),
-                 "segments": caches}
+        state = {"t": _prefill_clock(b, x.shape[1], tl), "segments": caches}
         if enc_out is not None:
             state["cross_kv"] = _fill_cross_kv(params["segments"],
                                                cfg.segments, enc_out)
-        logits = _logits_one(params, cfg, x[:, -1])
+        logits = _logits_one(params, cfg, _last_real(x, tl))
         return logits, state
 
     if prefix_embeds is not None or enc_out is not None or cfg.prefix_lm:
@@ -518,35 +577,46 @@ def prefill(params, cfg: ModelCfg, tokens, *, prefix_embeds=None,
     st = soi.stride
     pre_s, mid_s, post_s = soi_partition(cfg)
     pre_p, mid_p, post_p = _split_segment_params(params["segments"], cfg)
-    state = {"t": jnp.full((b,), s, jnp.int32)}
+    state = {"t": _prefill_clock(b, s, tl)}
 
     pre_c = []
     for seg_p, seg in zip(pre_p, pre_s):
         x, _, c = _segment_forward(seg_p, seg, cfg, x, positions=positions,
                                    collect_cache=True, batch=b,
-                                   max_len=max_len, constrain=constrain)
+                                   max_len=max_len, true_length=tl,
+                                   constrain=constrain)
         pre_c.append(c)
     skip = x
-    # Streaming conv window: the last stride-1 pre-trunk frames (zero-padded
-    # for prompts shorter than the window) — what the online step would hold.
+    # Streaming conv window: the last stride-1 pre-trunk frames *before the
+    # true length* (zero-padded for prompts shorter than the window) — what
+    # the online step would hold after token true_length-1.
     if st > 1:
         padded = jnp.pad(x, ((0, 0), (st - 1, 0), (0, 0)))
-        state["conv_buf"] = padded[:, padded.shape[1] - (st - 1):]
+        if tl is None:
+            state["conv_buf"] = padded[:, padded.shape[1] - (st - 1):]
+        else:
+            state["conv_buf"] = jax.lax.dynamic_slice_in_dim(
+                padded, tl, st - 1, axis=1)
     else:
         state["conv_buf"] = x[:, :0]
 
     # Compressed middle: frame j sees tokens <= j*stride; a prompt of any
     # length yields ceil(S/stride) complete frames — the same set streaming
-    # would have computed by token S-1.
+    # would have computed by token S-1. Under padding, frames past
+    # ceil(true_length/stride) are phantoms built from pad tokens: they run
+    # through the middle (causality keeps them out of the real frames) but
+    # never enter the caches or the queue.
     from repro.models.transformer import soi_compress
     xc = soi_compress(params["soi"], soi, x)
     cpos = jnp.arange(xc.shape[1])[None]
     mid_len = soi_mid_len(max_len, st)
+    n_frames = None if tl is None else (tl + st - 1) // st
     mid_c = []
     for seg_p, seg in zip(mid_p, mid_s):
         xc, _, c = _segment_forward(seg_p, seg, cfg, xc, positions=cpos,
                                     collect_cache=True, batch=b,
-                                    max_len=mid_len, constrain=constrain)
+                                    max_len=mid_len, true_length=n_frames,
+                                    constrain=constrain)
         mid_c.append(c)
     # Extrapolation queue: stride copies of the last computed middle frame.
     # Any prompt of length >= 1 completes frame 0 (frame j sees tokens
@@ -557,7 +627,10 @@ def prefill(params, cfg: ModelCfg, tokens, *, prefix_embeds=None,
     if xc.shape[1] == 0:
         state["queue"] = jnp.zeros((b, st, xc.shape[-1]), xc.dtype)
     else:
-        state["queue"] = jnp.repeat(xc[:, -1:], st, axis=1)
+        last_frame = (xc[:, -1] if n_frames is None
+                      else jax.lax.dynamic_index_in_dim(
+                          xc, n_frames - 1, axis=1, keepdims=False))
+        state["queue"] = jnp.repeat(last_frame[:, None], st, axis=1)
 
     from repro.models.transformer import soi_extrapolate, soi_fuse
     xu = soi_extrapolate(soi, xc, s)
@@ -566,8 +639,196 @@ def prefill(params, cfg: ModelCfg, tokens, *, prefix_embeds=None,
     for seg_p, seg in zip(post_p, post_s):
         x, _, c = _segment_forward(seg_p, seg, cfg, x, positions=positions,
                                    collect_cache=True, batch=b,
-                                   max_len=max_len, constrain=constrain)
+                                   max_len=max_len, true_length=tl,
+                                   constrain=constrain)
         post_c.append(c)
     state["pre"], state["mid"], state["post"] = pre_c, mid_c, post_c
-    logits = _logits_one(params, cfg, x[:, -1])
+    logits = _logits_one(params, cfg, _last_real(x, tl))
     return logits, state
+
+
+# ---------------------------------------------------------------------------
+# Chunked prefill: ONE compiled chunk program, looped on the host
+# ---------------------------------------------------------------------------
+
+def _block_chunk(bp, b: BlockCfg, cfg: ModelCfg, x, cache, positions,
+                 true_length, *, constrain=_noc):
+    """One block over a prefill chunk (B, C, d): attention appends to the
+    ring cache at a position offset; MLP is per-position. Returns
+    (x, new_cache)."""
+    eps = cfg.norm_eps
+    if (b.rglru is not None or b.rwkv is not None or b.moe is not None
+            or b.cross_attn is not None):
+        raise NotImplementedError(
+            "chunked prefill covers attention+MLP decoder stacks "
+            "(recurrence / MoE / cross-attention blocks prefill whole)")
+    new_c = dict(cache)
+    if b.attn is not None:
+        h = norm_apply(b.norm, bp["ln1"], x, eps=eps)
+        h, new_c["attn"] = attn.attn_chunk(bp["attn"], b.attn, h,
+                                           cache["attn"], positions,
+                                           true_length, norm_eps=eps,
+                                           constrain=constrain)
+        x = x + h
+    if b.mlp is not None:
+        h = norm_apply(b.norm, bp["ln2"], x, eps=eps)
+        x = x + mlpm.mlp_apply(bp["mlp"], b.mlp, h, constrain=constrain)
+    return x, new_c
+
+
+def _segment_chunk(seg_p, seg_c, seg: Segment, cfg: ModelCfg, x, positions,
+                   true_length, *, constrain=_noc):
+    """Chunked-prefill analogue of ``_segment_decode``: same layer-scan
+    structure, C tokens wide."""
+    if seg.scan:
+        def body(x, inp):
+            gp, gc = inp
+            new_gc = {}
+            for i, b in enumerate(seg.blocks):
+                x, new_gc[f"sub{i}"] = _block_chunk(
+                    gp[f"sub{i}"], b, cfg, x, gc[f"sub{i}"], positions,
+                    true_length, constrain=constrain)
+            return x, new_gc
+
+        return jax.lax.scan(body, x, (seg_p, seg_c))
+    new_list = []
+    for j, (bp, bc) in enumerate(zip(seg_p, seg_c)):
+        b = seg.blocks[j % len(seg.blocks)]
+        x, nc = _block_chunk(bp, b, cfg, x, bc, positions, true_length,
+                             constrain=constrain)
+        new_list.append(nc)
+    return x, new_list
+
+
+def prefill_chunk(params, cfg: ModelCfg, state: dict, tokens, offset,
+                  true_length, *, constrain=_noc):
+    """Append one prefill chunk to the decode state's caches.
+
+    ``tokens``: (B, C) at absolute positions [offset, offset+C);
+    ``offset`` / ``true_length`` are TRACED scalars, so ONE compiled chunk
+    program serves every chunk of every prompt — the host loops it::
+
+        state = init_decode_state(params, cfg, 1, max_len=L)
+        for i in range(ceil(padded_len / C)):
+            logits, state = prefill_chunk(params, cfg, state,
+                                          tokens[:, i*C:(i+1)*C], i*C, tl)
+
+    Rows at positions >= ``true_length`` are pad: masked out of the cache
+    merges, the SOI conv window / extrapolation queue, and the compressed-
+    middle frames, so a chunk that is entirely pad is a no-op. Returns
+    (logits, new_state): logits are next-token logits read at position
+    ``true_length - 1`` — meaningful only for the chunk containing it (the
+    host keeps that one). The state's clock lands on ``true_length``.
+
+    SOI configs additionally require ``C % stride == 0`` and chunk-aligned
+    offsets, so compression windows never straddle a chunk asymmetrically:
+    the conv carry (``state["conv_buf"]``) supplies the stride-1 frames of
+    left context, exactly like the streaming step.
+    """
+    from repro.models.transformer import cast_params
+    params = cast_params(params, cfg)
+    b, c = tokens.shape
+    if cfg.encoder is not None or cfg.prefix_lm:
+        raise NotImplementedError(
+            "chunked prefill supports decoder-only causal token stacks")
+    if not supports_masked_prefill(cfg):
+        raise NotImplementedError(
+            f"config '{cfg.name}' cannot mask pad (prefix-LM/bidirectional "
+            f"attention, recurrence, or MoE — see supports_masked_prefill): "
+            f"chunked prefill would leak pad tokens — prefill whole instead")
+    from repro.models.transformer import _embed_tokens
+    offset = jnp.asarray(offset, jnp.int32)
+    tl = jnp.asarray(true_length, jnp.int32)
+    positions = offset + jnp.arange(c, dtype=jnp.int32)
+    x = _embed_tokens(params, cfg, tokens, constrain, positions=positions)
+    new_state = dict(state)
+    new_state["t"] = jnp.broadcast_to(tl, (b,))
+
+    if cfg.soi is None:
+        new_segments = []
+        for seg_p, seg_c, seg in zip(params["segments"], state["segments"],
+                                     cfg.segments):
+            x, nc = _segment_chunk(seg_p, seg_c, seg, cfg, x, positions, tl,
+                                   constrain=constrain)
+            new_segments.append(nc)
+        new_state["segments"] = new_segments
+        li = jnp.clip(tl - 1 - offset, 0, c - 1)
+        last = jax.lax.dynamic_index_in_dim(x, li, axis=1, keepdims=False)
+        return _logits_one(params, cfg, last), new_state
+
+    soi = cfg.soi
+    st = soi.stride
+    if c % st:
+        raise ValueError(f"SOI chunked prefill needs chunk size {c} to be a "
+                         f"multiple of the stride {st}")
+    pre_s, mid_s, post_s = soi_partition(cfg)
+    pre_p, mid_p, post_p = _split_segment_params(params["segments"], cfg)
+    soi_p = params["soi"]
+
+    new_pre = []
+    for seg_p, seg_c, seg in zip(pre_p, state["pre"], pre_s):
+        x, nc = _segment_chunk(seg_p, seg_c, seg, cfg, x, positions, tl,
+                               constrain=constrain)
+        new_pre.append(nc)
+    new_state["pre"] = new_pre
+    skip = x
+
+    # Compression across the chunk: the conv carry holds the stride-1
+    # pre-trunk frames preceding the chunk, so window j*stride-(st-1)..j*st
+    # is contiguous in [carry; x]. Chunk-aligned offsets (st | offset) make
+    # the C/st windows exactly tile the first C rows of the concat.
+    concatx = jnp.concatenate([state["conv_buf"].astype(x.dtype), x], axis=1)
+    n_cf = c // st
+    frames_in = concatx[:, :c].reshape(b, n_cf, st, x.shape[-1])
+    xm = jnp.einsum("bfkd,kde->bfe", frames_in,
+                    soi_p["compress"].astype(x.dtype))
+    j0 = offset // st
+    fpos = j0 + jnp.arange(n_cf, dtype=jnp.int32)
+    n_true = (tl + st - 1) // st      # frames the TRUE prompt completes
+    new_mid = []
+    for seg_p, seg_c, seg in zip(mid_p, state["mid"], mid_s):
+        xm, nc = _segment_chunk(seg_p, seg_c, seg, cfg, xm, fpos, n_true,
+                                constrain=constrain)
+        new_mid.append(nc)
+    new_state["mid"] = new_mid
+
+    # Conv window carry -> last st-1 pre-trunk rows BEFORE the true length.
+    # In concat coordinates token a sits at a - offset + (st-1), so the
+    # window ending at min(offset+C, tl)-1 starts at clip(tl-offset, 0, C);
+    # an all-pad chunk clips to 0 — which re-slices the carry unchanged.
+    if st > 1:
+        start = jnp.clip(tl - offset, 0, c)
+        new_state["conv_buf"] = jax.lax.dynamic_slice_in_dim(
+            concatx, start, st - 1, axis=1).astype(state["conv_buf"].dtype)
+    # Queue: stride copies of the newest TRUE frame — a running carry, so
+    # every chunk holding at least one real frame advances it (fp reads the
+    # previous chunk's last frame back out of it, below); frames past the
+    # true length never enter, and all-pad chunks keep it frozen.
+    lvi = jnp.clip(n_true - 1 - j0, 0, n_cf - 1)
+    has_real = j0 < n_true
+    last_frame = jax.lax.dynamic_index_in_dim(xm, lvi, axis=1, keepdims=False)
+    new_q = jnp.repeat(last_frame[:, None], st, axis=1)
+    new_state["queue"] = jnp.where(has_real,
+                                   new_q.astype(state["queue"].dtype),
+                                   state["queue"])
+
+    # Extrapolate + fuse for the chunk's own positions. pp: position p uses
+    # frame p//st — all inside this chunk. fp: frame (p-1)//st — position
+    # `offset` needs the PREVIOUS chunk's last frame, which is exactly the
+    # queue head carried into this call (zeros at offset 0, matching
+    # soi_extrapolate's zero pad).
+    up = jnp.repeat(xm, st, axis=1)
+    if soi.mode == "fp":
+        prev = state["queue"][:, :1].astype(up.dtype)
+        up = jnp.concatenate([prev, up[:, :-1]], axis=1)
+    from repro.models.transformer import soi_fuse
+    x = soi_fuse(soi_p, up, skip)
+    new_post = []
+    for seg_p, seg_c, seg in zip(post_p, state["post"], post_s):
+        x, nc = _segment_chunk(seg_p, seg_c, seg, cfg, x, positions, tl,
+                               constrain=constrain)
+        new_post.append(nc)
+    new_state["post"] = new_post
+    li = jnp.clip(tl - 1 - offset, 0, c - 1)
+    last = jax.lax.dynamic_index_in_dim(x, li, axis=1, keepdims=False)
+    return _logits_one(params, cfg, last), new_state

@@ -165,17 +165,31 @@ def _noc(x, axes):
 
 def _block_apply(p: dict, b: BlockCfg, cfg: ModelCfg, x, *, positions,
                  prefix_len=0, enc_out=None, fill_cache=None,
-                 constrain=_noc, rwkv_prev=None):
-    """Full-sequence block. Returns (x, aux_loss, cache_out)."""
+                 fill_true_length=None, constrain=_noc, rwkv_prev=None):
+    """Full-sequence block. Returns (x, aux_loss, cache_out).
+
+    ``fill_true_length`` masks a right-padded prefill's pad rows out of the
+    cache fill (bucketed prefill). Recurrent mixers and MoE can't honor it —
+    pad tokens would enter the scan state / expert-capacity race — so the
+    masked path is gated to attention+MLP stacks (see
+    ``repro.models.decode.supports_masked_prefill``).
+    """
     aux = 0.0
     cache_out = {}
     eps = cfg.norm_eps
+    if fill_true_length is not None and (b.rglru is not None
+                                         or b.rwkv is not None
+                                         or b.moe is not None):
+        raise NotImplementedError(
+            "length-masked prefill covers attention+MLP stacks only: "
+            "recurrence states and MoE routing would absorb pad tokens")
     if b.attn is not None:
         h = norm_apply(b.norm, p["ln1"], x, eps=eps)
         h, c = attn.attn_forward(
             p["attn"], b.attn, h, positions=positions, prefix_len=prefix_len,
             norm_eps=eps,
             fill_cache=None if fill_cache is None else fill_cache.get("attn"),
+            fill_true_length=fill_true_length,
             constrain=constrain)
         x = x + h
         if c is not None:
@@ -222,7 +236,7 @@ def _block_apply(p: dict, b: BlockCfg, cfg: ModelCfg, x, *, positions,
 
 def _segment_forward(seg_p, seg: Segment, cfg: ModelCfg, x, *, positions,
                      prefix_len=0, enc_out=None, collect_cache=False,
-                     batch=None, max_len=0, constrain=_noc):
+                     batch=None, max_len=0, true_length=None, constrain=_noc):
     """Apply one segment (scanned or unrolled). Returns (x, aux, caches)."""
     dt = _dtype(cfg)
 
@@ -237,6 +251,7 @@ def _segment_forward(seg_p, seg: Segment, cfg: ModelCfg, x, *, positions,
             x, a, c = _block_apply(gp[f"sub{i}"], b, cfg, x,
                                    positions=positions, prefix_len=prefix_len,
                                    enc_out=enc_out, fill_cache=fill,
+                                   fill_true_length=true_length,
                                    constrain=constrain)
             aux = aux + a
             caches[f"sub{i}"] = c
@@ -281,7 +296,9 @@ def _segment_forward(seg_p, seg: Segment, cfg: ModelCfg, x, *, positions,
                         if b.attn is not None else None}
             x, a, c = _block_apply(bp, b, cfg, x, positions=positions,
                                    prefix_len=prefix_len, enc_out=enc_out,
-                                   fill_cache=fill, constrain=constrain)
+                                   fill_cache=fill,
+                                   fill_true_length=true_length,
+                                   constrain=constrain)
             aux = aux + a
             caches.append(c)
         return x, aux, caches
@@ -366,12 +383,17 @@ def soi_fuse(soi_p, xu, skip):
 # Forward / loss
 # ---------------------------------------------------------------------------
 
-def _embed_tokens(params, cfg: ModelCfg, tokens, constrain=_noc):
+def _embed_tokens(params, cfg: ModelCfg, tokens, constrain=_noc,
+                  positions=None):
+    """``positions`` ((S,) absolute, possibly traced) overrides the default
+    from-zero learned-position rows — chunked prefill embeds mid-sequence."""
     x = jnp.take(params["embed"], tokens, axis=0).astype(_dtype(cfg))
     if cfg.embed_scale:
         x = x * jnp.asarray(math.sqrt(cfg.d_model), _dtype(cfg))
     if cfg.learned_pos_len:
-        x = x + params["pos_embed"][:tokens.shape[1]].astype(x.dtype)
+        pe = (params["pos_embed"][:tokens.shape[1]] if positions is None
+              else jnp.take(params["pos_embed"], positions, axis=0))
+        x = x + pe.astype(x.dtype)
     return constrain(x, ("batch", "seq", "embed_act"))
 
 

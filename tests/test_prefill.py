@@ -1,0 +1,317 @@
+"""Bucketed + chunked prefill: O(1) compiles without changing a single bit
+that decode can observe.
+
+The structural claims under test:
+  * length-masked (bucketed) prefill — pad to a bucket, mask by true length
+    — reproduces the unpadded prefill's decode state and logits for plain,
+    SOI pp, and SOI fp configs, at lengths on / below / across bucket
+    boundaries (incl. S < stride and windowed-ring overflow);
+  * chunked prefill — ONE compiled chunk program appending at a position
+    offset — reproduces the whole-prompt prefill (incl. the SOI conv
+    window / extrapolation queue carries across chunk boundaries, and MLA
+    latent caches);
+  * serving N distinct prompt lengths compiles at most len(buckets)
+    (bucketed) or exactly 1 (chunked) prefill program — the CI recompile
+    guard;
+  * serving correctness fixes ride along: the learned-position-table
+    overflow raises at engine construction, and a freed dense slot is
+    scrubbed + frozen so free -> N steps -> re-insert decodes bit-exactly
+    vs a fresh decode state.
+
+Program-identity note: "bit-exact" here means within 1-2 f32 ULP of the
+exact-length program — different XLA programs (padded vs unpadded shapes)
+legally fuse differently; the tolerances below are ~10x one observed ULP,
+far below any phase/masking bug (which shows up at 1e-1).
+"""
+
+import dataclasses
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+import repro.configs as C
+import repro.configs.qwen3_1_7b as Q
+import repro.configs.whisper_tiny as W
+from repro.configs.base import AttnCfg, BlockCfg, MLPCfg, ModelCfg, Segment
+from repro.distributed.sharding import split_axes
+from repro.engine import SOIEngine, generate_step
+from repro.models import decode as D
+from repro.models import transformer as T
+
+S = 16
+ATOL = 1e-4      # ~10x the observed cross-program f32 ULP noise
+
+
+@functools.lru_cache(maxsize=None)
+def _setup(mode):
+    cfg = dataclasses.replace(Q.smoke_config(soi=mode), dtype="float32")
+    params, _ = split_axes(T.init(jax.random.PRNGKey(0), cfg))
+    tokens = jax.random.randint(jax.random.PRNGKey(1), (4, S), 0, cfg.vocab)
+    return cfg, params, tokens
+
+
+def _tree_close(ref, got, where, atol=ATOL):
+    for (kp, a), (_, b) in zip(jax.tree_util.tree_flatten_with_path(ref)[0],
+                               jax.tree_util.tree_flatten_with_path(got)[0]):
+        a, b = np.asarray(a), np.asarray(b)
+        assert a.shape == b.shape, (where, jax.tree_util.keystr(kp))
+        if a.size:
+            np.testing.assert_allclose(
+                b.astype(np.float64), a.astype(np.float64), atol=atol,
+                err_msg=f"{where}: {jax.tree_util.keystr(kp)}")
+
+
+# ---------------------------------------------------------------------------
+# Length-masked (bucketed) prefill == exact-length prefill
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("mode", [None, "pp", "fp"])
+def test_masked_prefill_matches_exact(mode):
+    """Padded prefill with true_length reproduces the unpadded prefill's
+    ENTIRE decode state (caches, clocks, conv window, queue), at lengths
+    below / on / across the bucket boundary, incl. S < stride."""
+    cfg, params, tokens = _setup(mode)
+    jm = jax.jit(lambda tk, tl: D.prefill(params, cfg, tk, max_len=S,
+                                          true_length=tl))
+    for p in (1, 3, 5, 8, 11, S):
+        lg_ref, st_ref = jax.jit(
+            lambda tk: D.prefill(params, cfg, tk, max_len=S))(tokens[:1, :p])
+        padded = jnp.pad(tokens[:1, :p], ((0, 0), (0, S - p)))
+        lg, st = jm(padded, jnp.asarray(p, jnp.int32))
+        np.testing.assert_allclose(np.asarray(lg), np.asarray(lg_ref),
+                                   atol=ATOL, err_msg=f"{mode} p={p}")
+        _tree_close(st_ref, st, f"{mode} p={p}")
+
+
+def test_masked_prefill_windowed_ring_overflow():
+    """Windowed config (ring cache shorter than the prompt): the masked
+    gather fill keeps exactly the last `window` real tokens, ring-aligned,
+    at any pad amount."""
+    cfg = dataclasses.replace(C.get_smoke("h2o-danube-1.8b"), dtype="float32")
+    params, _ = split_axes(T.init(jax.random.PRNGKey(0), cfg))
+    tokens = jax.random.randint(jax.random.PRNGKey(2), (1, S), 0, cfg.vocab)
+    jm = jax.jit(lambda tk, tl: D.prefill(params, cfg, tk, max_len=S,
+                                          true_length=tl))
+    for p in (3, 8, 11, S):        # window 8: overflow at p > 8
+        lg_ref, st_ref = jax.jit(
+            lambda tk: D.prefill(params, cfg, tk, max_len=S))(tokens[:, :p])
+        lg, st = jm(jnp.pad(tokens[:, :p], ((0, 0), (0, S - p))),
+                    jnp.asarray(p, jnp.int32))
+        np.testing.assert_allclose(np.asarray(lg), np.asarray(lg_ref),
+                                   atol=ATOL, err_msg=f"p={p}")
+        _tree_close(st_ref, st, f"danube p={p}")
+
+
+# ---------------------------------------------------------------------------
+# Chunked prefill == whole-prompt prefill
+# ---------------------------------------------------------------------------
+
+def _run_chunks(params, cfg, tokens, p, chunk):
+    state = D.init_decode_state(params, cfg, 1, max_len=S)
+    padded = jnp.pad(tokens[:1, :p], ((0, 0), (0, (-p) % chunk)))
+    jc = jax.jit(lambda st_, tk, off, tl: D.prefill_chunk(
+        params, cfg, st_, tk, off, tl))
+    logits = None
+    for i in range((p - 1) // chunk + 1):
+        logits, state = jc(state, padded[:, i * chunk:(i + 1) * chunk],
+                           jnp.asarray(i * chunk, jnp.int32),
+                           jnp.asarray(p, jnp.int32))
+    return logits, state
+
+
+@pytest.mark.parametrize("mode", [None, "pp", "fp"])
+def test_chunked_prefill_matches_exact(mode):
+    """The chunk loop (one compiled program, offset as data) lands on the
+    same decode state and last-token logits as whole-prompt prefill —
+    lengths below / on / across chunk boundaries; the SOI conv-buffer and
+    extrapolation-queue carries cross chunk boundaries correctly (fp reads
+    the previous chunk's last frame from the queue)."""
+    cfg, params, tokens = _setup(mode)
+    full = T.forward(params, cfg, tokens[:1])
+    jstep = jax.jit(lambda st_, tk: generate_step(params, cfg, st_, tk))
+    for p in (1, 3, 4, 5, 8, 11, S):
+        lg_ref, st_ref = D.prefill(params, cfg, tokens[:1, :p], max_len=S)
+        lg, st = _run_chunks(params, cfg, tokens, p, chunk=4)
+        np.testing.assert_allclose(np.asarray(lg), np.asarray(lg_ref),
+                                   atol=ATOL, err_msg=f"{mode} p={p}")
+        _tree_close(st_ref, st, f"{mode} p={p}")
+    # streaming continues correctly from a chunk-built state
+    lg, st = _run_chunks(params, cfg, tokens, 11, chunk=4)
+    for t in range(11, S):
+        lg, st = jstep(st, tokens[:1, t])
+        assert jnp.max(jnp.abs(lg - full[:, t])) < 5e-4, (mode, t)
+
+
+def test_chunked_prefill_mla():
+    """MLA latent/rope caches merge chunk-wise bit-compatibly (absorbed
+    C-query attention vs the full-sequence path)."""
+    mla = AttnCfg(kind="mla", n_heads=4, n_kv=4, head_dim=0, q_lora=16,
+                  kv_lora=16, qk_nope=16, qk_rope=8, v_head=16)
+    blk = BlockCfg(attn=mla, mlp=MLPCfg(kind="swiglu", d_ff=64))
+    cfg = ModelCfg(name="mla-test", d_model=32, vocab=128,
+                   segments=(Segment(blocks=(blk,), n_layers=2),),
+                   tie_embeddings=True, dtype="float32")
+    params, _ = split_axes(T.init(jax.random.PRNGKey(0), cfg))
+    tokens = jax.random.randint(jax.random.PRNGKey(3), (1, S), 0, cfg.vocab)
+    for p in (3, 7, 12):
+        lg_ref, st_ref = D.prefill(params, cfg, tokens[:, :p], max_len=S)
+        lg, st = _run_chunks(params, cfg, tokens, p, chunk=4)
+        np.testing.assert_allclose(np.asarray(lg), np.asarray(lg_ref),
+                                   atol=ATOL, err_msg=f"p={p}")
+        _tree_close(st_ref, st, f"mla p={p}")
+
+
+# ---------------------------------------------------------------------------
+# The compile-count guard (CI recompile regression tripwire)
+# ---------------------------------------------------------------------------
+
+def test_prefill_compile_count_guard():
+    """K requests of K distinct lengths compile at most len(buckets)
+    (bucketed) / exactly one (chunked) prefill programs; the exact-length
+    policy's one-per-length baseline is what the tentpole removes."""
+    cfg, params, tokens = _setup("pp")
+    lengths = [1, 2, 3, 5, 6, 7, 9, 10, 13, 16]     # 10 distinct
+
+    eng = SOIEngine(cfg, max_concurrent_decodes=2, max_len=S,
+                    prefill_buckets=(4, 8, S))
+    for ln in lengths:
+        eng.prefill(params, tokens[0, :ln])
+    assert eng.prefill_compiles <= len(eng.prefill_buckets) == 3
+
+    eng = SOIEngine(cfg, max_concurrent_decodes=2, max_len=S,
+                    prefill_chunk=4)
+    for ln in lengths:
+        eng.prefill(params, tokens[0, :ln])
+    assert eng.prefill_compiles == 1
+
+    eng = SOIEngine(cfg, max_concurrent_decodes=2, max_len=S,
+                    prefill_buckets=None)
+    for ln in lengths[:3]:
+        eng.prefill(params, tokens[0, :ln])
+    assert eng.prefill_compiles == 3                # one per distinct length
+
+
+def test_bucketed_engine_serves_correctly_paged():
+    """End-to-end: bucketed prefixes insert into a PAGED engine (pages
+    allocated by true length, pad rows on the null page) and decode matches
+    the offline forward."""
+    cfg, params, tokens = _setup("pp")
+    full = T.forward(params, cfg, tokens)
+    eng = SOIEngine(cfg, max_concurrent_decodes=2, max_len=S, paged=True,
+                    page_size=4, prefill_buckets="pow2")
+    ds = eng.init_decode_state(params)
+    cur = {}
+    for slot, off in enumerate([5, 6]):
+        prefix = eng.prefill(params, tokens[slot, :off])
+        assert prefix.true_length == off
+        assert jnp.max(jnp.abs(prefix.logits[0] - full[slot, off - 1])) < 5e-4
+        ds = eng.insert(prefix, ds, slot)
+        cur[slot] = off
+    # true-length page accounting: 5 and 6 tokens -> 2 outer pages each
+    assert int((eng._pt_outer.map > 0).sum()) == 4
+    for _ in range(S - max(cur.values())):
+        forced = ds["tokens"]
+        for r, c in cur.items():
+            forced = forced.at[r].set(tokens[r, c])
+        ds, res = eng.generate(params, dict(ds, tokens=forced))
+        for r, c in list(cur.items()):
+            assert jnp.max(jnp.abs(res.logits[r] - full[r, c])) < 5e-4, (r, c)
+            cur[r] = c + 1
+
+
+# ---------------------------------------------------------------------------
+# Serving correctness fixes
+# ---------------------------------------------------------------------------
+
+def test_learned_pos_table_overflow_raises():
+    """max_len past the learned position table would silently clamp every
+    later position to the last embedding (jnp.take) — engine construction
+    refuses instead."""
+    cfg = dataclasses.replace(W.smoke_config(), dtype="float32")
+    assert cfg.learned_pos_len == 128
+    with pytest.raises(ValueError, match="learned position table"):
+        SOIEngine(cfg, max_concurrent_decodes=2, max_len=256)
+    SOIEngine(cfg, max_concurrent_decodes=2, max_len=128)    # boundary ok
+
+
+def test_dense_freed_slot_scrubbed_and_reinsert_bit_exact():
+    """Dense-path slot lifecycle: free_slot scrubs the slot's cache
+    positions (freed tokens unreadable, like the paged path's page scrub),
+    the freed slot's clock stays frozen across generate steps, and
+    free -> N steps -> re-insert decodes BIT-exactly vs a fresh decode
+    state — i.e. the masked state commits really freeze freed slots."""
+    cfg, params, tokens = _setup("pp")
+    eng = SOIEngine(cfg, max_concurrent_decodes=2, max_len=S)
+
+    def drive(ds, cur, n):
+        outs = {}
+        for _ in range(n):
+            forced = ds["tokens"]
+            for r, (row, c) in cur.items():
+                if c < S:
+                    forced = forced.at[r].set(tokens[row, c])
+            ds, res = eng.generate(params, dict(ds, tokens=forced))
+            for r, (row, c) in list(cur.items()):
+                if c < S:
+                    outs.setdefault(r, []).append(np.asarray(res.logits[r]))
+                    cur[r] = (row, c + 1)
+        return ds, outs
+
+    # engine A: two slots, then free slot 0 mid-decode
+    ds = eng.init_decode_state(params)
+    ds = eng.insert(eng.prefill(params, tokens[0, :6]), ds, 0)
+    ds = eng.insert(eng.prefill(params, tokens[1, :5]), ds, 1)
+    cur = {0: (0, 6), 1: (1, 5)}
+    ds, _ = drive(ds, cur, 3)
+    ds = eng.free_slot(ds, 0)
+    t_frozen = int(ds["model"]["t"][0])
+    # scrub: every attention cache row of slot 0 reads empty
+    for grp in ("pre", "mid", "post"):
+        for leaf_path, leaf in jax.tree_util.tree_flatten_with_path(
+                ds["model"][grp])[0]:
+            if "pos" in jax.tree_util.keystr(leaf_path):
+                assert np.all(np.asarray(leaf)[:, 0] == -1), \
+                    (grp, jax.tree_util.keystr(leaf_path))
+    del cur[0]
+    ds, _ = drive(ds, cur, 3)            # slot 1 keeps decoding
+    assert int(ds["model"]["t"][0]) == t_frozen     # freed clock frozen
+    # re-insert a new request into the freed slot
+    prefix = eng.prefill(params, tokens[2, :7])
+    ds = eng.insert(prefix, ds, 0)
+    cur[0] = (2, 7)
+    _, outs_a = drive(ds, cur, 5)
+
+    # fresh decode state, same request alone in slot 0, same forced tokens
+    ds2 = eng.init_decode_state(params)
+    ds2 = eng.insert(prefix, ds2, 0)
+    _, outs_b = drive(ds2, {0: (2, 7)}, 5)
+    for a, b in zip(outs_a[0], outs_b[0]):
+        assert np.array_equal(a, b)
+
+
+def test_masked_prefill_guards():
+    """Unsupported configs are refused loudly, never silently wrong."""
+    cfg, params, tokens = _setup("pp")
+    # stride must divide the chunk
+    with pytest.raises(ValueError, match="stride"):
+        SOIEngine(cfg, max_concurrent_decodes=2, max_len=S, prefill_chunk=3)
+    # recurrence configs: no masked prefill; buckets fall back, chunk raises
+    rcfg = C.get_smoke("rwkv6-1.6b")
+    assert not D.supports_masked_prefill(rcfg)
+    eng = SOIEngine(rcfg, max_concurrent_decodes=2, max_len=S)
+    assert eng.prefill_buckets is None               # silent fallback
+    with pytest.raises(ValueError, match="chunked prefill"):
+        SOIEngine(rcfg, max_concurrent_decodes=2, max_len=S, prefill_chunk=4)
+    # prefix-LM: the prefix mask shows pad under frontend_len to EVERY
+    # query (bypassing causality) — masked prefill must refuse / fall back
+    pcfg = C.get_smoke("paligemma-3b")
+    assert pcfg.prefix_lm and not D.supports_masked_prefill(pcfg)
+    assert SOIEngine(pcfg, max_concurrent_decodes=2,
+                     max_len=S).prefill_buckets is None
+    # true_length outside the prompt
+    eng = SOIEngine(cfg, max_concurrent_decodes=2, max_len=S)
+    with pytest.raises(ValueError, match="true_length"):
+        eng.prefill(params, tokens[0, :4], true_length=9)
