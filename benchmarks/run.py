@@ -22,10 +22,13 @@ def main() -> None:
     sys.path.insert(0, "src")
     t0 = time.time()
 
-    from benchmarks import (appendix_b_prediction, pruning_soi, quality_pp,
-                            soi_lm_bench, table1_pp_soi, table2_fp_soi,
-                            table3_resampling, table4_asc)
+    from benchmarks import (appendix_b_prediction, paged_kv_bench,
+                            prefill_bench, prefix_cache_bench, pruning_soi,
+                            quality_pp, soi_lm_bench, table1_pp_soi,
+                            table2_fp_soi, table3_resampling, table4_asc)
 
+    # every bench below emits a machine-readable BENCH_*.json trajectory
+    # point next to its human-readable report
     table1_pp_soi.run(csv=args.csv)
     table2_fp_soi.run(csv=args.csv)
     table4_asc.run(csv=args.csv, train_quality=not args.fast)
@@ -35,6 +38,10 @@ def main() -> None:
         quality_pp.run(csv=args.csv)
         pruning_soi.run(csv=args.csv)
         appendix_b_prediction.run(csv=args.csv)
+        # serving benches (compile-heavy: skipped under --fast)
+        paged_kv_bench.run(csv=args.csv)
+        prefill_bench.run(csv=args.csv)
+        prefix_cache_bench.run(csv=args.csv)
 
     # roofline summary (from stored dry-run artifacts, if present)
     try:

@@ -6,6 +6,7 @@ separation task; the full DNS runs need 14 GPU-hours/model x 5 seeds).
 
 from __future__ import annotations
 
+import json
 import time
 
 from repro.configs import soi_unet_dns
@@ -32,7 +33,7 @@ PAPER_ROWS = [
 ]
 
 
-def run(csv=False):
+def run(csv=False, out_json="BENCH_table1_pp_soi.json"):
     t0 = time.time()
     rows = []
     for label, pairs, want_retain, want_mmacs in PAPER_ROWS:
@@ -42,6 +43,17 @@ def run(csv=False):
         rows.append((label, 100 * rep.retain, want_retain, rep.mmacs_per_s,
                      want_mmacs))
     us = (time.time() - t0) / len(rows) * 1e6
+    # machine-readable trajectory point (the BENCH_*.json format the CI
+    # trend tooling picks up): per-row retain vs paper + worst deviation
+    traj = {"max_abs_retain_err_pp": max(abs(r - wr)
+                                         for _, r, wr, _, _ in rows)}
+    for label, r, wr, m, wm in rows:
+        key = label.replace(" ", "_").replace("|", "_")
+        traj[f"{key}_retain_%"] = r
+        traj[f"{key}_paper_retain_%"] = wr
+        traj[f"{key}_mmacs_per_s"] = m
+    with open(out_json, "w") as f:
+        json.dump(traj, f, indent=2)
     if csv:
         for r in rows:
             print(f"table1_pp_soi/{r[0].replace(' ', '_')},{us:.1f},"

@@ -4,6 +4,7 @@ data, i.e. between inferences)."""
 
 from __future__ import annotations
 
+import json
 import time
 
 from repro.configs import soi_unet_dns
@@ -25,7 +26,7 @@ PAPER_ROWS = [
 ]
 
 
-def run(csv=False):
+def run(csv=False, out_json="BENCH_table2_fp_soi.json"):
     t0 = time.time()
     rows = []
     for label, soi, want_retain, want_pre in PAPER_ROWS:
@@ -34,6 +35,15 @@ def run(csv=False):
                      100 * rep.precomputed_fraction, want_pre,
                      rep.on_arrival_macs_per_frame * 62.5 / 1e6))
     us = (time.time() - t0) / len(rows) * 1e6
+    traj = {"max_abs_precomp_err_pp": max(abs(p - wp)
+                                          for _, _, _, p, wp, _ in rows)}
+    for label, r, wr, p, wp, oa in rows:
+        key = label.replace(" ", "_").replace("|", "_")
+        traj[f"{key}_precomputed_%"] = p
+        traj[f"{key}_paper_precomputed_%"] = wp
+        traj[f"{key}_on_arrival_mmacs_per_s"] = oa
+    with open(out_json, "w") as f:
+        json.dump(traj, f, indent=2)
     if csv:
         for r in rows:
             print(f"table2_fp_soi/{r[0].replace(' ', '_').replace('|','_')},"

@@ -5,6 +5,7 @@ insensitive to SOI (slow-moving outputs)."""
 
 from __future__ import annotations
 
+import json
 import time
 
 import jax
@@ -50,7 +51,7 @@ def _train_asc(cfg, steps=150, b=16, t=48, lr=3e-3, seed=0):
     return float(np.mean(pred == ye))
 
 
-def run(csv=False, train_quality=True):
+def run(csv=False, train_quality=True, out_json="BENCH_table4_asc.json"):
     rows = []
     t0 = time.time()
     for size in ("I", "II", "III", "IV", "V", "VI", "VII"):
@@ -68,6 +69,16 @@ def run(csv=False, train_quality=True):
         c_s = soi_ghostnet_asc.smoke_config()
         acc["baseline"] = _train_asc(c_b)
         acc["soi"] = _train_asc(c_s)
+    traj = {}
+    for size, bm, sm, red, n_b, n_s in rows:
+        traj[f"{size}_stmc_mmacs_per_s"] = bm
+        traj[f"{size}_soi_mmacs_per_s"] = sm
+        traj[f"{size}_reduction_%"] = red
+        traj[f"{size}_params"] = n_s
+    for k, v in acc.items():
+        traj[f"quality_{k}_acc"] = v
+    with open(out_json, "w") as f:
+        json.dump(traj, f, indent=2)
     if csv:
         for r in rows:
             print(f"table4_asc/{r[0]},{us:.1f},reduction={r[3]:.1f}%")

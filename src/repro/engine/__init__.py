@@ -71,6 +71,57 @@ the outer rate, turning the paper's partial-state compression directly into
 fewer resident pages. The compromise: a paged engine makes host allocation
 decisions between steps, so one engine instance drives one live decode
 state through its own ``insert``/``generate``/``free_slot`` calls.
+``free_slot`` of a never-inserted or already-freed slot raises ValueError
+on both layouts: with refcounted pages a silent double-free would put a
+page on the free list twice and back two requests at once.
+
+Copy-on-write prefix page cache (``SOIEngine(..., prefix_cache=True)``)
+-----------------------------------------------------------------------
+
+Serving traffic repeats itself *across* requests — system prompts and
+few-shot preambles — the inter-request analogue of the intra-request state
+reuse SOI itself performs. With ``prefix_cache=True`` (requires ``paged``
+and ``prefill_chunk``) pages become **refcounted and shared**:
+
+* a host-side chain-hash index over token-id page blocks
+  (``repro.engine.pages.PrefixIndex``) maps a prompt's leading full pages —
+  at boundaries aligned to lcm(chunk, page size, stride·page size) — to
+  pages already resident in the pools, for the outer KV *and* the SOI
+  compressed middle at its 1/stride rate;
+* on a hit, chunked prefill **skips the compute** for fully-cached chunks:
+  the cached pages are gathered into the batch-1 prefill buffer (bit-
+  identical K/V — no recompute), the SOI conv window / extrapolation queue
+  restore from host snapshots stored with the index entry, and the chunk
+  loop fast-forwards its offset to the cached boundary — shared-prefix
+  prefill cost drops from O(prompt) to O(suffix), and a hit adds ZERO new
+  compiles (guard: ``tests/test_prefix_cache.py``);
+* ``insert`` then maps the shared pages by bumping refcounts instead of
+  copying contents, so resident bytes for N sharers hold ONE copy of the
+  preamble (``BENCH_prefix_cache.json``: >2x fewer resident KV bytes and
+  >2x faster warm prefill at 8 requests over a 512-token preamble);
+* **COW rule**: a page with refcount > 1 (other slots, or index pins) is
+  read-only for everyone. Any write that would land on it — a windowed
+  ring wrapping back onto prefix pages during decode, a grow-by-one step
+  into a pinned page — first copies the page into a fresh one and rewires
+  only the writer's map entry, so sharers never observe each other;
+* ``free_slot`` decrefs; a page is scrubbed and returned to the free list
+  only at refcount zero. Index entries pin their pages, so a prefix stays
+  hittable after its last sharer frees; under pool pressure entries are
+  evicted LRU (freed pages scrubbed) before allocation fails.
+
+``true_length`` interaction: prefix hits key on REAL tokens only. Bucketed
+prefill can't share pages (pad makes the padded tail of the last bucket
+block differ between requests, and its one compiled program has no offset
+to fast-forward), so the prefix cache requires the chunked path, where
+``Prefix.true_length`` already drives the clock, the page allocation, and
+the logits read — a hit only moves the chunk loop's *starting* offset and
+never the true length. The decode read stays the ordinary
+``paged_decode_attention`` walk: sharing is invisible to the compiled step
+(regressions: shared-prefix decode is BIT-exact vs a cold prefill across
+GQA, MLA absorbed, and windowed rings — ``tests/test_prefix_cache.py``).
+Serving loops gate admission on ``engine.can_insert`` and read
+``engine.prefix_cache_stats`` (hit rate, pages shared, tokens skipped, COW
+copies, evictions; the null page is never counted).
 
 Bucketed and chunked prefill (O(1) prefill compiles)
 ----------------------------------------------------
@@ -108,19 +159,19 @@ prefill; ``SOIEngine.prefill_compiles`` counts traces so serving
 dashboards (and ``launch/serve.py``) surface recompiles either way.
 
 Follow-ons recorded in ROADMAP.md: multi-host prefill/generate
-disaggregation, prefix-cache page sharing over chunked prefill,
-phase-aligned slot scheduling.
+disaggregation, phase-aligned slot scheduling, cross-engine prefix-cache
+persistence.
 """
 
 from repro.engine.api import Engine, Prefix, ResultTokens, SlotData
-from repro.engine.pages import PageTable
+from repro.engine.pages import PageTable, PrefixEntry, PrefixIndex
 from repro.engine.session import (StreamSession, lm_stream_session,
                                   unet_stream_session)
 from repro.engine.soi_engine import SOIEngine
 from repro.engine.step import generate_step
 
 __all__ = [
-    "Engine", "PageTable", "Prefix", "ResultTokens", "SlotData", "SOIEngine",
-    "StreamSession", "generate_step", "lm_stream_session",
-    "unet_stream_session",
+    "Engine", "PageTable", "Prefix", "PrefixEntry", "PrefixIndex",
+    "ResultTokens", "SlotData", "SOIEngine", "StreamSession",
+    "generate_step", "lm_stream_session", "unet_stream_session",
 ]

@@ -67,12 +67,20 @@ class Prefix:
     masked in the caches and never become readable). ``length`` mirrors it
     for unpadded prefills and remains the prompt-length field callers key
     accounting off.
+
+    ``cache_meta`` is prefix-cache bookkeeping attached by engines that
+    share prompt-prefix pages across requests (hit boundary, chain keys of
+    the prompt's aligned page-block boundaries, SOI carry snapshots): it
+    lets ``insert`` map already-resident pages by refcount instead of
+    copying, and register the new prefix for future hits. ``None`` from
+    engines without a prefix cache.
     """
     state: Any            # batch-1 model decode state (t == true_length)
     first_token: Any      # (1,) int32
     logits: Any           # (1, V) float32 — last real prompt position
     length: int
     true_length: Optional[int] = None
+    cache_meta: Optional[dict] = None
 
     def __post_init__(self):
         if self.true_length is None:

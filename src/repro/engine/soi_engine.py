@@ -18,6 +18,19 @@ Two cache layouts, selected by the ``paged`` flag:
   live tokens, not capacity. The SOI middle pages at 1/stride the outer
   rate, so the paper's compression directly becomes fewer resident pages.
 
+``prefix_cache=True`` (requires ``paged`` + ``prefill_chunk``) layers a
+copy-on-write prefix page cache on top: a host-side chain-hash index over
+token-id page blocks maps a prompt's leading full pages to pages already
+resident in the pools. On a hit, chunked prefill *skips the compute* for the
+cached chunks — it gathers the cached pages into the batch-1 prefill buffer
+(bit-identical K/V), restores the SOI conv window / extrapolation queue from
+the entry's host snapshots, and resumes at the cached boundary — and
+``insert`` maps the shared pages by bumping refcounts instead of copying.
+Shared pages are read-only: a decode (or windowed-ring) write into one
+triggers copy-on-write into a fresh page, so sharers never observe each
+other. Entries pin their pages (they survive the last sharer's free) and are
+evicted LRU under pool pressure.
+
 Paged engines make host-side allocation decisions between jitted steps, so
 one engine instance drives ONE live decode state and must see every
 lifecycle transition (``insert`` / ``generate`` / ``free_slot``) of it; the
@@ -26,6 +39,8 @@ page maps enter the compiled step as data, never as trace-time constants.
 
 from __future__ import annotations
 
+import math
+
 import numpy as np
 
 import jax
@@ -33,8 +48,10 @@ import jax.numpy as jnp
 
 from repro.configs.base import ModelCfg, Segment
 from repro.engine.api import Engine, Prefix, ResultTokens
-from repro.engine.pages import PageTable
+from repro.engine.pages import PageTable, PrefixEntry, PrefixIndex, chain_keys
 from repro.engine.step import generate_step
+from repro.kernels import ops as kops
+from repro.models import attention as attn
 from repro.models import decode as D
 from repro.models.attention import PagedKV
 from repro.models.transformer import _dtype, _noc, soi_partition
@@ -55,7 +72,8 @@ def _paged_put(pool, dense, rows, axis: int):
     ``dense`` is (..., 1, s_log, ...) with the batch at ``axis``; the s_log
     rows split into (n_pp, page_size) pages scattered to pool rows ``rows``
     (0-entries land on the always-masked null page, so prefix rows beyond
-    the allocated prompt pages are discarded, not silently kept)."""
+    the allocated prompt pages — and rows covered by *shared* pages, which
+    must never be re-written — are discarded, not silently kept)."""
     n_pp = rows.shape[0]
     p_sz = pool.shape[axis + 1]
     row = jnp.take(dense, 0, axis=axis)
@@ -139,9 +157,10 @@ def insert_state(cfg: ModelCfg, dst: dict, src: dict, slot, *,
     Structure-aware: scanned segments stack caches as (layers, B, ...), so
     the batch axis differs per segment; top-level leaves (clock, conv
     buffer, queue) insert on axis 0; per-slot encoder cross-KV copies its
-    row. With ``page_rows`` ({"outer": (n_pp,), "mid": (n_ppm,)} freshly
-    allocated page ids) the attention caches copy page *contents* into the
-    shared pools instead of max_len batch rows.
+    row. With ``page_rows`` ({"outer": (n_pp,), "mid": (n_ppm,)} write
+    targets) the attention caches copy page *contents* into the shared
+    pools instead of max_len batch rows; entries masked to 0 (shared or
+    unallocated pages) write onto the discarded null page.
     """
     out = dict(dst)
     out["t"] = dst["t"].at[slot].set(src["t"][0])
@@ -189,6 +208,48 @@ def _scrub_group(seg_caches, segs, rows):
     return out
 
 
+def _hydrate_groups(dense_segs, pool_segs, segs, rows, limit):
+    """Fill a batch-1 dense prefill cache's logical rows [0, limit) from the
+    paged pools (the prefix-cache prefill skip)."""
+    out = []
+    for d_seg, p_seg, seg in zip(dense_segs, pool_segs, segs):
+        axis = 1 if seg.scan else 0
+
+        def blk(d_blk, p_blk):
+            if "attn" not in d_blk:
+                return d_blk
+            return dict(d_blk, attn=attn.hydrate_cache_prefix(
+                d_blk["attn"], p_blk["attn"], rows, limit, axis=axis))
+
+        if seg.scan:
+            out.append({k: blk(v, p_seg[k]) for k, v in d_seg.items()})
+        else:
+            out.append([blk(dv, pv) for dv, pv in zip(d_seg, p_seg)])
+    return out
+
+
+def _copy_group_page(seg_caches, segs, src, dst):
+    """Copy pool row ``src`` -> ``dst`` in every attention pool of a cache
+    group (the device half of copy-on-write)."""
+    out = []
+    for seg_c, seg in zip(seg_caches, segs):
+        axis = 1 if seg.scan else 0
+
+        def cp(blk):
+            if "attn" not in blk:
+                return blk
+            a = {name: (pl.at[:, dst].set(pl[:, src]) if axis
+                        else kops.copy_page(pl, src, dst))
+                 for name, pl in blk["attn"].items()}
+            return dict(blk, attn=a)
+
+        if seg.scan:
+            out.append({k: cp(v) for k, v in seg_c.items()})
+        else:
+            out.append([cp(b) for b in seg_c])
+    return out
+
+
 class SOIEngine(Engine):
     """Engine over the unified step; handles SOI and plain configs alike.
 
@@ -214,6 +275,11 @@ class SOIEngine(Engine):
       the host — the substrate for prefix-cache page sharing and
       prefill/decode interleaving.
 
+    ``prefix_cache=True`` (requires ``paged`` and ``prefill_chunk``) shares
+    the pages of repeated prompt prefixes across requests copy-on-write and
+    skips the prefill compute over cached prefixes; see the module
+    docstring and ``prefix_cache_stats``.
+
     Configs that can't mask pad — prefix-LM / bidirectional attention (pad
     inside the prefix window is visible to every query), recurrence scan
     states, MoE expert capacity; see
@@ -225,7 +291,8 @@ class SOIEngine(Engine):
                  max_len: int = 256, constrain=_noc, paged: bool = False,
                  page_size: int = 16, n_pages: int | None = None,
                  n_pages_mid: int | None = None,
-                 prefill_buckets="pow2", prefill_chunk: int | None = None):
+                 prefill_buckets="pow2", prefill_chunk: int | None = None,
+                 prefix_cache: bool = False):
         self.cfg = cfg
         self.max_len = max_len
         self._slots = max_concurrent_decodes
@@ -233,6 +300,9 @@ class SOIEngine(Engine):
         self._paged = bool(paged)
         self._spec = None
         self._pt_outer = self._pt_mid = None
+        self._occupied = np.zeros(self._slots, bool)
+        self._clock = np.zeros(self._slots, np.int64)
+        self._live = None           # the ONE live decode state (paged)
         if cfg.learned_pos_len and max_len > cfg.learned_pos_len:
             # jnp.take clamps out-of-bounds rows, so decodes past the table
             # would silently reuse the LAST position embedding forever —
@@ -265,6 +335,9 @@ class SOIEngine(Engine):
         # traces of the jitted prefill programs (one per bucket, or exactly
         # one chunk program): the serving-visible recompile counter
         self.prefill_compiles = 0
+        # traces of the prefix-cache hydration program (compiles once on the
+        # first hit; the compile-count guard watches both counters)
+        self.hydrate_compiles = 0
         if self._paged:
             outer_len, mid_len = D.paged_group_lens(cfg, max_len)
             if not outer_len and not mid_len:
@@ -283,6 +356,34 @@ class SOIEngine(Engine):
             self._outer_len, self._mid_len = outer_len, mid_len
             self._spec = PagedKV(page_size, max(n_pages, 2),
                                  max(n_pages_mid, 2))
+
+        self._prefix_cache = bool(prefix_cache)
+        self._prefix_index = PrefixIndex()
+        self._pc_stats = {"hits": 0, "misses": 0, "tokens_skipped": 0,
+                          "pages_shared": 0, "cow_copies": 0, "evictions": 0}
+        if self._prefix_cache:
+            if not self._paged:
+                raise ValueError("prefix_cache=True requires paged=True "
+                                 "(sharing maps pool pages across slots)")
+            if self._chunk is None:
+                raise ValueError(
+                    "prefix_cache=True requires prefill_chunk: the prefill "
+                    "skip fast-forwards the chunk loop past cached chunks")
+            if not self._outer_len:
+                raise ValueError("prefix_cache needs an outer attention "
+                                 "cache group to share")
+            align = math.lcm(self._chunk, self._spec.page_size)
+            if cfg.soi is not None:
+                # middle pages hold page_size *frames* = page_size*stride
+                # tokens: boundaries must close a middle page exactly
+                align = math.lcm(align,
+                                 cfg.soi.stride * self._spec.page_size)
+            if align > max_len:
+                raise ValueError(
+                    f"prefix-cache boundary alignment {align} "
+                    f"(lcm of chunk, page size, stride*page size) exceeds "
+                    f"max_len {max_len}: no prompt could ever hit")
+            self._pc_align = align
 
         def _gen(params, ds):
             logits, ms = generate_step(params, cfg, ds["model"], ds["tokens"],
@@ -316,12 +417,8 @@ class SOIEngine(Engine):
         def _fresh_prefix_state(params):
             return D.init_decode_state(params, cfg, 1, max_len=max_len)
 
-        def _release(ds, slot, rows):
-            # ``rows`` indexes what gets scrubbed: released page rows in the
-            # pools (paged) or the slot's own batch row (dense) — same
-            # ``pos = -1`` hygiene either way, so a freed request's tokens
-            # are unreadable even before the slot is re-inserted.
-            m = dict(ds["model"])
+        def _scrub_model(m: dict, rows: dict) -> dict:
+            m = dict(m)
             if cfg.soi is None:
                 if "outer" in rows:
                     m["segments"] = _scrub_group(m["segments"], cfg.segments,
@@ -333,8 +430,56 @@ class SOIEngine(Engine):
                     m["post"] = _scrub_group(m["post"], post, rows["outer"])
                 if "mid" in rows:
                     m["mid"] = _scrub_group(m["mid"], mid, rows["mid"])
-            return {"model": m, "tokens": ds["tokens"],
+            return m
+
+        def _release(ds, slot, rows):
+            # ``rows`` indexes what gets scrubbed: released page rows in the
+            # pools (paged) or the slot's own batch row (dense) — same
+            # ``pos = -1`` hygiene either way, so a freed request's tokens
+            # are unreadable even before the slot is re-inserted.
+            return {"model": _scrub_model(ds["model"], rows),
+                    "tokens": ds["tokens"],
                     "active": ds["active"].at[slot].set(False)}
+
+        def _scrub_pages(ds, rows):
+            # eviction path: scrub freed pages without touching any slot's
+            # active bit (no slot is being released)
+            return dict(ds, model=_scrub_model(ds["model"], rows))
+
+        def _hydrate(ms, model, rows, n_tok, n_frames):
+            self.hydrate_compiles += 1      # body runs once per trace
+            out = dict(ms)
+            if cfg.soi is None:
+                out["segments"] = _hydrate_groups(
+                    ms["segments"], model["segments"], cfg.segments,
+                    rows["outer"], n_tok)
+            else:
+                pre, mid, post = soi_partition(cfg)
+                out["pre"] = _hydrate_groups(ms["pre"], model["pre"], pre,
+                                             rows["outer"], n_tok)
+                out["post"] = _hydrate_groups(ms["post"], model["post"], post,
+                                              rows["outer"], n_tok)
+                if "mid" in rows:
+                    out["mid"] = _hydrate_groups(ms["mid"], model["mid"], mid,
+                                                 rows["mid"], n_frames)
+            return out
+
+        def _cow_outer(ds, src, dst):
+            m = dict(ds["model"])
+            if cfg.soi is None:
+                m["segments"] = _copy_group_page(m["segments"], cfg.segments,
+                                                 src, dst)
+            else:
+                pre, _, post = soi_partition(cfg)
+                m["pre"] = _copy_group_page(m["pre"], pre, src, dst)
+                m["post"] = _copy_group_page(m["post"], post, src, dst)
+            return dict(ds, model=m)
+
+        def _cow_mid(ds, src, dst):
+            _, mid, _ = soi_partition(cfg)
+            m = dict(ds["model"])
+            m["mid"] = _copy_group_page(m["mid"], mid, src, dst)
+            return dict(ds, model=m)
 
         # donate the decode state: the per-slot KV caches dominate serving
         # HBM, and without donation every step double-buffers them
@@ -344,6 +489,10 @@ class SOIEngine(Engine):
         self._prefill_chunk_fn = jax.jit(_prefill_chunk, donate_argnums=(1,))
         self._fresh_prefix_fn = jax.jit(_fresh_prefix_state)
         self._release_fn = jax.jit(_release, donate_argnums=(0,))
+        self._scrub_fn = jax.jit(_scrub_pages, donate_argnums=(0,))
+        self._hydrate_fn = jax.jit(_hydrate, donate_argnums=(0,))
+        self._cow_outer_fn = jax.jit(_cow_outer, donate_argnums=(0,))
+        self._cow_mid_fn = jax.jit(_cow_mid, donate_argnums=(0,))
 
     def _resolve_buckets(self, policy):
         """Prefill bucket lengths: None (exact-length, one compile per
@@ -383,6 +532,35 @@ class SOIEngine(Engine):
     def max_concurrent_decodes(self) -> int:
         return self._slots
 
+    @property
+    def prefix_cache_enabled(self) -> bool:
+        return self._prefix_cache
+
+    @property
+    def live_decode_state(self):
+        """The ONE live decode state this engine drives (paged engines
+        stash it across calls; prefill hydration reads pool contents from
+        it). Recovery handle: on a prefix-cache engine a failed ``insert``
+        may already have LRU-evicted index entries — which scrubs pages
+        through a donating jitted program — so the caller's own reference
+        can be invalidated even though the insert raised; this property
+        always points at the current buffers."""
+        return self._live
+
+    @property
+    def prefix_cache_stats(self) -> dict:
+        """Serving-visible prefix-cache counters: lookup hits/misses (+
+        derived hit_rate), prompt tokens whose prefill compute was skipped,
+        pages mapped by refcount instead of copy (never counts the null
+        page), COW copies, and LRU evictions. Counters reset with
+        ``init_decode_state`` (a fresh state starts a fresh serving
+        session, like the index itself)."""
+        s = dict(self._pc_stats)
+        total = s["hits"] + s["misses"]
+        s["hit_rate"] = s["hits"] / total if total else 0.0
+        s["entries"] = len(self._prefix_index)
+        return s
+
     def _page_maps(self) -> dict:
         maps = {}
         if self._pt_outer is not None:
@@ -408,11 +586,179 @@ class SOIEngine(Engine):
             self._pt_mid = (PageTable(self._slots, self._mid_len, p_sz,
                                       self._spec.n_pages_mid)
                             if self._mid_len else None)
-            self._clock = np.zeros(self._slots, np.int64)
-            self._occupied = np.zeros(self._slots, bool)
-        return {"model": ms,
-                "tokens": jnp.zeros((self._slots,), jnp.int32),
-                "active": jnp.zeros((self._slots,), bool)}
+        self._occupied = np.zeros(self._slots, bool)
+        self._clock = np.zeros(self._slots, np.int64)
+        # a fresh decode state invalidates every resident page: the prefix
+        # index — and the serving counters that describe it — restart with it
+        self._prefix_index = PrefixIndex()
+        self._pc_stats = {k: 0 for k in self._pc_stats}
+        state = {"model": ms,
+                 "tokens": jnp.zeros((self._slots,), jnp.int32),
+                 "active": jnp.zeros((self._slots,), bool)}
+        self._live = state
+        return state
+
+    # -- prefix-cache host machinery -------------------------------------
+
+    def _lookup_prefix(self, toks: np.ndarray, tl: int, keys: dict):
+        """Longest registered boundary R (aligned, < tl by at least one
+        chunk) whose tokens [0, R) are cached. ``keys`` is the prompt's
+        already-computed block chain-key dict. Returns (R, key, entry) or
+        None."""
+        a = self._pc_align
+        r_max = ((tl - 1) // self._chunk) * self._chunk
+        r_max = (r_max // a) * a
+        if r_max < a:
+            return None
+        for r in range(r_max, a - 1, -a):
+            key = keys.get(r)
+            if key is None:
+                continue
+            e = self._prefix_index.get(key, toks[:r])
+            if e is not None and e.length == r:
+                return r, key, e
+        return None
+
+    def _evict_entry(self, decode_state):
+        """Drop the LRU prefix-index entry; scrub any page this was the
+        last reference to."""
+        e = self._prefix_index.pop_lru()
+        if e is None:
+            return decode_state
+        self._pc_stats["evictions"] += 1
+        freed_o = [pid for pid in e.outer_pages
+                   if self._pt_outer.unpin(pid)]
+        freed_m = []
+        if self._pt_mid is not None:
+            freed_m = [pid for pid in e.mid_pages if self._pt_mid.unpin(pid)]
+        if not freed_o and not freed_m:
+            return decode_state
+        rows = {"outer": self._pad_row(self._pt_outer, freed_o)}
+        if self._pt_mid is not None:
+            rows["mid"] = self._pad_row(self._pt_mid, freed_m)
+        decode_state = self._scrub_fn(decode_state, rows)
+        self._live = decode_state
+        return decode_state
+
+    def _make_room(self, pt, n: int, decode_state):
+        """Evict prefix-index entries (LRU) until ``pt`` has ``n`` free
+        pages or the index is empty; allocation itself stays the authority
+        on exhaustion."""
+        while (pt.free_pages < n and self._prefix_cache
+               and len(self._prefix_index)):
+            decode_state = self._evict_entry(decode_state)
+        return decode_state
+
+    def _shared_plan(self, meta, true_len: int) -> tuple:
+        """Resolve a prefill-time hit into {logical idx: pid} adoption maps
+        against the *current* index (pages may have been evicted since the
+        prefill; the hydrated dense state keeps the insert correct either
+        way — sharing is purely the zero-copy optimization)."""
+        if (not self._prefix_cache or not meta or not meta.get("hit")
+                or self._pt_outer is None):
+            return {}, {}
+        R = meta["hit"]
+        e = self._prefix_index.get(meta["hit_key"], meta["tokens"][:R])
+        if e is None or e.length != R:
+            return {}, {}
+        p_sz = self._spec.page_size
+        s_log = self._pt_outer.logical_len
+        # windowed rings: suffix positions that wrapped onto prefix pages
+        # already diverged in the dense prefill buffer — those pages must be
+        # private fresh copies, not shared (the pool copy holds the PREFIX
+        # ring state other sharers still read)
+        over = set()
+        if true_len > R:
+            for p in range(max(R, true_len - s_log), true_len):
+                over.add((p % s_log) // p_sz)
+        shared_outer = {i: e.outer_pages[i] for i in range(R // p_sz)
+                        if i not in over and e.outer_pages[i] > 0}
+        shared_mid = {}
+        if self._pt_mid is not None:
+            # same wrap exclusion at frame granularity: suffix frames that
+            # rang onto prefix middle pages diverged in the dense buffer
+            st_ = self.cfg.soi.stride
+            m_log = self._pt_mid.logical_len
+            f_r, f_t = R // st_, -(-true_len // st_)
+            over_m = set()
+            if f_t > f_r:
+                for fp in range(max(f_r, f_t - m_log), f_t):
+                    over_m.add((fp % m_log) // p_sz)
+            shared_mid = {i: e.mid_pages[i] for i in range(f_r // p_sz)
+                          if i not in over_m and e.mid_pages[i] > 0}
+        return shared_outer, shared_mid
+
+    def _register_prefix(self, s_i: int, meta: dict, tl: int):
+        """Pin + index the freshly inserted slot's full prefix pages at
+        every aligned boundary, so later prompts sharing those token blocks
+        hit. Skipped entirely when the prefill wrapped a ring (page contents
+        are then a function of the whole length, not the prefix)."""
+        pt_o, pt_m = self._pt_outer, self._pt_mid
+        if pt_o is None or tl > pt_o.logical_len:
+            return
+        st_ = self.cfg.soi.stride if self.cfg.soi is not None else 1
+        if pt_m is not None and -(-tl // st_) > pt_m.logical_len:
+            return
+        p_sz = self._spec.page_size
+        soi = self.cfg.soi is not None
+        for b in sorted(meta["keys"]):
+            key = meta["keys"][b]
+            if b > tl or key in self._prefix_index:
+                continue
+            if soi and b not in meta["snapshots"]:
+                continue        # no carry snapshot: can't resume here
+            outer = tuple(int(pt_o.map[s_i, j]) for j in range(b // p_sz))
+            midp = ()
+            if pt_m is not None:
+                midp = tuple(int(pt_m.map[s_i, j])
+                             for j in range((b // st_) // p_sz))
+            if any(p <= 0 for p in outer) or any(p <= 0 for p in midp):
+                continue        # never index the null page
+            conv = queue = None
+            if soi:
+                conv, queue = meta["snapshots"][b]
+            for p in outer:
+                pt_o.pin(p)
+            for p in midp:
+                pt_m.pin(p)
+            self._prefix_index.put(key, PrefixEntry(
+                b, np.asarray(meta["tokens"][:b]).copy(), outer, midp,
+                conv, queue))
+
+    def _evictable_pages(self, pt, which: str) -> int:
+        """Pages only the prefix index keeps alive (refs == pin count):
+        eviction would free them."""
+        if not self._prefix_cache or pt is None:
+            return 0
+        pins: dict = {}
+        for e in self._prefix_index.entries():
+            for pid in (e.outer_pages if which == "outer" else e.mid_pages):
+                pins[pid] = pins.get(pid, 0) + 1
+        return sum(1 for pid, c in pins.items() if pt.refs[pid] == c)
+
+    def can_insert(self, true_length: int, slot: int | None = None) -> bool:
+        """Admission check for serving loops: can a prompt of
+        ``true_length`` real tokens be backed right now — counting free
+        pages, pages ``slot``'s eviction would release (if given and
+        occupied), and pages LRU eviction of the prefix index would free?
+        Conservative (a prefix hit only reduces the real need); ``insert``
+        remains the authority."""
+        if not self._paged or self._pt_outer is None:
+            return True
+        needs = [(self._pt_outer, "outer", true_length)]
+        if self._pt_mid is not None:
+            st_ = self.cfg.soi.stride
+            needs.append((self._pt_mid, "mid", -(-true_length // st_)))
+        for pt, which, n in needs:
+            have = (pt.freeable_after_release(slot)
+                    if slot is not None and self._occupied[slot]
+                    else pt.free_pages)
+            have += self._evictable_pages(pt, which)
+            if have < pt.pages_needed(n):
+                return False
+        return True
+
+    # -- prefill ----------------------------------------------------------
 
     def prefill(self, params, tokens, encoder_frames=None,
                 true_length: int | None = None) -> Prefix:
@@ -464,7 +810,16 @@ class SOIEngine(Engine):
         """Host loop over the ONE compiled chunk program: pad the prompt to
         a chunk multiple, append chunk by chunk at growing offsets, keep the
         logits of the chunk holding position true_length-1 (chunks past it
-        would be all-pad no-ops and are skipped)."""
+        would be all-pad no-ops and are skipped).
+
+        With the prefix cache enabled, a hit at boundary R fast-forwards the
+        loop: the cached pages are gathered into the fresh prefill buffer
+        (hydration — bit-identical K/V, no recompute), the SOI conv window /
+        extrapolation queue restore from the entry's host snapshots, and the
+        loop starts at chunk R/C — prefill cost drops from O(prompt) to
+        O(suffix). The final chunk (holding position true_length-1) always
+        runs, so the returned logits/first token never come from the cache.
+        """
         c = self._chunk
         n = (tl - 1) // c + 1
         pad = n * c - int(tokens.shape[1])
@@ -473,103 +828,252 @@ class SOIEngine(Engine):
         elif pad < 0:
             tokens = tokens[:, :n * c]   # trailing all-pad chunks: no-ops
         ms = self._fresh_prefix_fn(params)
+        i0 = 0
+        meta = None
+        soi = self.cfg.soi is not None
+        if self._prefix_cache:
+            toks_np = np.asarray(tokens[0][:tl])
+            block_keys = chain_keys(toks_np, self._spec.page_size)
+            meta = {"hit": 0, "hit_key": None, "tokens": toks_np,
+                    "keys": {b: k for b, k in block_keys.items()
+                             if b % self._pc_align == 0},
+                    "snapshots": {}}
+            hit = self._lookup_prefix(toks_np, tl, block_keys)
+            if hit is not None:
+                R, key, e = hit
+                rows = {"outer": self._pad_row(self._pt_outer,
+                                               e.outer_pages)}
+                if self._pt_mid is not None:
+                    rows["mid"] = self._pad_row(self._pt_mid, e.mid_pages)
+                n_frames = R // self.cfg.soi.stride if soi else 0
+                ms = self._hydrate_fn(ms, self._live["model"], rows,
+                                      jnp.asarray(R, jnp.int32),
+                                      jnp.asarray(n_frames, jnp.int32))
+                if soi:
+                    ms = dict(ms)
+                    ms["conv_buf"] = jnp.asarray(e.conv_buf)
+                    ms["queue"] = jnp.asarray(e.queue)
+                i0 = R // c
+                meta["hit"], meta["hit_key"] = R, key
+                self._pc_stats["hits"] += 1
+                self._pc_stats["tokens_skipped"] += R
+            else:
+                self._pc_stats["misses"] += 1
         tl_dev = jnp.asarray(tl, jnp.int32)
         logits = None
-        for i in range(n):
+        for i in range(i0, n):
             logits, ms = self._prefill_chunk_fn(
                 params, ms, tokens[:, i * c:(i + 1) * c],
                 jnp.asarray(i * c, jnp.int32), tl_dev)
+            b = (i + 1) * c
+            if (meta is not None and soi and b in meta["keys"]
+                    and meta["keys"][b] not in self._prefix_index):
+                # host snapshot of the SOI carries at this boundary: what a
+                # resumed prefill needs beyond the paged caches
+                meta["snapshots"][b] = (np.asarray(ms["conv_buf"]),
+                                        np.asarray(ms["queue"]))
         first = jnp.argmax(logits, axis=-1).astype(jnp.int32)
         return Prefix(state=ms, first_token=first, logits=logits,
-                      length=tl, true_length=tl)
+                      length=tl, true_length=tl, cache_meta=meta)
+
+    @staticmethod
+    def _pad_row(pt: PageTable, pids) -> jnp.ndarray:
+        row = np.zeros(pt.pages_per_slot, np.int32)
+        row[:len(pids)] = pids
+        return jnp.asarray(row)
+
+    # -- insert / generate / free ----------------------------------------
 
     def insert(self, prefix: Prefix, decode_state, slot: int):
         if not 0 <= int(slot) < self._slots:
             # XLA drops out-of-bounds scatter updates silently
             raise ValueError(f"slot {slot} out of range "
                              f"[0, {self._slots})")
-        if not self._paged:
-            return self._ins(decode_state, prefix.state, prefix.first_token,
-                             jnp.asarray(slot, jnp.int32), None)
         s_i = int(slot)
+        if not self._paged:
+            ds = self._ins(decode_state, prefix.state, prefix.first_token,
+                           jnp.asarray(slot, jnp.int32), None)
+            self._occupied[s_i] = True
+            self._live = ds
+            return ds
         # pages cover the TRUE prompt only: a bucketed/chunked prefix's pad
         # rows map to the null page (masked on read, discarded on write)
         true_len = prefix.true_length
         frames = (-(-true_len // self.cfg.soi.stride)
                   if self.cfg.soi is not None else 0)
-        if self._occupied[s_i]:
-            # Pre-check capacity BEFORE evicting: free_slot donates the old
-            # decode state, so failing after it would strand the caller with
-            # invalidated buffers and a half-released slot.
-            for pt, need in ((self._pt_outer, true_len),
-                             (self._pt_mid, frames)):
-                if pt is not None and not pt.can_realloc(s_i, need):
-                    raise RuntimeError(
-                        f"KV page pool exhausted: re-inserting into slot "
-                        f"{s_i} needs {pt.pages_needed(need)} pages but "
-                        f"only {pt.free_pages} (+ the slot's own) are free")
-            decode_state = self.free_slot(decode_state, s_i)
-        page_rows = {}
+        meta = prefix.cache_meta
+        shared_outer, shared_mid = self._shared_plan(meta, true_len)
+        # hold the shared pages across evictions/frees below: losing the
+        # hit entry mid-insert must not free pages we are about to adopt
+        temp_pins = ([(self._pt_outer, p) for p in shared_outer.values()]
+                     + [(self._pt_mid, p) for p in shared_mid.values()])
+        for pt, pid in temp_pins:
+            pt.pin(pid)
         try:
+            fresh = []
             if self._pt_outer is not None:
-                page_rows["outer"] = jnp.asarray(
-                    self._pt_outer.alloc_slot(s_i, true_len))
+                fresh.append((self._pt_outer,
+                              self._pt_outer.pages_needed(true_len)
+                              - len(shared_outer)))
             if self._pt_mid is not None:
-                page_rows["mid"] = jnp.asarray(
-                    self._pt_mid.alloc_slot(s_i, frames))
-            new_ds = self._ins(decode_state, prefix.state,
-                               prefix.first_token,
-                               jnp.asarray(slot, jnp.int32), page_rows)
+                fresh.append((self._pt_mid,
+                              self._pt_mid.pages_needed(frames)
+                              - len(shared_mid)))
+            if self._occupied[s_i]:
+                # Pre-check capacity BEFORE evicting: free_slot donates the
+                # old decode state, so failing after it would strand the
+                # caller with invalidated buffers and a half-released slot.
+                for pt, need in fresh:
+                    while (pt.freeable_after_release(s_i) < need
+                           and self._prefix_cache
+                           and len(self._prefix_index)):
+                        decode_state = self._evict_entry(decode_state)
+                    if pt.freeable_after_release(s_i) < need:
+                        raise RuntimeError(
+                            f"KV page pool exhausted: re-inserting into "
+                            f"slot {s_i} needs {need} fresh pages but only "
+                            f"{pt.free_pages} (+ the slot's own) are free")
+                decode_state = self.free_slot(decode_state, s_i)
+            for pt, need in fresh:
+                decode_state = self._make_room(pt, need, decode_state)
+            page_rows = {}
+            try:
+                if self._pt_outer is not None:
+                    _, write = self._pt_outer.alloc_slot(s_i, true_len,
+                                                         shared=shared_outer)
+                    page_rows["outer"] = jnp.asarray(write)
+                if self._pt_mid is not None:
+                    _, write = self._pt_mid.alloc_slot(s_i, frames,
+                                                       shared=shared_mid)
+                    page_rows["mid"] = jnp.asarray(write)
+                new_ds = self._ins(decode_state, prefix.state,
+                                   prefix.first_token,
+                                   jnp.asarray(slot, jnp.int32), page_rows)
+            except Exception:
+                # transactional: a failed insert (pool exhausted mid-way,
+                # mismatched prefix state) must not leak pages into an
+                # unoccupied slot — never-written pages go straight back
+                # (they were scrubbed when last freed) and adopted shared
+                # pages drop their new reference
+                for pt in (self._pt_outer, self._pt_mid):
+                    if pt is not None:
+                        pt.release(s_i)
+                raise
         except Exception:
-            # transactional: a failed insert (pool exhausted mid-way,
-            # mismatched prefix state) must not leak pages into an
-            # unoccupied slot — the never-written pages go straight back
-            for pt in (self._pt_outer, self._pt_mid):
-                if pt is not None:
-                    pt.release(s_i)
+            # dropping the temp pins after a rollback can free a page whose
+            # entry was evicted mid-insert — it still holds the old
+            # prefix's K/V, and ensure() would hand it to another slot
+            # unscrubbed, so scrub exactly like eviction does
+            decode_state = self._unpin_scrubbed(temp_pins, decode_state)
             raise
+        new_ds = self._unpin_scrubbed(temp_pins, new_ds)
+        self._pc_stats["pages_shared"] += (
+            sum(1 for p in shared_outer.values() if p > 0)
+            + sum(1 for p in shared_mid.values() if p > 0))
         self._clock[s_i] = true_len
         self._occupied[s_i] = True
+        if self._prefix_cache and meta:
+            self._register_prefix(s_i, meta, true_len)
+        self._live = new_ds
         return new_ds
+
+    def _unpin_scrubbed(self, temp_pins, decode_state):
+        """Drop insert-scoped temp pins; device-scrub any page that hit
+        refcount zero (possible only when the hit entry was LRU-evicted
+        while its pages were being adopted)."""
+        freed_o, freed_m = [], []
+        for pt, pid in temp_pins:
+            if pt.unpin(pid):
+                (freed_o if pt is self._pt_outer else freed_m).append(pid)
+        if not freed_o and not freed_m:
+            return decode_state
+        rows = {"outer": self._pad_row(self._pt_outer, freed_o)}
+        if self._pt_mid is not None:
+            rows["mid"] = self._pad_row(self._pt_mid, freed_m)
+        decode_state = self._scrub_fn(decode_state, rows)
+        self._live = decode_state
+        return decode_state
+
+    def _back_write_page(self, decode_state, pt: PageTable, slot: int,
+                         pos: int, group: str):
+        """Make the page this step's write lands on both *present* and
+        *exclusive*: allocate on first touch (grow-by-one), copy-on-write
+        when the page is shared (another slot or a prefix-index pin also
+        references it — writes would leak across requests)."""
+        idx = (pos % pt.logical_len) // pt.page_size
+        pid = int(pt.map[slot, idx])
+        if pid == 0:
+            decode_state = self._make_room(pt, 1, decode_state)
+            pt.ensure(slot, pos)
+            return decode_state
+        if pt.refs[pid] > 1:
+            if pt.free_pages < 1:
+                decode_state = self._make_room(pt, 1, decode_state)
+            if pt.refs[pid] > 1:   # eviction may have just unshared it
+                old, new = pt.cow(slot, idx)
+                fn = (self._cow_outer_fn if group == "outer"
+                      else self._cow_mid_fn)
+                decode_state = fn(decode_state,
+                                  jnp.asarray(old, jnp.int32),
+                                  jnp.asarray(new, jnp.int32))
+                self._pc_stats["cow_copies"] += 1
+                self._live = decode_state
+        return decode_state
 
     def generate(self, params, decode_state):
         if self._paged:
-            # grow-by-one allocation: back the cache row each live slot
-            # writes this step, then hand the updated maps to the compiled
-            # step as data
+            # back the cache row each live slot writes this step —
+            # grow-by-one allocation plus COW off shared prefix pages —
+            # then hand the updated maps to the compiled step as data
             st = self.cfg.soi.stride if self.cfg.soi is not None else 0
             for slot in np.nonzero(self._occupied)[0]:
                 t = int(self._clock[slot])
                 if self._pt_outer is not None:
-                    self._pt_outer.ensure(slot, t)
+                    decode_state = self._back_write_page(
+                        decode_state, self._pt_outer, slot, t, "outer")
                 if self._pt_mid is not None and t % st == 0:
-                    self._pt_mid.ensure(slot, t // st)
+                    decode_state = self._back_write_page(
+                        decode_state, self._pt_mid, slot, t // st, "mid")
             decode_state = dict(decode_state)
             model = dict(decode_state["model"])
             model["pages"] = self._page_maps()
             decode_state["model"] = model
             self._clock[self._occupied] += 1
         new_ds, data, logits = self._gen(params, decode_state)
+        self._live = new_ds
         return new_ds, ResultTokens(data=data, logits=logits)
 
     def free_slot(self, decode_state, slot: int):
+        s_i = int(slot)
+        if not 0 <= s_i < self._slots:
+            raise ValueError(f"slot {slot} out of range [0, {self._slots})")
+        if not self._occupied[s_i]:
+            # refcounting turns a silent double-free into corruption (a
+            # page freed twice lands on the free list twice and backs two
+            # requests at once) — refuse loudly instead
+            raise ValueError(
+                f"free_slot({s_i}): slot is not occupied — it was never "
+                f"inserted into, or already freed (double-free)")
+        self._occupied[s_i] = False
         if not self._paged:
             # scrub the slot's cache positions like the paged path scrubs
             # released pages: a freed request's tokens must be unreadable —
             # the slot's rows keep absorbing (masked, garbage) writes while
             # free, and insert() rewrites them wholesale on reuse
-            s_i = jnp.asarray(int(slot), jnp.int32)
-            rows = {"outer": s_i}
+            sl = jnp.asarray(s_i, jnp.int32)
+            rows = {"outer": sl}
             if self.cfg.soi is not None:
-                rows["mid"] = s_i
-            return self._release_fn(decode_state, s_i, rows)
-        s_i = int(slot)
+                rows["mid"] = sl
+            ds = self._release_fn(decode_state, sl, rows)
+            self._live = ds
+            return ds
         rows = {}
         if self._pt_outer is not None:
             rows["outer"] = jnp.asarray(self._pt_outer.release(s_i))
         if self._pt_mid is not None:
             rows["mid"] = jnp.asarray(self._pt_mid.release(s_i))
-        self._occupied[s_i] = False
         self._clock[s_i] = 0
-        return self._release_fn(decode_state, jnp.asarray(s_i, jnp.int32),
-                                rows)
+        ds = self._release_fn(decode_state, jnp.asarray(s_i, jnp.int32),
+                              rows)
+        self._live = ds
+        return ds

@@ -14,10 +14,9 @@ the per-slot clock vector ``state["t"]: (B,)``:
     that are mid-window keep serving their cached partial states while
     their neighbours recompute — mixed-phase batches decode bit-exactly.
 
-This replaces the ``steppers[t % stride]`` caller-side dispatch of
-``make_soi_steppers`` (now a deprecated shim): phase is data, not a
-compiled-program index, which is what makes slot-based continuous batching
-possible.
+This replaces the ``steppers[t % stride]`` caller-side dispatch of the old
+``make_soi_steppers`` shim (removed): phase is data, not a compiled-program
+index, which is what makes slot-based continuous batching possible.
 """
 
 from __future__ import annotations

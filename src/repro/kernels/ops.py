@@ -106,6 +106,26 @@ def paged_decode_attention(q, k_pool, v_pool, pos_pool, page_map, q_position,
                                 scale=scale, logit_softcap=logit_softcap)
 
 
+def gather_pages(pool, rows):
+    """Contiguous logical view of pool rows: ``(n_pages, P, ...)`` pool +
+    ``(n,)`` page ids -> ``(n * P, ...)``. The gather that materializes a
+    prefix's cached pages into a dense prefill buffer (prefix-cache
+    hydration); reference path is a plain XLA gather, and any future Pallas
+    specialization (scalar-prefetch page walk, like the paged decode
+    kernel) slots in here without touching callers.
+    """
+    n = rows.shape[0]
+    return pool[rows].reshape((n * pool.shape[1],) + pool.shape[2:])
+
+
+def copy_page(pool, src, dst):
+    """Copy pool row ``src`` onto row ``dst`` — the device half of
+    copy-on-write when a slot must write into a page shared with other
+    slots or pinned by the prefix index. ``src``/``dst`` are traced
+    scalars, so ONE compiled program serves every COW."""
+    return pool.at[dst].set(pool[src])
+
+
 def stmc_conv(window, w, b=None):
     mode = _mode()
     if mode in ("pallas", "interpret"):

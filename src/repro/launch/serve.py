@@ -20,9 +20,19 @@ Prefill compiles O(1) programs under real (every-length-different) traffic:
 * ``--bucket none`` restores exact-length prefill (one compile per distinct
   prompt length) for comparison.
 
+``--prefix-cache`` (requires ``--paged`` and ``--chunk-size``) turns on the
+copy-on-write prefix page cache: requests whose prompts share leading page
+blocks (``--shared-prefix N`` makes every request share its first N tokens,
+the system-prompt traffic shape) map the same KV + compressed-middle pages
+by refcount and skip the prefill compute over the cached prefix. Admission
+goes through ``engine.can_insert`` — a request the page pool cannot back
+right now is deferred instead of crashing the pool mid-insert.
+
 The tail line reports decode-phase throughput (prefill-produced first tokens
-are excluded — the decode clock starts after insert) and the prefill
-compile count, so recompile regressions are visible from the CLI.
+are excluded — the decode clock starts after insert), the prefill compile
+count, and — with the prefix cache on — hit rate, pages shared, tokens
+skipped, and COW copies, so recompile and cache regressions are visible
+from the CLI. The hit-rate counters never count the null page.
 """
 
 from __future__ import annotations
@@ -62,6 +72,15 @@ def main(argv=None):
                     help="chunked prefill: ONE compiled program appends this "
                          "many tokens per host-loop iteration (overrides "
                          "--bucket)")
+    ap.add_argument("--prefix-cache", action="store_true",
+                    help="copy-on-write prefix page cache: share KV + "
+                         "compressed-middle pages across requests with "
+                         "common prompt prefixes and skip prefill over "
+                         "cached prefixes (requires --paged --chunk-size)")
+    ap.add_argument("--shared-prefix", type=int, default=0,
+                    help="make every request share its first N prompt "
+                         "tokens (system-prompt traffic; exercises "
+                         "--prefix-cache)")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
     if args.bucket == "pow2":
@@ -82,52 +101,79 @@ def main(argv=None):
     b = args.batch
     prompt = jax.random.randint(jax.random.fold_in(rng, 1),
                                 (b, args.prompt_len), 0, cfg.vocab)
+    if args.shared_prefix:
+        n = min(args.shared_prefix, args.prompt_len)
+        prompt = prompt.at[:, :n].set(prompt[0, :n])
     max_len = args.prompt_len + args.gen_len
     plens = [max(1, args.prompt_len - i * args.stagger) for i in range(b)]
 
     engine = SOIEngine(cfg, max_concurrent_decodes=b, max_len=max_len,
                        paged=args.paged, page_size=args.page_size,
                        prefill_buckets=buckets,
-                       prefill_chunk=args.chunk_size)
+                       prefill_chunk=args.chunk_size,
+                       prefix_cache=args.prefix_cache)
     state = engine.init_decode_state(params)
 
     t0 = time.time()
     first = {}
+    admitted = []
     for slot in range(b):
+        # admission: a request the page pool cannot back right now is
+        # deferred, not crashed into a half-released slot mid-insert
+        if not engine.can_insert(plens[slot], slot):
+            print(f"request {slot} deferred: page pool cannot admit "
+                  f"{plens[slot]} tokens (size --paged pools for the "
+                  f"resident population)")
+            continue
         prefix = engine.prefill(params, prompt[slot, :plens[slot]])
         state = engine.insert(prefix, state, slot)
         first[slot] = int(prefix.first_token[0])
+        admitted.append(slot)
     t_prefill = time.time() - t0
+    if not admitted:
+        print(f"arch={cfg.name}: no request admitted — the paged pools "
+              f"cannot back a single prompt; grow n_pages or shrink "
+              f"--prompt-len")
+        return np.zeros((0, args.gen_len), np.int64)
 
-    out = {slot: [first[slot]] for slot in range(b)}
+    out = {slot: [first[slot]] for slot in admitted}
     n_steps = args.gen_len - 1   # every slot gains one token per step
     t0 = time.time()
     done = 0
     for _ in range(n_steps):
         state, result = engine.generate(params, state)
         data = np.asarray(result.data)   # (B, 3) — skip the (B, V) logits
-        for slot in range(b):
+        for slot in admitted:
             if len(out[slot]) < args.gen_len:
                 out[slot].append(int(data[slot, 0]))
                 if len(out[slot]) == args.gen_len:
                     state = engine.free_slot(state, slot)
                     done += 1
-        if done == b:
+        if done == len(admitted):
             break
     dt = time.time() - t0
     total = sum(len(v) for v in out.values())
     # each slot's FIRST token came from prefill (before the decode clock
     # started): counting it in the decode-phase rate overstated tok/s by
-    # `b` tokens — report decode-produced tokens against decode time
-    decoded = total - b
-    seqs = np.stack([np.asarray(out[s][:args.gen_len]) for s in range(b)])
+    # one per admitted slot — report decode-produced tokens vs decode time
+    decoded = total - len(admitted)
+    seqs = np.stack([np.asarray(out[s][:args.gen_len]) for s in admitted])
     print(f"arch={cfg.name} soi={args.soi or 'off'}  "
-          f"prefill {b} reqs (lens {plens}) in {t_prefill:.2f}s "
+          f"prefill {len(admitted)}/{b} reqs (lens {plens}) in "
+          f"{t_prefill:.2f}s "
           f"[{engine.prefill_compiles} prefill compile(s), "
           f"bucket={args.bucket if not args.chunk_size else '-'} "
           f"chunk={args.chunk_size or '-'}], "
-          f"decoded {decoded} tok across {b} slots in {dt:.2f}s "
+          f"decoded {decoded} tok across {len(admitted)} slots in {dt:.2f}s "
           f"({decoded / max(dt, 1e-9):.1f} tok/s decode)")
+    if args.prefix_cache:
+        pc = engine.prefix_cache_stats
+        print(f"prefix-cache: {pc['hits']}/{pc['hits'] + pc['misses']} hits "
+              f"({100 * pc['hit_rate']:.0f}%), "
+              f"{pc['pages_shared']} pages shared, "
+              f"{pc['tokens_skipped']} prompt tokens skipped, "
+              f"{pc['cow_copies']} COW copies, "
+              f"{pc['evictions']} evictions, {pc['entries']} entries")
     print("sample:", seqs[0, :16].tolist())
     return seqs
 

@@ -166,6 +166,37 @@ def paged_view(cache: dict, pages) -> dict:
     return out
 
 
+def hydrate_cache_prefix(dense: dict, pool: dict, rows, limit, *,
+                         axis: int = 0) -> dict:
+    """Fill logical rows [0, ``limit``) of a batch-1 dense cache from paged
+    pools (the prefix-cache prefill skip: a later chunk reads the cached
+    prefix's K/V through the ordinary dense path, without recomputing it).
+
+    ``rows``: (pages_per_slot,) page ids, 0-padded past the shared prefix —
+    entries beyond ``limit`` gather the null page and are masked off, so one
+    compiled program serves every hit length. ``axis`` is the layout axis of
+    scanned segments (pool leaves carry a leading layer axis when 1). The
+    copied rows are bit-identical to the pool contents, which is what makes
+    a resumed prefill bit-exact vs a cold one.
+    """
+    out = {}
+    n_pp = rows.shape[0]
+    limit = jnp.asarray(limit, jnp.int32)
+    for name, d in dense.items():
+        p = pool[name]
+        if axis == 0:
+            flat = kops.gather_pages(p, rows)[None]          # (1, S, ...)
+        else:
+            g = jax.vmap(kops.gather_pages, in_axes=(0, None))(p, rows)
+            flat = g[:, None]                                # (L, 1, S, ...)
+        s_log = flat.shape[axis + 1]
+        m = jnp.arange(s_log, dtype=jnp.int32) < limit
+        m = m.reshape((1,) * (axis + 1) + (s_log,)
+                      + (1,) * (flat.ndim - axis - 2))
+        out[name] = jnp.where(m, flat.astype(d.dtype), d)
+    return out
+
+
 def _cache_write(cache: dict, t, **entries) -> dict:
     """Write one token at absolute position t (ring indexed).
 

@@ -19,8 +19,9 @@ can be *precomputed* between token arrivals (paper's FP latency win).
 
 Deployment dispatch lives in ``repro.engine``: ONE jitted step resolves the
 phase from the per-slot clocks (``state["t"]: (B,)``), so batches may mix
-requests at different phases. ``make_soi_steppers`` below is the deprecated
-phase-specialized shim (uniform-phase batches only; FLOP accounting).
+requests at different phases. (The old ``make_soi_steppers`` per-phase shim
+is gone; phase-specialized wall-clock accounting now runs through
+``generate_step`` with fixed clock vectors — see ``benchmarks/soi_lm_bench``.)
 """
 
 from __future__ import annotations
@@ -362,89 +363,6 @@ def decode_step(params, cfg: ModelCfg, state: dict, token, *, constrain=_noc):
     new_state["segments"] = new_segments
     new_state["t"] = t + 1
     return _logits_one(params, cfg, x), new_state
-
-
-# ---------------------------------------------------------------------------
-# SOI scattered decode
-# ---------------------------------------------------------------------------
-
-def make_soi_steppers(params, cfg: ModelCfg):
-    """DEPRECATED shim — use ``repro.engine`` instead.
-
-    Returns [phase_0_step, ..., phase_{stride-1}_step]; phase = t % stride.
-    Every stepper assumes the *whole batch* sits at the same SOI phase, which
-    rules out continuous batching; ``repro.engine.step.generate_step`` is the
-    replacement: one jitted program with the phase branch resolved in-program
-    from the per-slot clocks, so mixed-phase batches decode correctly. Kept
-    only for phase-specialized FLOP accounting and legacy callers.
-
-    Phase semantics: compressed frame s completes when token s*stride arrives
-    (causal conv window ends there), so the middle runs on phase 0 and the
-    other phases reuse cached partial states.
-    """
-    soi = cfg.soi
-    st = soi.stride
-    pre_s, mid_s, post_s = soi_partition(cfg)
-    fp = soi.mode == "fp"
-
-    def run_outer(parts_p, parts_s, state_key, x, state, t, constrain):
-        new = []
-        for seg_p, seg_c, seg in zip(parts_p, state[state_key], parts_s):
-            x, nc = _segment_decode(seg_p, seg_c, seg, cfg, x, t,
-                                    constrain=constrain)
-            new.append(nc)
-        return x, new
-
-    def build(phase: int):
-        def step(params_, state, token, *, constrain=_noc):
-            from repro.models.transformer import cast_params
-            params_ = cast_params(params_, cfg)
-            pre_p, mid_p, post_p = _split_segment_params(params_["segments"],
-                                                         cfg)
-            soi_p = params_["soi"]
-            t = state["t"]
-            new_state = dict(state)
-            x = _embed_one(params_, cfg, token, constrain, t=t)
-            x, new_state["pre"] = run_outer(pre_p, pre_s, "pre", x, state, t,
-                                            constrain)
-            skip = x
-            queue = state["queue"]
-            if phase == 0:
-                # compression window complete: run the middle
-                window = jnp.concatenate([state["conv_buf"], x[:, None]],
-                                         axis=1)              # (B, st, d)
-                xc = jnp.einsum("bkd,kde->be", window,
-                                soi_p["compress"].astype(x.dtype))
-                s_pos = t // st
-                xm = xc
-                xm_new = []
-                for seg_p, seg_c, seg in zip(mid_p, state["mid"], mid_s):
-                    xm, nc = _segment_decode(seg_p, seg_c, seg, cfg, xm,
-                                             s_pos, constrain=constrain)
-                    xm_new.append(nc)
-                new_state["mid"] = xm_new
-                if fp:
-                    xu = queue[:, 0]
-                    queue = jnp.stack([xm] * st, axis=1)
-                else:
-                    xu = xm
-                    queue = jnp.stack([xm] * st, axis=1)
-            else:
-                xu = queue[:, min(phase - (0 if fp else 1), st - 1)]
-            new_state["queue"] = queue
-            new_state["conv_buf"] = jnp.concatenate(
-                [state["conv_buf"], x[:, None]], axis=1)[:, 1:]
-            fused = jnp.einsum(
-                "bc,cd->bd", jnp.concatenate([xu, skip], axis=-1),
-                soi_p["fuse"].astype(x.dtype))
-            x, new_state["post"] = run_outer(post_p, post_s, "post", fused,
-                                             state, t, constrain)
-            new_state["t"] = t + 1
-            return _logits_one(params_, cfg, x), new_state
-
-        return step
-
-    return [build(p) for p in range(st)]
 
 
 # ---------------------------------------------------------------------------

@@ -175,8 +175,9 @@ def test_page_pool_exhaustion_raises():
 
 def test_page_table_lifecycle():
     pt = PageTable(n_slots=2, logical_len=16, page_size=4, n_pages=6)
-    row = pt.alloc_slot(0, 9)            # 3 pages
+    row, write = pt.alloc_slot(0, 9)     # 3 pages
     assert (row > 0).sum() == 3 and pt.free_pages == 2
+    assert np.array_equal(row, write)    # nothing shared: all fresh writes
     assert pt.ensure(0, 9) is None       # already backed
     assert pt.ensure(0, 12) is not None  # crosses into page 3
     released = pt.release(0)

@@ -1,0 +1,406 @@
+"""Copy-on-write prefix page cache: share KV + compressed-middle pages
+across requests, skip prefill over cached prefixes.
+
+The structural claims under test:
+  * shared-prefix decode is BIT-exact vs a cold (unshared) prefill of the
+    same prompt — for GQA SOI (pp and fp: middle pages shared at 1/stride
+    rate), MLA absorbed decode, and windowed-ring configs;
+  * a windowed ring that wraps onto a shared page copies-on-write: sharers
+    never observe each other's overwrites;
+  * free/realloc of one sharer leaves the other sharer's output unchanged,
+    and index pins keep a prefix hittable after its last sharer frees;
+  * LRU eviction under pool pressure frees pinned-only pages (scrubbed) and
+    the next insert succeeds;
+  * a prefix-hit prefill adds ZERO new compiles (the compile-count guard
+    extended to the hydration program);
+  * ``free_slot`` on a never-inserted or already-freed slot raises a clear
+    ValueError on both layouts (refcounting makes silent double-free a
+    correctness hazard);
+  * PageTable invariants hold under random insert/decode/free/re-insert
+    schedules (hypothesis): refcounts >= 0 and exactly owners+pins, no page
+    owned twice mutably, null page 0 never allocated, freed pages reported
+    for scrub exactly when their refcount hits zero.
+"""
+
+import dataclasses
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+import repro.configs as C
+import repro.configs.qwen3_1_7b as Q
+from repro.configs.base import AttnCfg, BlockCfg, MLPCfg, ModelCfg, Segment
+from repro.distributed.sharding import split_axes
+from repro.engine import SOIEngine
+from repro.engine.pages import PageTable
+from repro.models import transformer as T
+
+S = 16
+
+
+def _mla_cfg():
+    mla = AttnCfg(kind="mla", n_heads=4, n_kv=4, head_dim=0, q_lora=16,
+                  kv_lora=16, qk_nope=16, qk_rope=8, v_head=16)
+    blk = BlockCfg(attn=mla, mlp=MLPCfg(kind="swiglu", d_ff=64))
+    return ModelCfg(name="mla-test", d_model=32, vocab=128,
+                    segments=(Segment(blocks=(blk,), n_layers=2),),
+                    tie_embeddings=True, dtype="float32")
+
+
+@functools.lru_cache(maxsize=None)
+def _setup(kind):
+    if kind == "mla":
+        cfg = _mla_cfg()
+    elif kind == "windowed":
+        cfg = dataclasses.replace(C.get_smoke("h2o-danube-1.8b"),
+                                  dtype="float32")
+    elif kind == "plain":
+        cfg = dataclasses.replace(Q.smoke_config(), dtype="float32")
+    else:                                  # "pp" / "fp"
+        cfg = dataclasses.replace(Q.smoke_config(soi=kind), dtype="float32")
+    params, _ = split_axes(T.init(jax.random.PRNGKey(0), cfg))
+    tokens = jax.random.randint(jax.random.PRNGKey(1), (4, S), 0, cfg.vocab)
+    return cfg, params, tokens
+
+
+def _drive(eng, params, tokens, schedule, steps):
+    """Run an insert/decode schedule with teacher-forced tokens; returns
+    {slot: [per-step logits]} so two engines can be compared bit-for-bit.
+    ``schedule``: [(slot, row, prompt_len)] inserted up front."""
+    ds = eng.init_decode_state(params)
+    cur = {}
+    outs = {}
+    for slot, row, p in schedule:
+        prefix = eng.prefill(params, tokens[row, :p])
+        ds = eng.insert(prefix, ds, slot)
+        cur[slot] = (row, p)
+    for _ in range(steps):
+        forced = ds["tokens"]
+        for sl, (row, c) in cur.items():
+            if c < S:
+                forced = forced.at[sl].set(tokens[row, c])
+        ds, res = eng.generate(params, dict(ds, tokens=forced))
+        for sl, (row, c) in list(cur.items()):
+            if c < S:
+                outs.setdefault(sl, []).append(np.asarray(res.logits[sl]))
+                cur[sl] = (row, c + 1)
+    return outs, ds
+
+
+# ---------------------------------------------------------------------------
+# Shared-prefix decode == cold decode, bit for bit
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("kind", ["pp", "fp", "mla", "windowed"])
+def test_shared_prefix_decode_bit_exact(kind):
+    """Two requests sharing a prompt prefix through the prefix cache decode
+    BIT-exactly like a cold engine without it — GQA SOI (pp+fp), MLA
+    absorbed, and windowed rings (where decode wraps onto the shared pages
+    and must COW)."""
+    cfg, params, tokens = _setup(kind)
+    shared = 8
+    tokens = tokens.at[1, :shared].set(tokens[0, :shared])
+    full = T.forward(params, cfg, tokens[:2])
+    plen = shared if kind == "windowed" else 12    # danube window = 8
+    kw = dict(max_concurrent_decodes=2, max_len=S, paged=True, page_size=4,
+              prefill_chunk=4)
+    cold = SOIEngine(cfg, **kw)
+    warm = SOIEngine(cfg, **kw, prefix_cache=True)
+    sched = [(0, 0, plen), (1, 1, plen)]
+    outs_c, _ = _drive(cold, params, tokens, sched, S - plen)
+    outs_w, _ = _drive(warm, params, tokens, sched, S - plen)
+    for sl in (0, 1):
+        for i, (a, b) in enumerate(zip(outs_c[sl], outs_w[sl])):
+            assert np.array_equal(a, b), (kind, sl, i,
+                                          float(np.max(np.abs(a - b))))
+        for i, a in enumerate(outs_w[sl]):       # absolute correctness too
+            ref = np.asarray(full[sl, plen + i])
+            assert float(np.max(np.abs(a - ref))) < 5e-4, (kind, sl, i)
+    st = warm.prefix_cache_stats
+    assert st["hits"] == 1 and st["misses"] == 1
+    assert st["tokens_skipped"] > 0
+    if kind in ("pp", "fp"):
+        # hit at 8 tokens: 2 outer pages + 1 middle page — the middle
+        # shares at 1/stride (= 1/2) the outer rate
+        assert st["pages_shared"] == 3, st
+    if kind == "windowed":
+        # decode wrapped the window-8 ring onto the shared page: COW fired
+        assert st["cow_copies"] > 0, st
+
+
+def test_free_realloc_leaves_sharer_unchanged():
+    """Free one sharer mid-decode and re-insert a different request into
+    its slot: the surviving sharer's outputs stay bit-identical to the
+    cold (unshared) engine's."""
+    cfg, params, tokens = _setup("pp")
+    tokens = tokens.at[1, :8].set(tokens[0, :8])
+    kw = dict(max_concurrent_decodes=2, max_len=S, paged=True, page_size=4,
+              prefill_chunk=4)
+
+    def run(eng):
+        outs, ds = _drive(eng, params, tokens,
+                          [(0, 0, 12), (1, 1, 12)], 2)
+        ds = eng.free_slot(ds, 0)              # sharer 0 leaves
+        prefix = eng.prefill(params, tokens[3, :12])
+        ds = eng.insert(prefix, ds, 0)         # unrelated request reuses it
+        cur = {0: (3, 12), 1: (1, 14)}
+        for _ in range(2):
+            forced = ds["tokens"]
+            for sl, (row, c) in cur.items():
+                if c < S:
+                    forced = forced.at[sl].set(tokens[row, c])
+            ds, res = eng.generate(params, dict(ds, tokens=forced))
+            for sl, (row, c) in list(cur.items()):
+                if c < S:
+                    outs.setdefault(sl, []).append(np.asarray(res.logits[sl]))
+                    cur[sl] = (row, c + 1)
+        return outs
+
+    outs_c = run(SOIEngine(cfg, **kw))
+    outs_w = run(SOIEngine(cfg, **kw, prefix_cache=True))
+    for sl in outs_c:
+        for a, b in zip(outs_c[sl], outs_w[sl]):
+            assert np.array_equal(a, b), sl
+
+
+def test_prefix_survives_last_sharers_free():
+    """Index pins keep a prefix resident past its last sharer's free: a
+    later identical-prefix prefill still hits and decodes correctly."""
+    cfg, params, tokens = _setup("plain")
+    full = T.forward(params, cfg, tokens)
+    eng = SOIEngine(cfg, max_concurrent_decodes=2, max_len=S, paged=True,
+                    page_size=4, prefill_chunk=4, prefix_cache=True)
+    ds = eng.init_decode_state(params)
+    ds = eng.insert(eng.prefill(params, tokens[0, :12]), ds, 0)
+    ds = eng.free_slot(ds, 0)                  # pages now pinned-only
+    assert eng.prefix_cache_stats["entries"] > 0
+    prefix = eng.prefill(params, tokens[0, :12])
+    assert eng.prefix_cache_stats["hits"] == 1
+    ds = eng.insert(prefix, ds, 1)
+    cur = 12
+    for _ in range(S - 12):
+        ds, res = eng.generate(params, dict(
+            ds, tokens=ds["tokens"].at[1].set(tokens[0, cur])))
+        assert float(np.max(np.abs(
+            np.asarray(res.logits[1]) - np.asarray(full[0, cur])))) < 5e-4
+        cur += 1
+
+
+def test_eviction_under_pool_pressure():
+    """A pool sized for exactly one resident request: pinned-only pages of
+    a freed prefix are LRU-evicted (and scrubbed) to admit the next insert;
+    the evicted prefix then misses."""
+    cfg, params, tokens = _setup("plain")
+    eng = SOIEngine(cfg, max_concurrent_decodes=2, max_len=S, paged=True,
+                    page_size=4, n_pages=5, prefill_chunk=4,
+                    prefix_cache=True)
+    ds = eng.init_decode_state(params)
+    ds = eng.insert(eng.prefill(params, tokens[0, :16]), ds, 0)
+    ds = eng.free_slot(ds, 0)
+    assert eng.prefix_cache_stats["entries"] > 0
+    # a different prompt needs 3 of the 4 real pages: the pins must give way
+    full = T.forward(params, cfg, tokens)
+    ds = eng.insert(eng.prefill(params, tokens[1, :12]), ds, 1)
+    assert eng.prefix_cache_stats["evictions"] > 0
+    cur = 12
+    for _ in range(S - 12):
+        ds, res = eng.generate(params, dict(
+            ds, tokens=ds["tokens"].at[1].set(tokens[1, cur])))
+        assert float(np.max(np.abs(
+            np.asarray(res.logits[1]) - np.asarray(full[1, cur])))) < 5e-4
+        cur += 1
+    # the evicted prefix is gone: same prompt misses now
+    hits = eng.prefix_cache_stats["hits"]
+    eng.prefill(params, tokens[0, :16])
+    assert eng.prefix_cache_stats["hits"] == hits
+
+
+def test_prefix_hit_prefill_adds_zero_compiles():
+    """Compile-count guard, extended to the prefix cache: the chunk program
+    compiles once, the hydration program compiles once on the FIRST hit,
+    and every further hit (or miss) adds zero compiles."""
+    cfg, params, tokens = _setup("pp")
+    tokens = tokens.at[1, :8].set(tokens[0, :8])
+    tokens = tokens.at[2, :8].set(tokens[0, :8])
+    eng = SOIEngine(cfg, max_concurrent_decodes=4, max_len=S, paged=True,
+                    page_size=4, prefill_chunk=4, prefix_cache=True)
+    ds = eng.init_decode_state(params)
+    ds = eng.insert(eng.prefill(params, tokens[0, :12]), ds, 0)
+    assert (eng.prefill_compiles, eng.hydrate_compiles) == (1, 0)
+    ds = eng.insert(eng.prefill(params, tokens[1, :12]), ds, 1)     # hit
+    assert (eng.prefill_compiles, eng.hydrate_compiles) == (1, 1)
+    ds = eng.insert(eng.prefill(params, tokens[2, :14]), ds, 2)     # hit
+    eng.prefill(params, tokens[3, :11])                             # miss
+    assert (eng.prefill_compiles, eng.hydrate_compiles) == (1, 1), \
+        "a prefix-hit prefill must add zero new compiles"
+    assert eng.prefix_cache_stats["hits"] == 2
+
+
+def test_constructor_guards():
+    cfg, _, _ = _setup("pp")
+    with pytest.raises(ValueError, match="paged"):
+        SOIEngine(cfg, max_concurrent_decodes=2, max_len=S,
+                  prefill_chunk=4, prefix_cache=True)
+    with pytest.raises(ValueError, match="prefill_chunk"):
+        SOIEngine(cfg, max_concurrent_decodes=2, max_len=S, paged=True,
+                  page_size=4, prefix_cache=True)
+
+
+# ---------------------------------------------------------------------------
+# Double-free raises (both layouts)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("paged", [False, True])
+def test_double_free_raises(paged):
+    cfg, params, tokens = _setup("pp")
+    kw = dict(paged=True, page_size=4) if paged else {}
+    eng = SOIEngine(cfg, max_concurrent_decodes=2, max_len=S, **kw)
+    ds = eng.init_decode_state(params)
+    with pytest.raises(ValueError, match="not occupied"):
+        eng.free_slot(ds, 0)                   # never inserted
+    ds = eng.insert(eng.prefill(params, tokens[0, :6]), ds, 0)
+    ds = eng.free_slot(ds, 0)
+    with pytest.raises(ValueError, match="double-free"):
+        eng.free_slot(ds, 0)                   # already freed
+    with pytest.raises(ValueError, match="out of range"):
+        eng.free_slot(ds, 7)
+    # the slot is reusable after the refused double-free
+    ds = eng.insert(eng.prefill(params, tokens[1, :6]), ds, 0)
+    ds, res = eng.generate(params, ds)
+    assert int(res.convert_to_numpy().get_result_at_slot(0).valid[0]) == 1
+
+
+# ---------------------------------------------------------------------------
+# PageTable invariants under random schedules (hypothesis)
+# ---------------------------------------------------------------------------
+
+def _check_invariants(pt: PageTable, pins: dict, scrubbed: set):
+    # null page: never allocated, never refcounted, never free-listed
+    assert pt.refs[0] == 0 and 0 not in pt._free
+    counts = np.zeros(pt.n_pages, np.int64)
+    for pid in pt.map.ravel():
+        assert pid >= 0
+        if pid:
+            counts[pid] += 1
+    for pid in range(1, pt.n_pages):
+        # refcount == slot owners + index pins, and never negative
+        assert pt.refs[pid] == counts[pid] + pins.get(pid, 0), pid
+        assert pt.refs[pid] >= 0
+        if counts[pid] > 1 or (counts[pid] == 1 and pins.get(pid, 0)):
+            # owned twice only ever *shared* (read-only), never mutably
+            assert pt.is_shared(pid)
+    free = list(pt._free)
+    assert len(free) == len(set(free))         # no page freed twice
+    for pid in free:
+        assert pt.refs[pid] == 0 and counts[pid] == 0
+    # every page that left the resident set was reported for scrubbing
+    for pid in free:
+        assert pid in scrubbed or pid not in _EVER_ALLOCATED, pid
+
+
+_EVER_ALLOCATED: set = set()
+
+
+def _run_schedule(integers, choice, boolean):
+    """One random insert/decode/free/re-insert schedule against PageTable,
+    checking the invariants after every op. The draw interface (integers /
+    choice / boolean) is satisfied by hypothesis strategies or a seeded
+    numpy fallback, so the invariants run even where hypothesis isn't
+    installed."""
+    _EVER_ALLOCATED.clear()
+    n_pages = integers(3, 12)
+    pt = PageTable(n_slots=3, logical_len=16, page_size=4, n_pages=n_pages)
+    pins: dict = {}
+    scrubbed: set = set()
+    occupied: set = set()
+    for _ in range(integers(1, 30)):
+        op = choice(["insert", "free", "decode", "pin", "unpin", "cow"])
+        resident = [p for p in range(1, n_pages) if pt.refs[p] > 0]
+        if op == "insert":
+            free_slots = [s for s in range(3) if s not in occupied]
+            if not free_slots:
+                continue
+            slot = choice(free_slots)
+            n_pos = integers(1, 20)
+            shared = {}
+            if resident and boolean():
+                shared[integers(0, pt.pages_needed(n_pos) - 1)] = \
+                    choice(resident)
+            try:
+                row, write = pt.alloc_slot(slot, n_pos, shared=shared)
+            except RuntimeError:           # pool exhausted: roll back
+                freed = pt.release(slot)
+                scrubbed.update(int(p) for p in freed[freed > 0])
+                continue
+            _EVER_ALLOCATED.update(int(p) for p in row[row > 0])
+            for i, pid in shared.items():  # shared: mapped, never rewritten
+                assert row[i] == pid and write[i] == 0
+            occupied.add(slot)
+        elif op == "free" and occupied:
+            slot = choice(sorted(occupied))
+            freed = pt.release(slot)
+            scrubbed.update(int(p) for p in freed[freed > 0])
+            occupied.discard(slot)
+        elif op == "decode" and occupied:
+            slot = choice(sorted(occupied))
+            try:
+                pid = pt.ensure(slot, integers(0, 31))
+            except RuntimeError:
+                continue
+            if pid is not None:
+                _EVER_ALLOCATED.add(int(pid))
+        elif op == "pin" and resident:
+            pid = choice(resident)
+            pt.pin(pid)
+            pins[pid] = pins.get(pid, 0) + 1
+        elif op == "unpin" and pins:
+            pid = choice(sorted(pins))
+            if pt.unpin(pid):
+                scrubbed.add(pid)
+            pins[pid] -= 1
+            if not pins[pid]:
+                del pins[pid]
+        elif op == "cow" and occupied:
+            slot = choice(sorted(occupied))
+            idxs = [i for i in range(pt.pages_per_slot)
+                    if pt.is_shared(int(pt.map[slot, i]))]
+            if not idxs:
+                continue
+            idx = choice(idxs)
+            try:
+                old, new = pt.cow(slot, idx)
+            except RuntimeError:
+                continue
+            _EVER_ALLOCATED.add(int(new))
+            assert old != new and pt.map[slot, idx] == new
+            assert pt.refs[old] >= 1       # other owners keep it resident
+        _check_invariants(pt, pins, scrubbed)
+
+
+def test_page_table_invariants_random_schedules():
+    """Seeded-random schedules (always runs, even without hypothesis)."""
+    for seed in range(200):
+        rng = np.random.default_rng(seed)
+        _run_schedule(
+            integers=lambda lo, hi: int(rng.integers(lo, hi + 1)),
+            choice=lambda seq: seq[int(rng.integers(0, len(seq)))],
+            boolean=lambda: bool(rng.integers(0, 2)))
+
+
+def test_page_table_invariants_hypothesis():
+    pytest.importorskip("hypothesis")
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+
+    @settings(max_examples=80, deadline=None)
+    @given(st.data())
+    def run(data):
+        _run_schedule(
+            integers=lambda lo, hi: data.draw(st.integers(lo, hi)),
+            choice=lambda seq: data.draw(st.sampled_from(list(seq))),
+            boolean=lambda: data.draw(st.booleans()))
+
+    run()

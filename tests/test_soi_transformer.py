@@ -45,7 +45,6 @@ def test_scattered_decode_equals_offline(arch, mode):
     tokens = jax.random.randint(jax.random.PRNGKey(1), (b, s), 0, cfg.vocab)
     full = T.forward(params, cfg, tokens)
     assert bool(jnp.all(jnp.isfinite(full)))
-    assert len(D.make_soi_steppers(params, cfg)) == cfg.soi.stride  # shim
     jstep = jax.jit(lambda p, st_, tk: generate_step(p, cfg, st_, tk))
     state = D.init_decode_state(params, cfg, b, max_len=s)
     for t in range(s):
