@@ -24,8 +24,9 @@ def main() -> None:
 
     from benchmarks import (appendix_b_prediction, paged_kv_bench,
                             prefill_bench, prefix_cache_bench, pruning_soi,
-                            quality_pp, soi_lm_bench, table1_pp_soi,
-                            table2_fp_soi, table3_resampling, table4_asc)
+                            quality_pp, selfspec_bench, soi_lm_bench,
+                            table1_pp_soi, table2_fp_soi, table3_resampling,
+                            table4_asc)
 
     # every bench below emits a machine-readable BENCH_*.json trajectory
     # point next to its human-readable report
@@ -42,6 +43,7 @@ def main() -> None:
         paged_kv_bench.run(csv=args.csv)
         prefill_bench.run(csv=args.csv)
         prefix_cache_bench.run(csv=args.csv)
+        selfspec_bench.run(csv=args.csv)
 
     # roofline summary (from stored dry-run artifacts, if present)
     try:

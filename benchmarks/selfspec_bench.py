@@ -1,0 +1,120 @@
+"""Self-speculative decoding: end-to-end serving throughput of
+``SOIEngine(speculate=K)`` vs the per-token engine, swept over K and the
+SOI stride.
+
+What the numbers mean at smoke scale (CPU container, directional): a K
+window runs K-1 draft steps plus K verify steps, so it breaks even only
+where the off-phase draft step is substantially cheaper than the full
+step, or where per-call dispatch dominates per-step compute. At d=64 the
+compressed middle is a small slice of the step's wallclock (the
+``devloop_offphase_speedup_vs_phase0_x`` row of ``BENCH_soi_lm.json``
+measures exactly this), so ``speedup_x`` sits BELOW 1.0 here — the cell
+exists to track when kernel work / larger configs make the middle's skip
+real, at which point the window's ~(2K-1)/K step-equivalents per K
+committed tokens flips profitable. ``accept_rate`` is the fraction of
+off-phase draft tokens the phase-0 verifier kept; with randomly
+initialized smoke weights the extrapolation gap rarely flips a greedy
+argmax, so the rate sits near 1.0 — the paper-relevant measurement on
+trained weights is how far it falls below that while
+``tokens_per_verify`` stays above the break-even ``1 + (K-1)/K``.
+
+Emits ``BENCH_selfspec.json``: per (stride, K) cell — accept rate, mean
+committed tokens per verify window, speculative and per-token end-to-end
+decode tok/s, and their ratio.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+import time
+
+import numpy as np
+
+import jax
+
+import repro.configs.qwen3_1_7b as Q
+from repro.distributed.sharding import split_axes
+from repro.engine.soi_engine import SOIEngine
+from repro.models import transformer as T
+
+BATCH = 4
+PROMPT = 16
+GEN = 64          # decode tokens per slot per timed run
+WARM = 8          # decode tokens per slot to warm compiles
+
+
+def _serve(cfg, params, prompts, gen, *, speculate):
+    eng = SOIEngine(cfg, max_concurrent_decodes=len(prompts),
+                    max_len=PROMPT + GEN + 8, speculate=speculate)
+    ds = eng.init_decode_state(params)
+    for i, p in enumerate(prompts):
+        ds = eng.insert(eng.prefill(params, p), ds, i)
+    counts = [0] * len(prompts)
+    calls = 0
+    while min(counts) < gen:
+        ds, rt = eng.generate(params, ds)
+        rt = rt.convert_to_numpy()
+        calls += 1
+        for i in range(len(prompts)):
+            sd = rt.get_result_at_slot(i)
+            counts[i] += 1 if sd.accepted is None else int(sd.accepted[0])
+    return eng, sum(counts), calls
+
+
+def _time_serve(cfg, params, prompts, *, speculate):
+    _serve(cfg, params, prompts, WARM, speculate=speculate)   # compile+warm
+    t0 = time.time()
+    eng, toks, calls = _serve(cfg, params, prompts, GEN, speculate=speculate)
+    dt = time.time() - t0
+    return eng, toks / dt, calls
+
+
+def run(csv=False, out_json="BENCH_selfspec.json"):
+    rows = {}
+    for stride in (2, 4):
+        base = Q.smoke_config(soi="pp")
+        cfg = dataclasses.replace(
+            base, soi=dataclasses.replace(base.soi, stride=stride))
+        params, _ = split_axes(T.init(jax.random.PRNGKey(0), cfg))
+        rng = np.random.RandomState(0)
+        # staggered lengths: slots sit at different SOI phases
+        prompts = [jax.numpy.asarray(
+            rng.randint(0, cfg.vocab, (max(1, PROMPT - i),)), jax.numpy.int32)
+            for i in range(BATCH)]
+        _, base_tps, _ = _time_serve(cfg, params, prompts, speculate=None)
+        for k in (2, 4):
+            eng, spec_tps, calls = _time_serve(cfg, params, prompts,
+                                               speculate=k)
+            s = eng.spec_accept_stats()
+            cell = {
+                "accept_rate": s["accept_rate"],
+                "tokens_per_verify": s["tokens_per_window"],
+                "spec_tok_s": spec_tps,
+                "base_tok_s": base_tps,
+                "speedup_x": spec_tps / base_tps,
+                "spec_compiles": eng.spec_compiles,
+            }
+            rows[f"stride{stride}_k{k}"] = cell
+            if csv:
+                print(f"selfspec/stride{stride}_k{k},"
+                      f"{1e6 / spec_tps:.0f},"
+                      f"accept={cell['accept_rate']:.2f},"
+                      f"tpv={cell['tokens_per_verify']:.2f},"
+                      f"speedup={cell['speedup_x']:.2f}x")
+    with open(out_json, "w") as f:
+        json.dump(rows, f, indent=2)
+    if not csv:
+        print("\n== Self-speculative serving (smoke scale, CPU, "
+              "directional) ==")
+        for name, cell in rows.items():
+            print(f"  {name:14s} accept={cell['accept_rate']:.2f} "
+                  f"tok/verify={cell['tokens_per_verify']:.2f} "
+                  f"spec {cell['spec_tok_s']:.1f} tok/s vs "
+                  f"base {cell['base_tok_s']:.1f} tok/s "
+                  f"({cell['speedup_x']:.2f}x)")
+    return rows
+
+
+if __name__ == "__main__":
+    run()

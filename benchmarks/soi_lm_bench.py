@@ -95,6 +95,38 @@ def run(csv=False, out_json="BENCH_soi_lm.json"):
     # the dispatch-pipelined number the history tracks)
     t_std_sync = _time_fixed_phase(jstd, params_std, state_std)
 
+    # The host-loop numbers above are DISPATCH-BOUND at smoke scale: one
+    # Python->XLA round trip per step costs more than the tiny model's
+    # compute, which is why they once showed off-phase ~ phase-0 (the
+    # middle's skipped FLOPs vanished inside the dispatch floor). The
+    # device-side loop below runs N steps inside ONE compiled program
+    # (lax.fori_loop, clock re-pinned every iteration so every step takes
+    # the same cond branch) — its per-step time is almost pure compute, so
+    # the two sets of numbers bracket dispatch overhead vs the branch
+    # split. Both are emitted; regressions watch the devloop ratio.
+    def _time_device_loop(cfg_, params_, state, pin_t, n=200):
+        def nsteps(p, st_):
+            def body(_, carry):
+                st_i, _lg = carry
+                lg, ns = generate_step(p, cfg_, dict(st_i, t=pin_t), tok)
+                return ns, lg
+            return jax.lax.fori_loop(
+                0, n, body, (st_, jnp.zeros((b, cfg_.vocab), jnp.float32)))
+        jfn = jax.jit(nsteps)
+        out = jfn(params_, state)
+        jax.block_until_ready(out)          # compile + warm
+        t0 = time.time()
+        out = jfn(params_, state)
+        jax.block_until_ready(out)
+        return (time.time() - t0) / n
+
+    t_phase0_dev = _time_device_loop(cfg_soi, params_soi, st_p0,
+                                     jnp.zeros((b,), jnp.int32))
+    t_offphase_dev = _time_device_loop(cfg_soi, params_soi, st_off,
+                                       jnp.ones((b,), jnp.int32))
+    t_std_dev = _time_device_loop(cfg_std, params_std, state_std,
+                                  jnp.asarray(state_std["t"]))
+
     rows = {
         "std_step_flops": f_std,
         # static count of the ONE program: includes BOTH lax.cond branches;
@@ -113,6 +145,15 @@ def run(csv=False, out_json="BENCH_soi_lm.json"):
     t_avg = (t_phase0 + (st - 1) * t_offphase) / st
     rows["wallclock_step_std_sync_s"] = t_std_sync
     rows["avg_wallclock_reduction_%"] = 100 * (1 - t_avg / t_std_sync)
+    # dispatch-free (device-loop) counterparts of the fixed-phase numbers
+    rows["devloop_step_std_s"] = t_std_dev
+    rows["devloop_step_soi_phase0_s"] = t_phase0_dev
+    rows["devloop_step_soi_offphase_s"] = t_offphase_dev
+    rows["devloop_offphase_speedup_vs_phase0_x"] = (t_phase0_dev
+                                                    / t_offphase_dev)
+    t_avg_dev = (t_phase0_dev + (st - 1) * t_offphase_dev) / st
+    rows["devloop_avg_wallclock_reduction_%"] = 100 * (1 - t_avg_dev
+                                                       / t_std_dev)
     with open(out_json, "w") as f:
         json.dump(rows, f, indent=2)
     if csv:

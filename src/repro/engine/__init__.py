@@ -158,6 +158,59 @@ states; MoE expert capacity — see
 prefill; ``SOIEngine.prefill_compiles`` counts traces so serving
 dashboards (and ``launch/serve.py``) surface recompiles either way.
 
+Self-speculative decoding (``SOIEngine(..., speculate=K)``)
+-----------------------------------------------------------
+
+SOI's claim — the middle's partial states are predictable enough to
+extrapolate instead of recompute — is exactly the property a *draft model*
+needs, so the model drafts for itself (``repro.engine.speculative``). Each
+``generate`` call becomes one fused draft+verify window committing up to K
+tokens per slot; greedy output is token-for-token identical to per-token
+serving (the draft changes *when* tokens are verified, never *which*
+tokens survive — regressions: ``tests/test_speculative.py``).
+
+**The draft/verify contract.** The draft is ``K-1`` off-phase-forced steps
+(``generate_step(..., draft=True)``): it may read everything a true
+off-phase step reads — the outer KV it appends, the conv window, and the
+*stale* extrapolation queue — but the compressed middle never runs, and
+all its cache writes land in a scan-internal copy of the state that is
+discarded when the burst returns its candidate tokens. The verify then
+replays the window's inputs through the TRUE phase schedule (middle
+recomputed at every crossed stride boundary) and commits the longest
+prefix where the draft guessed its own next input, plus the verifier's
+correction token — so every window commits ``n ∈ [1, K]``. The verify is
+a scan of the ordinary step rather than a chunk-parallel scorer because
+batching the K queries into one GEMM changes result bits at the ULP level
+(shape-dependent accumulation), which would break the cache bit-equality
+contract.
+
+**Rollback semantics.** A rejected position must leave zero trace:
+
+* *clock* — ``t`` advances only on committed iterations, so the per-slot
+  clocks land exactly where token-by-token decoding would put them;
+* *caches* — dense layouts keep rejected slots' old rows via per-slot
+  selects; paged layouts route rejected writes to the null page, so pool
+  bytes past the committed clock stay scrubbed;
+* *extrapolation queue / conv window* — refreshed only on committed
+  phase-0 crossings / committed steps;
+* *pages* — the engine backs pages for all K candidate positions before
+  the window and afterwards drops (``PageTable.drop``) the fresh pages
+  whose positions were all rejected; they were never written, so no
+  device scrub is needed. COW copies made while backing are kept: a page
+  shared with the prefix cache is copied *before* the window writes near
+  it, which is exactly the copy the slot needs the moment its clock
+  reaches that page — sharers never observe a speculative write, rejected
+  or not.
+
+``insert(..., speculate=False)`` opts a request out (it commits exactly
+one token per window), so speculative and plain requests share a batch.
+``free_slot`` mid-window is safe: pending draft tokens die with the
+slot's active bit and speculatively-grown pages are swept with the rest
+of the slot's pages. ``spec_accept_stats()`` reports accept rate and mean
+tokens/window; ``spec_compiles`` counts window traces (the compile guard
+pins it at 1 per engine regardless of K). ``ResultTokens`` widens to K
+token columns plus a per-slot ``accepted`` count.
+
 Follow-ons recorded in ROADMAP.md: multi-host prefill/generate
 disaggregation, phase-aligned slot scheduling, cross-engine prefix-cache
 persistence.
@@ -168,10 +221,13 @@ from repro.engine.pages import PageTable, PrefixEntry, PrefixIndex
 from repro.engine.session import (StreamSession, lm_stream_session,
                                   unet_stream_session)
 from repro.engine.soi_engine import SOIEngine
+from repro.engine.speculative import (draft_burst, speculative_window,
+                                      verify_commit)
 from repro.engine.step import generate_step
 
 __all__ = [
     "Engine", "PageTable", "Prefix", "PrefixEntry", "PrefixIndex",
     "ResultTokens", "SlotData", "SOIEngine", "StreamSession",
-    "generate_step", "lm_stream_session", "unet_stream_session",
+    "draft_burst", "generate_step", "lm_stream_session",
+    "speculative_window", "unet_stream_session", "verify_commit",
 ]

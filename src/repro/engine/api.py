@@ -23,24 +23,32 @@ DecodeState = Any
 @dataclasses.dataclass(frozen=True)
 class SlotData:
     """One slot's share of a generate step's output."""
-    tokens: Any           # (1,) int32
+    tokens: Any           # (n_tokens,) int32
     valid: Any            # (1,) int32 — 0 for unoccupied slots
     lengths: Any          # (1,) int32 — absolute position after the step
+    accepted: Any = None  # (1,) int32 — committed-token count (speculative
+    #                       engines; the first ``accepted`` entries of
+    #                       ``tokens`` are real). None from per-token engines
+    #                       whose single token is always committed.
 
 
 @dataclasses.dataclass(frozen=True)
 class ResultTokens:
     """Tokens emitted by one generate step, one row per slot.
 
-    ``data`` is a single (B, 3) int32 array — [token, valid, length] — kept
-    as one array so the device->host transfer is a single copy; ``logits``
-    (B, V) rides along for sampling/verification harnesses.
+    ``data`` is a single (B, n_cols) int32 array kept as one array so the
+    device->host transfer is a single copy; ``logits`` (B, V) rides along
+    for sampling/verification harnesses. Per-token engines emit
+    [token, valid, length] (the defaults below); speculative engines emit
+    up to K tokens per slot — [tok_0..tok_{K-1}, valid, length, accepted] —
+    and say so by widening ``tokens_idx`` and setting ``accepted_idx``.
     """
     data: Any
     logits: Optional[Any] = None
     tokens_idx: tuple = (0, 1)
     valid_idx: tuple = (1, 2)
     length_idx: tuple = (2, 3)
+    accepted_idx: Optional[tuple] = None
 
     def convert_to_numpy(self) -> "ResultTokens":
         return dataclasses.replace(
@@ -52,6 +60,9 @@ class ResultTokens:
             tokens=self.data[slot, self.tokens_idx[0]:self.tokens_idx[1]],
             valid=self.data[slot, self.valid_idx[0]:self.valid_idx[1]],
             lengths=self.data[slot, self.length_idx[0]:self.length_idx[1]],
+            accepted=(None if self.accepted_idx is None else
+                      self.data[slot,
+                                self.accepted_idx[0]:self.accepted_idx[1]]),
         )
 
 

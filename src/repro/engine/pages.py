@@ -173,6 +173,20 @@ class PageTable:
             return self._alloc_one(slot, idx)
         return None
 
+    def drop(self, slot: int, idx: int) -> bool:
+        """Unmap one page entry from ``slot`` without touching the rest of
+        its row — the rollback of a speculative grow-by-one whose position
+        was rejected. Returns True when the page went back to the free
+        list. A page that was never written (speculative backing routes
+        rejected writes to the null page) needs no device scrub. No-op on
+        an already-empty entry, so rollback after a partial failure (or
+        after ``release`` already swept the slot) is idempotent."""
+        pid = int(self.map[slot, idx])
+        if pid == 0:
+            return False
+        self.map[slot, idx] = 0
+        return self._decref(pid)
+
     def cow(self, slot: int, idx: int) -> tuple:
         """Copy-on-write: give ``slot`` a private page for map entry ``idx``
         (currently shared). Returns ``(old_pid, new_pid)`` — the caller

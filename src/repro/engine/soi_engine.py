@@ -49,6 +49,7 @@ import jax.numpy as jnp
 from repro.configs.base import ModelCfg, Segment
 from repro.engine.api import Engine, Prefix, ResultTokens
 from repro.engine.pages import PageTable, PrefixEntry, PrefixIndex, chain_keys
+from repro.engine.speculative import speculative_window
 from repro.engine.step import generate_step
 from repro.kernels import ops as kops
 from repro.models import attention as attn
@@ -292,7 +293,7 @@ class SOIEngine(Engine):
                  page_size: int = 16, n_pages: int | None = None,
                  n_pages_mid: int | None = None,
                  prefill_buckets="pow2", prefill_chunk: int | None = None,
-                 prefix_cache: bool = False):
+                 prefix_cache: bool = False, speculate: int | None = None):
         self.cfg = cfg
         self.max_len = max_len
         self._slots = max_concurrent_decodes
@@ -303,6 +304,23 @@ class SOIEngine(Engine):
         self._occupied = np.zeros(self._slots, bool)
         self._clock = np.zeros(self._slots, np.int64)
         self._live = None           # the ONE live decode state (paged)
+        if speculate is not None and int(speculate) < 1:
+            raise ValueError(f"speculate must be >= 1, got {speculate}")
+        self._speculate = None if speculate is None else int(speculate)
+        # which slots run speculative windows (insert(..., speculate=...));
+        # non-speculating slots commit exactly one token per window, so
+        # speculative and plain requests coexist in one batch
+        self._spec_slots = np.zeros(self._slots, bool)
+        # fresh pages allocated for a window's candidate positions, per
+        # slot: (table, page-map index, first backed position) — consumed
+        # after the window (rejected positions' pages are dropped), cleared
+        # by free_slot so a freed request never leaks speculative pages
+        self._spec_pending = [[] for _ in range(self._slots)]
+        self.spec_stats = {"windows": 0, "slot_windows": 0, "committed": 0,
+                           "draft_candidates": 0, "draft_accepted": 0}
+        # traces of the jitted speculative window (the compile-count guard
+        # checks it stays at 1 regardless of K and acceptance patterns)
+        self.spec_compiles = 0
         if cfg.learned_pos_len and max_len > cfg.learned_pos_len:
             # jnp.take clamps out-of-bounds rows, so decodes past the table
             # would silently reuse the LAST position embedding forever —
@@ -395,6 +413,19 @@ class SOIEngine(Engine):
             return ({"model": ms, "tokens": nxt, "active": ds["active"]},
                     data, logits)
 
+        def _specgen(params, ds, spec_mask):
+            self.spec_compiles += 1     # body runs once per trace
+            ms, committed, n_acc, nxt, logits = speculative_window(
+                params, cfg, ds["model"], ds["tokens"],
+                k=self._speculate, active=ds["active"], spec=spec_mask,
+                constrain=constrain)
+            data = jnp.concatenate(
+                [committed,
+                 jnp.stack([ds["active"].astype(jnp.int32), ms["t"], n_acc],
+                           axis=1)], axis=1)
+            return ({"model": ms, "tokens": nxt, "active": ds["active"]},
+                    data, logits)
+
         def _ins(ds, pstate, first_token, slot, page_rows):
             model = insert_state(cfg, ds["model"], pstate, slot,
                                  page_rows=page_rows)
@@ -484,6 +515,7 @@ class SOIEngine(Engine):
         # donate the decode state: the per-slot KV caches dominate serving
         # HBM, and without donation every step double-buffers them
         self._gen = jax.jit(_gen, donate_argnums=(1,))
+        self._specgen = jax.jit(_specgen, donate_argnums=(1,))
         self._ins = jax.jit(_ins, donate_argnums=(0,))
         self._prefill_fn = jax.jit(_prefill)
         self._prefill_chunk_fn = jax.jit(_prefill_chunk, donate_argnums=(1,))
@@ -588,6 +620,8 @@ class SOIEngine(Engine):
                             if self._mid_len else None)
         self._occupied = np.zeros(self._slots, bool)
         self._clock = np.zeros(self._slots, np.int64)
+        self._spec_slots = np.zeros(self._slots, bool)
+        self._spec_pending = [[] for _ in range(self._slots)]
         # a fresh decode state invalidates every resident page: the prefix
         # index — and the serving counters that describe it — restart with it
         self._prefix_index = PrefixIndex()
@@ -884,12 +918,22 @@ class SOIEngine(Engine):
 
     # -- insert / generate / free ----------------------------------------
 
-    def insert(self, prefix: Prefix, decode_state, slot: int):
+    def insert(self, prefix: Prefix, decode_state, slot: int,
+               speculate: bool | None = None):
+        """Install a prefilled request into ``slot``. ``speculate`` opts
+        this request in/out of speculative windows on a speculative engine
+        (default: in); opted-out slots commit exactly one token per window,
+        so mixed batches serve both kinds at once."""
         if not 0 <= int(slot) < self._slots:
             # XLA drops out-of-bounds scatter updates silently
             raise ValueError(f"slot {slot} out of range "
                              f"[0, {self._slots})")
         s_i = int(slot)
+        if speculate and self._speculate is None:
+            raise ValueError("insert(speculate=True) needs an engine built "
+                             "with speculate=K")
+        self._spec_slots[s_i] = (self._speculate is not None
+                                 if speculate is None else bool(speculate))
         if not self._paged:
             ds = self._ins(decode_state, prefix.state, prefix.first_token,
                            jnp.asarray(slot, jnp.int32), None)
@@ -999,13 +1043,17 @@ class SOIEngine(Engine):
         """Make the page this step's write lands on both *present* and
         *exclusive*: allocate on first touch (grow-by-one), copy-on-write
         when the page is shared (another slot or a prefix-index pin also
-        references it — writes would leak across requests)."""
+        references it — writes would leak across requests). Returns
+        ``(decode_state, fresh_idx)`` — the page-map index of a first-touch
+        allocation (the speculative path records these so a rejected
+        position's page can be dropped), or None when the position was
+        already backed / served by COW."""
         idx = (pos % pt.logical_len) // pt.page_size
         pid = int(pt.map[slot, idx])
         if pid == 0:
             decode_state = self._make_room(pt, 1, decode_state)
             pt.ensure(slot, pos)
-            return decode_state
+            return decode_state, idx
         if pt.refs[pid] > 1:
             if pt.free_pages < 1:
                 decode_state = self._make_room(pt, 1, decode_state)
@@ -1018,9 +1066,11 @@ class SOIEngine(Engine):
                                   jnp.asarray(new, jnp.int32))
                 self._pc_stats["cow_copies"] += 1
                 self._live = decode_state
-        return decode_state
+        return decode_state, None
 
     def generate(self, params, decode_state):
+        if self._speculate is not None:
+            return self._generate_spec(params, decode_state)
         if self._paged:
             # back the cache row each live slot writes this step —
             # grow-by-one allocation plus COW off shared prefix pages —
@@ -1029,10 +1079,10 @@ class SOIEngine(Engine):
             for slot in np.nonzero(self._occupied)[0]:
                 t = int(self._clock[slot])
                 if self._pt_outer is not None:
-                    decode_state = self._back_write_page(
+                    decode_state, _ = self._back_write_page(
                         decode_state, self._pt_outer, slot, t, "outer")
                 if self._pt_mid is not None and t % st == 0:
-                    decode_state = self._back_write_page(
+                    decode_state, _ = self._back_write_page(
                         decode_state, self._pt_mid, slot, t // st, "mid")
             decode_state = dict(decode_state)
             model = dict(decode_state["model"])
@@ -1042,6 +1092,127 @@ class SOIEngine(Engine):
         new_ds, data, logits = self._gen(params, decode_state)
         self._live = new_ds
         return new_ds, ResultTokens(data=data, logits=logits)
+
+    # -- speculative windows ---------------------------------------------
+
+    def _drop_spec_pending(self, slot: int):
+        """Release every still-pending speculative page of ``slot``.
+        ``PageTable.drop`` is a no-op on entries already swept (free_slot's
+        ``release`` zeroes the whole row), so this is safe to call in any
+        order relative to a release. No device scrub: a dropped page was
+        only ever a *write target of rejected positions*, and those writes
+        were null-page-routed inside the window — its rows still hold the
+        ``pos = -1`` hygiene pattern from the pool's last scrub."""
+        for pt, idx, _pos in self._spec_pending[slot]:
+            pt.drop(slot, idx)
+        self._spec_pending[slot] = []
+
+    def _back_spec_window(self, decode_state):
+        """Back pages for every position a window MIGHT commit: K outer
+        positions (1 for non-speculating slots) plus every middle frame a
+        phase-0 crossing inside the window would write. Over-backing is
+        rolled back after the window; COW copies are kept (the copy is
+        needed the moment the slot's clock reaches that page, and the page
+        already holds the right bytes)."""
+        k = self._speculate
+        st = self.cfg.soi.stride if self.cfg.soi is not None else 0
+        for slot in np.nonzero(self._occupied)[0]:
+            t0 = int(self._clock[slot])
+            span = k if self._spec_slots[slot] else 1
+            if self._pt_outer is not None:
+                for pos in range(t0, t0 + span):
+                    decode_state, fresh = self._back_write_page(
+                        decode_state, self._pt_outer, slot, pos, "outer")
+                    if fresh is not None:
+                        self._spec_pending[slot].append(
+                            (self._pt_outer, fresh, pos))
+            if self._pt_mid is not None:
+                for c in range(t0, t0 + span):
+                    if c % st:
+                        continue
+                    decode_state, fresh = self._back_write_page(
+                        decode_state, self._pt_mid, slot, c // st, "mid")
+                    if fresh is not None:
+                        self._spec_pending[slot].append(
+                            (self._pt_mid, fresh, c // st))
+        return decode_state
+
+    def _rollback_spec_pages(self, n: np.ndarray):
+        """Drop the fresh pages whose backed positions were all rejected.
+        An outer page recorded at first-touch position ``pos`` held only
+        positions >= pos of this window, so it survives iff ``pos`` itself
+        committed; a middle page recorded at frame ``f`` survives iff some
+        committed clock value crossed phase 0 at frame >= f."""
+        st = self.cfg.soi.stride if self.cfg.soi is not None else 0
+        for slot in np.nonzero(self._occupied)[0]:
+            if not self._spec_pending[slot]:
+                continue
+            t0 = int(self._clock[slot])      # clock BEFORE the window
+            last = t0 + int(n[slot]) - 1     # last committed clock value
+            f_hi = last // st if st else -1  # last committed frame...
+            if st and f_hi * st < t0:
+                f_hi = -1                    # ...if any crossing committed
+            for pt, idx, pos in self._spec_pending[slot]:
+                committed = (pos <= last if pt is self._pt_outer
+                             else 0 <= f_hi and pos <= f_hi)
+                if not committed:
+                    pt.drop(slot, idx)
+            self._spec_pending[slot] = []
+        # non-occupied slots can hold records only after an aborted window;
+        # generate()'s except path already dropped those
+
+    def _generate_spec(self, params, decode_state):
+        k = self._speculate
+        if self._paged:
+            try:
+                decode_state = self._back_spec_window(decode_state)
+            except Exception:
+                # transactional: a failed backing (pool exhausted mid-loop)
+                # must not leak the pages already grown for this window
+                for slot in range(self._slots):
+                    self._drop_spec_pending(slot)
+                raise
+            decode_state = dict(decode_state)
+            model = dict(decode_state["model"])
+            model["pages"] = self._page_maps()
+            decode_state["model"] = model
+        spec_mask = jnp.asarray(self._spec_slots)
+        new_ds, data, logits = self._specgen(params, decode_state, spec_mask)
+        # the accepted counts gate host bookkeeping (clock advance, page
+        # rollback), so every window syncs the result row to the host —
+        # the same single device->host copy callers make to read tokens
+        host = np.asarray(data)
+        n = host[:, k + 2]
+        if self._paged:
+            self._rollback_spec_pages(n)
+        occ = self._occupied
+        self._clock[occ] += n[occ]
+        s = self.spec_stats
+        s["windows"] += 1
+        s["slot_windows"] += int(occ.sum())
+        s["committed"] += int(n[occ].sum())
+        spec_occ = occ & self._spec_slots
+        s["draft_candidates"] += int(spec_occ.sum()) * (k - 1)
+        s["draft_accepted"] += int((n[spec_occ] - 1).sum())
+        self._live = new_ds
+        return new_ds, ResultTokens(data=data, logits=logits,
+                                    tokens_idx=(0, k),
+                                    valid_idx=(k, k + 1),
+                                    length_idx=(k + 1, k + 2),
+                                    accepted_idx=(k + 2, k + 3))
+
+    def spec_accept_stats(self) -> dict:
+        """Accept-rate counters since engine construction: ``accept_rate``
+        is the fraction of draft tokens the verifier kept;
+        ``tokens_per_window`` the mean committed tokens per slot-window
+        (upper bound K; 1.0 means speculation never paid off)."""
+        s = dict(self.spec_stats)
+        s["speculate"] = self._speculate
+        s["accept_rate"] = (s["draft_accepted"] / s["draft_candidates"]
+                            if s["draft_candidates"] else None)
+        s["tokens_per_window"] = (s["committed"] / s["slot_windows"]
+                                  if s["slot_windows"] else None)
+        return s
 
     def free_slot(self, decode_state, slot: int):
         s_i = int(slot)
@@ -1055,6 +1226,13 @@ class SOIEngine(Engine):
                 f"free_slot({s_i}): slot is not occupied — it was never "
                 f"inserted into, or already freed (double-free)")
         self._occupied[s_i] = False
+        self._spec_slots[s_i] = False
+        # a freed request's in-flight speculative window leaves nothing
+        # behind: pending draft tokens die with the slot's active bit, and
+        # the speculatively-grown pages are swept (and scrubbed) by the
+        # release below — only the host-side records need clearing so a
+        # later rollback can't double-free the page ids
+        self._spec_pending[s_i] = []
         if not self._paged:
             # scrub the slot's cache positions like the paged path scrubs
             # released pages: a freed request's tokens must be unreadable —

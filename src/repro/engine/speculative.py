@@ -1,0 +1,221 @@
+"""Self-speculative decoding: SOI off-phase steps draft, the true schedule
+verifies — up to ``K`` tokens commit per compiled window.
+
+SOI's premise is that the middle's partial states are predictable enough to
+extrapolate instead of recompute; that is exactly the property a *draft
+model* needs. This module layers speculative decoding on the unified step
+with the model as its own draft:
+
+* **draft burst** — ``K-1`` off-phase-forced steps (``generate_step(...,
+  draft=True)``): the compressed middle NEVER runs, every position is served
+  from the (stale) extrapolation queue. The burst carries its cache writes
+  in a scan-internal copy of the state and returns ONLY the draft tokens —
+  the real decode state is untouched, so a rejected draft needs no
+  device-side undo.
+* **verify window** — the draft-conditioned inputs ``[a_0, d_1, ...,
+  d_{K-1}]`` replay through the TRUE phase schedule (middle recomputed at
+  every crossed stride boundary). Token ``j``'s output ``v_j`` is the exact
+  token the non-speculative engine would have produced given the same
+  inputs; acceptance is the longest prefix where the draft's guess matches
+  (``d_j == v_j``), plus the verifier's own correction token at the first
+  mismatch — standard greedy speculative acceptance, so each window commits
+  ``n ∈ [1, K]`` tokens.
+
+Both halves run inside ONE jitted program per engine (the scan length is a
+trace-time constant): serving pays two host→device dispatches' worth of
+work per *window* instead of per *token*, which is precisely the overhead
+``BENCH_soi_lm.json`` shows dominating small-model decode.
+
+Why the verify replays the step instead of scoring all K positions through
+``kernels/ops.chunk_attention``: the chunk path batches the K queries into
+one attention/MLP call, and XLA's shape-dependent GEMM accumulation makes
+its results differ from the sequential step at the ULP level (measured
+~1e-6 in f32 — enough to flip an argmax tie and to break cache
+bit-equality). Speculative decoding is only free if greedy output is
+*identical* to the non-speculative engine, so the verify keeps every
+per-token matmul shape-identical to ``generate_step`` — the chunk-parallel
+scorer remains the right mapping for batch-parallel hardware, but it cannot
+carry the bit-exactness contract (see ``tests/test_speculative.py``).
+
+Rollback semantics (what a rejection undoes):
+
+* **clock** — ``t`` advances only on committed iterations (the step's
+  ``active`` mask), so rejected positions never move the per-slot clock;
+* **caches** — dense layouts commit through per-slot row selects
+  (rejected iterations keep the old rows bit-for-bit); paged layouts route
+  rejected slots' writes to the null page, so pool bytes beyond the
+  committed clock are never touched;
+* **extrapolation queue / conv window** — refreshed only on committed
+  phase-0 crossings (queue) / committed steps (conv window), so both land
+  exactly where token-by-token decoding would have left them.
+
+The engine-side page machinery (``SOIEngine``) backs pages for all K
+candidate positions before the window and drops the speculatively-grown
+ones whose positions were rejected — see ``SOIEngine.generate``.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelCfg
+from repro.engine.step import _select_mid_caches, generate_step
+from repro.models.transformer import _noc, soi_partition
+
+
+def _strip_pages(state: dict) -> tuple:
+    """Split the page maps out of the model state so the scan carry holds
+    only per-iteration-varying arrays (the maps are window constants)."""
+    if "pages" not in state:
+        return state, None
+    core = {k: v for k, v in state.items() if k != "pages"}
+    return core, state["pages"]
+
+
+def _with_pages(state: dict, pages) -> dict:
+    return state if pages is None else dict(state, pages=pages)
+
+
+def _mask_outer_pages(pages, commit):
+    """Null-route the outer-cache writes of rejected slots: map rows masked
+    to page 0 make their writes land on discarded memory (the same
+    mechanism the unified step uses for mid-window middle commits). The
+    middle maps stay as-is — ``generate_step`` already routes them through
+    ``run_mid & active``, and ``active`` carries the acceptance mask."""
+    if pages is None:
+        return None
+    out = dict(pages)
+    if "outer" in out:
+        out["outer"] = jnp.where(commit[:, None], out["outer"], 0)
+    return out
+
+
+def _commit_masked(cfg: ModelCfg, commit, new_state: dict, old_state: dict,
+                   *, paged: bool) -> dict:
+    """Keep ``new_state`` for committed slots, ``old_state`` rows for
+    rejected ones — the dense-layout half of rollback (paged attention
+    pools were already protected by null-routing, so only their per-slot
+    leaves select by row)."""
+    out = dict(new_state)
+    if cfg.soi is None:
+        out["segments"] = _select_mid_caches(commit, new_state["segments"],
+                                             old_state["segments"],
+                                             cfg.segments, paged=paged)
+    else:
+        pre, mid, post = soi_partition(cfg)
+        for key, segs in (("pre", pre), ("mid", mid), ("post", post)):
+            out[key] = _select_mid_caches(commit, new_state[key],
+                                          old_state[key], segs, paged=paged)
+        # the step updates the conv window unconditionally (it is full-rate
+        # in the schedule); rejected iterations must keep the old window
+        out["conv_buf"] = jnp.where(commit[:, None, None],
+                                    new_state["conv_buf"],
+                                    old_state["conv_buf"])
+        # queue refresh is already gated on run_mid & active inside the step
+    return out
+
+
+def draft_burst(params, cfg: ModelCfg, state: dict, tokens, *, k: int,
+                active, constrain=_noc):
+    """Run ``k - 1`` off-phase-forced steps and return the draft tokens
+    ``(B, k-1)``. The burst's cache writes live in a scan-internal copy of
+    the state that is dropped on return — the caller's decode state is
+    untouched, which is what makes draft rejection free of device-side
+    undo."""
+    b = tokens.shape[0]
+    core, pages = _strip_pages(state)
+    if k <= 1:
+        return jnp.zeros((b, 0), jnp.int32)
+
+    def dbody(carry, _):
+        st_d, tok_d = carry
+        lg, ns = generate_step(params, cfg, _with_pages(st_d, pages),
+                               tok_d, active=active, constrain=constrain,
+                               draft=True)
+        ns.pop("pages", None)
+        nxt = jnp.argmax(lg, axis=-1).astype(jnp.int32)
+        return (ns, nxt), nxt
+
+    _, drafts = jax.lax.scan(dbody, (core, tokens), None, length=k - 1)
+    return jnp.moveaxis(drafts, 0, 1)                  # (B, k-1)
+
+
+def verify_commit(params, cfg: ModelCfg, state: dict, inputs, *,
+                  active, spec, constrain=_noc):
+    """Replay the true phase schedule over ``inputs`` (B, k) — column 0 the
+    real pending token, columns 1.. the draft's guesses — committing the
+    longest matching prefix plus the verifier's correction token.
+
+    Returns ``(new_state, committed (B, k), n_acc (B,), next_tok (B,),
+    logits (B, V))``: committed token column j is valid iff ``j < n_acc``;
+    ``next_tok`` is the feedback token for the next window (the last
+    committed token) and ``logits`` the distribution that produced it.
+
+    Split out from :func:`speculative_window` so tests can drive the
+    acceptance/rollback machinery with *arbitrary* draft tokens — the real
+    draft is close enough to the verifier that organic rejections can be
+    rare, which would otherwise leave the rollback path untested.
+    """
+    b, k = inputs.shape
+    core, pages = _strip_pages(state)
+    active = jnp.broadcast_to(jnp.asarray(active, bool), (b,))
+    spec = jnp.broadcast_to(jnp.asarray(spec, bool), (b,))
+    # iteration j consumes inputs[:, j] and may continue into iteration
+    # j+1 only if its output equals inputs[:, j+1] (the draft's guess);
+    # the last iteration has no continuation, so its guess row is unused
+    guesses = jnp.concatenate([inputs[:, 1:],
+                               jnp.zeros((b, 1), jnp.int32)], axis=1)
+
+    def vbody(carry, xs):
+        st_v, commit, n_acc, next_tok, last_lg = carry
+        tok_j, guess_j = xs
+        step_active = active & commit
+        st_in = _with_pages(st_v, _mask_outer_pages(pages, commit))
+        lg, ns = generate_step(params, cfg, st_in, tok_j,
+                               active=step_active, constrain=constrain)
+        ns.pop("pages", None)
+        ns = _commit_masked(cfg, commit, ns, st_v, paged=pages is not None)
+        v = jnp.argmax(lg, axis=-1).astype(jnp.int32)
+        n_acc = n_acc + (step_active).astype(jnp.int32)
+        next_tok = jnp.where(commit, v, next_tok)
+        last_lg = jnp.where(commit[:, None], lg, last_lg)
+        out_tok = jnp.where(commit, v, 0)
+        commit = commit & active & spec & (v == guess_j)
+        return (ns, commit, n_acc, next_tok, last_lg), out_tok
+
+    # commit starts all-True (NOT `active`): the first iteration must
+    # commit exactly what one non-speculative generate_step commits —
+    # including the harmless masked writes of unoccupied slots — so a
+    # window degrades bit-exactly to a plain step
+    init = (core, jnp.ones((b,), bool), jnp.zeros((b,), jnp.int32),
+            inputs[:, 0], jnp.zeros((b, cfg.vocab), jnp.float32))
+    (core, _, n_acc, next_tok, last_lg), committed = jax.lax.scan(
+        vbody, init, (jnp.moveaxis(inputs, 0, 1),
+                      jnp.moveaxis(guesses, 0, 1)))
+    committed = jnp.moveaxis(committed, 0, 1)          # (B, k)
+    return _with_pages(core, pages), committed, n_acc, next_tok, last_lg
+
+
+def speculative_window(params, cfg: ModelCfg, state: dict, tokens, *,
+                       k: int, active, spec, constrain=_noc):
+    """Advance every slot by up to ``k`` tokens in one fused draft+verify.
+
+    ``state``/``tokens`` are the engine decode state's model half and the
+    pending input tokens; ``active`` (B,) marks occupied slots; ``spec``
+    (B,) marks slots allowed to speculate (non-speculating slots commit
+    exactly one token per window, so speculative and plain requests share a
+    batch). ``k`` is a trace-time constant; callers jit this whole function
+    so draft + verify fuse into one device program.
+
+    Returns :func:`verify_commit`'s tuple. With ``spec`` all-False the
+    window is bit-identical to one ``generate_step`` call — the
+    equivalence anchor the property tests pin.
+    """
+    if k < 1:
+        raise ValueError(f"speculative window needs k >= 1, got {k}")
+    drafts = draft_burst(params, cfg, state, tokens, k=k, active=active,
+                         constrain=constrain)
+    inputs = jnp.concatenate([tokens[:, None], drafts], axis=1)   # (B, k)
+    return verify_commit(params, cfg, state, inputs, active=active,
+                         spec=spec, constrain=constrain)

@@ -81,7 +81,7 @@ def _run_segments(parts_p, parts_s, caches, cfg, x, t, constrain,
 
 
 def generate_step(params, cfg: ModelCfg, state: dict, tokens, *,
-                  active=None, constrain=_noc):
+                  active=None, constrain=_noc, draft: bool = False):
     """Advance every slot one token. tokens: (B,) int32; state["t"]: (B,).
 
     Returns (logits (B, V), new_state). Non-SOI configs take the standard
@@ -93,6 +93,13 @@ def generate_step(params, cfg: ModelCfg, state: dict, tokens, *,
     clocks freeze and never trigger the middle's ``lax.cond``, so a
     partially occupied engine keeps the runtime FLOP skip. ``None`` means
     all slots active.
+
+    ``draft=True`` forces every slot off-phase: the compressed middle never
+    runs and every position is served from the extrapolation queue — the
+    self-speculative *draft* schedule (see ``engine.speculative``). On
+    slots whose true phase is already off, a draft step is bit-identical to
+    a normal step; non-SOI configs have no middle to skip, so the flag is a
+    no-op there (the model is its own perfect draft).
     """
     if cfg.soi is None:
         logits, ns = D.decode_step(params, cfg, state, tokens,
@@ -115,6 +122,11 @@ def generate_step(params, cfg: ModelCfg, state: dict, tokens, *,
     run_mid = phase == 0              # (B,) — this slot's window is complete
     if active is not None:
         run_mid = run_mid & active
+    if draft:
+        # off-phase-forced: the middle's cond predicate becomes any(False),
+        # so its FLOPs vanish and every downstream read sees the stale
+        # queue/caches — exactly an off-phase step for every slot
+        run_mid = jnp.zeros_like(run_mid)
     new_state = dict(state)
 
     pages = state.get("pages", {})

@@ -28,6 +28,15 @@ by refcount and skip the prefill compute over the cached prefix. Admission
 goes through ``engine.can_insert`` — a request the page pool cannot back
 right now is deferred instead of crashing the pool mid-insert.
 
+``--speculate K`` serves through self-speculative windows
+(``repro.engine.speculative``): each engine call drafts K-1 tokens with
+off-phase-forced SOI steps, verifies them against the true phase schedule in
+the same compiled program, and commits the accepted prefix — up to K tokens
+per call, greedy output token-for-token identical to per-token serving. The
+tail line then adds the measured accept rate and mean committed
+tokens/window. ``--mixed-spec`` opts every second request OUT of
+speculation, demonstrating speculative and plain requests sharing a batch.
+
 The tail line reports decode-phase throughput (prefill-produced first tokens
 are excluded — the decode clock starts after insert), the prefill compile
 count, and — with the prefix cache on — hit rate, pages shared, tokens
@@ -81,6 +90,16 @@ def main(argv=None):
                     help="make every request share its first N prompt "
                          "tokens (system-prompt traffic; exercises "
                          "--prefix-cache)")
+    ap.add_argument("--speculate", type=int, default=None, metavar="K",
+                    help="self-speculative decoding: draft K-1 tokens with "
+                         "off-phase SOI steps and verify them against the "
+                         "true phase schedule in one compiled window — up "
+                         "to K tokens commit per engine call, greedy output "
+                         "identical to per-token serving; the tail line "
+                         "reports accept rate and tokens/window")
+    ap.add_argument("--mixed-spec", action="store_true",
+                    help="with --speculate: opt every second request out of "
+                         "speculation (mixed speculative/plain batch)")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
     if args.bucket == "pow2":
@@ -111,7 +130,8 @@ def main(argv=None):
                        paged=args.paged, page_size=args.page_size,
                        prefill_buckets=buckets,
                        prefill_chunk=args.chunk_size,
-                       prefix_cache=args.prefix_cache)
+                       prefix_cache=args.prefix_cache,
+                       speculate=args.speculate)
     state = engine.init_decode_state(params)
 
     t0 = time.time()
@@ -126,7 +146,9 @@ def main(argv=None):
                   f"resident population)")
             continue
         prefix = engine.prefill(params, prompt[slot, :plens[slot]])
-        state = engine.insert(prefix, state, slot)
+        spec = (slot % 2 == 0 if args.speculate and args.mixed_spec
+                else None)
+        state = engine.insert(prefix, state, slot, speculate=spec)
         first[slot] = int(prefix.first_token[0])
         admitted.append(slot)
     t_prefill = time.time() - t0
@@ -137,15 +159,20 @@ def main(argv=None):
         return np.zeros((0, args.gen_len), np.int64)
 
     out = {slot: [first[slot]] for slot in admitted}
-    n_steps = args.gen_len - 1   # every slot gains one token per step
+    n_steps = args.gen_len - 1   # every slot gains >= one token per call
     t0 = time.time()
     done = 0
     for _ in range(n_steps):
         state, result = engine.generate(params, state)
-        data = np.asarray(result.data)   # (B, 3) — skip the (B, V) logits
+        result = result.convert_to_numpy()
         for slot in admitted:
             if len(out[slot]) < args.gen_len:
-                out[slot].append(int(data[slot, 0]))
+                sd = result.get_result_at_slot(slot)
+                # per-token engines commit their one token; speculative
+                # windows commit the accepted prefix of up to K
+                n = 1 if sd.accepted is None else int(sd.accepted[0])
+                room = args.gen_len - len(out[slot])
+                out[slot].extend(int(x) for x in sd.tokens[:min(n, room)])
                 if len(out[slot]) == args.gen_len:
                     state = engine.free_slot(state, slot)
                     done += 1
@@ -166,6 +193,15 @@ def main(argv=None):
           f"chunk={args.chunk_size or '-'}], "
           f"decoded {decoded} tok across {len(admitted)} slots in {dt:.2f}s "
           f"({decoded / max(dt, 1e-9):.1f} tok/s decode)")
+    if args.speculate:
+        sp = engine.spec_accept_stats()
+        rate = sp["accept_rate"]
+        print(f"speculative: K={args.speculate}, {sp['windows']} windows, "
+              f"{sp['committed']} tokens committed "
+              f"({sp['tokens_per_window']:.2f} tokens/window), "
+              f"draft accept rate "
+              f"{'-' if rate is None else f'{100 * rate:.0f}%'} "
+              f"({sp['draft_accepted']}/{sp['draft_candidates']})")
     if args.prefix_cache:
         pc = engine.prefix_cache_stats
         print(f"prefix-cache: {pc['hits']}/{pc['hits'] + pc['misses']} hits "

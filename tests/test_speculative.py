@@ -1,0 +1,391 @@
+"""Self-speculative decoding: greedy equivalence and rollback claims.
+
+The contract under test (see ``repro.engine.speculative``):
+  * a speculative engine's greedy output is token-for-token identical to
+    the per-token engine — K, stride, attention family, cache layout, and
+    batch phase mix never change WHICH tokens survive;
+  * a rejected position leaves zero trace: the post-window state is
+    bit-identical to sequential decoding of exactly the committed tokens
+    (verified by driving ``verify_commit`` with deliberately wrong draft
+    tokens, since the real draft rarely disagrees with its own verifier
+    on randomly initialized weights);
+  * a window with speculation disabled degrades bit-exactly to ONE
+    ordinary generate step;
+  * the whole window is ONE compiled program per engine, regardless of K
+    and of acceptance patterns (``spec_compiles`` guard);
+  * ``free_slot`` between windows discards the slot's speculative pages:
+    free -> re-insert reproduces a fresh engine bit-for-bit.
+"""
+
+import dataclasses
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.sharding import split_axes
+from repro.engine import SOIEngine, generate_step
+from repro.engine.speculative import verify_commit
+from repro.models import decode as D
+from repro.models import transformer as T
+
+
+def _cfg(mode, arch="qwen3-1.7b", stride=None):
+    if arch == "qwen3-1.7b":
+        import repro.configs.qwen3_1_7b as Q
+        cfg = Q.smoke_config(soi=mode)
+    else:
+        import repro.configs.deepseek_v2_236b as DS
+        cfg = DS.smoke_config(soi=mode)
+    if stride is not None:
+        cfg = dataclasses.replace(
+            cfg, soi=dataclasses.replace(cfg.soi, stride=stride))
+    return dataclasses.replace(cfg, dtype="float32")
+
+
+def _params(cfg):
+    params, _ = split_axes(T.init(jax.random.PRNGKey(0), cfg))
+    return params
+
+
+def _prompts(cfg, lens, seed=0):
+    rng = np.random.RandomState(seed)
+    return [jnp.asarray(rng.randint(0, cfg.vocab, (n,)), jnp.int32)
+            for n in lens]
+
+
+def _serve(cfg, params, prompts, gen, *, paged, speculate=None,
+           spec_flags=None, max_len=128):
+    """Token streams (first token incl.) + the engine and final state."""
+    eng = SOIEngine(cfg, max_concurrent_decodes=len(prompts),
+                    max_len=max_len, paged=paged, speculate=speculate)
+    ds = eng.init_decode_state(params)
+    streams = []
+    for i, p in enumerate(prompts):
+        prefix = eng.prefill(params, p)
+        flag = None if spec_flags is None else spec_flags[i]
+        ds = eng.insert(prefix, ds, i, speculate=flag)
+        streams.append([int(np.asarray(prefix.first_token)[0])])
+    while min(len(s) for s in streams) < gen:
+        ds, rt = eng.generate(params, ds)
+        rt = rt.convert_to_numpy()
+        for i in range(len(prompts)):
+            sd = rt.get_result_at_slot(i)
+            n = 1 if sd.accepted is None else int(sd.accepted[0])
+            streams[i].extend(int(x) for x in sd.tokens[:n])
+    return [s[:gen] for s in streams], eng, ds
+
+
+# -- greedy equivalence ----------------------------------------------------
+
+@pytest.mark.parametrize("mode", ["pp", "fp"])
+@pytest.mark.parametrize("paged", [False, True])
+@pytest.mark.parametrize("k", [1, 2, 4])
+def test_greedy_token_equivalence(mode, paged, k):
+    """Mixed-phase batches (staggered prompt lengths): spec == non-spec,
+    token for token, for every K / layout / SOI mode."""
+    cfg = _cfg(mode)
+    params = _params(cfg)
+    prompts = _prompts(cfg, [7, 12, 9])
+    ref, _, _ = _serve(cfg, params, prompts, 18, paged=paged)
+    got, eng, _ = _serve(cfg, params, prompts, 18, paged=paged, speculate=k)
+    assert got == ref
+    assert eng.spec_compiles == 1
+
+
+@pytest.mark.parametrize("stride", [2, 4])
+def test_greedy_equivalence_strides(stride):
+    cfg = _cfg("pp", stride=stride)
+    params = _params(cfg)
+    prompts = _prompts(cfg, [8, 11])
+    ref, _, _ = _serve(cfg, params, prompts, 16, paged=False)
+    got, _, _ = _serve(cfg, params, prompts, 16, paged=False, speculate=4)
+    assert got == ref
+
+
+@pytest.mark.parametrize("paged", [False, True])
+def test_greedy_equivalence_mla_absorbed(paged):
+    """MLA (absorbed decode path) through speculative windows."""
+    cfg = _cfg("pp", arch="deepseek-v2-236b")
+    params = _params(cfg)
+    prompts = _prompts(cfg, [7, 10])
+    ref, _, _ = _serve(cfg, params, prompts, 12, paged=paged)
+    got, _, _ = _serve(cfg, params, prompts, 12, paged=paged, speculate=2)
+    assert got == ref
+
+
+@pytest.mark.parametrize("paged", [False, True])
+def test_mixed_spec_and_plain_slots(paged):
+    """Speculative and opted-out requests share one batch; both kinds match
+    the per-token engine."""
+    cfg = _cfg("pp")
+    params = _params(cfg)
+    prompts = _prompts(cfg, [7, 12, 9])
+    ref, _, _ = _serve(cfg, params, prompts, 16, paged=paged)
+    got, eng, _ = _serve(cfg, params, prompts, 16, paged=paged, speculate=4,
+                         spec_flags=[True, False, True])
+    assert got == ref
+    # opted-out slots commit exactly one token per window
+    s = eng.spec_accept_stats()
+    assert s["tokens_per_window"] < 4.0
+
+
+def test_non_soi_config_speculates():
+    """Without SOI the draft step IS the verify step, so every window
+    commits all K — speculation degrades to pure multi-token batching."""
+    cfg = _cfg(None)
+    params = _params(cfg)
+    prompts = _prompts(cfg, [7, 9])
+    ref, _, _ = _serve(cfg, params, prompts, 14, paged=False)
+    got, eng, _ = _serve(cfg, params, prompts, 14, paged=False, speculate=3)
+    assert got == ref
+    assert eng.spec_accept_stats()["accept_rate"] == 1.0
+
+
+# -- state bit-equality ----------------------------------------------------
+
+def _flat_equal(a, b):
+    fa, _ = jax.tree.flatten(a)
+    fb, _ = jax.tree.flatten(b)
+    return all(np.array_equal(np.asarray(x), np.asarray(y))
+               for x, y in zip(fa, fb))
+
+
+@pytest.mark.parametrize("mode", ["pp", "fp"])
+@pytest.mark.parametrize("n", [1, 2, 3, 4])
+def test_rejection_rolls_back_bitexact(mode, n):
+    """Force a rejection at position n by corrupting the draft's guess:
+    the post-window state must be BIT-identical to sequentially decoding
+    exactly n tokens — rejected iterations leave no trace in any cache,
+    clock, conv window, or queue leaf."""
+    cfg = _cfg(mode)
+    params = _params(cfg)
+    b, k = 3, 4
+    toks = jax.random.randint(jax.random.PRNGKey(1), (b, 8), 0, cfg.vocab)
+    lg, st0 = D.prefill(params, cfg, toks, max_len=64)
+    cur = jnp.argmax(lg, -1).astype(jnp.int32)
+    jstep = jax.jit(lambda pr, s_, tk: generate_step(
+        pr, cfg, s_, tk, active=jnp.ones((b,), bool)))
+    seq, st_ref, cr, snaps = [np.asarray(cur)], st0, cur, [st0]
+    for _ in range(k):
+        lgr, st_ref = jstep(params, st_ref, cr)
+        cr = jnp.argmax(lgr, -1).astype(jnp.int32)
+        seq.append(np.asarray(cr))
+        snaps.append(st_ref)
+    seq = np.stack(seq, 1)                 # true greedy continuations
+    inputs = seq[:, :k].copy()
+    if n < k:
+        inputs[:, n] = (inputs[:, n] + 1) % cfg.vocab   # wrong guess at n
+    st_v, comm, n_acc, nxt, _ = jax.jit(
+        lambda pr, s_, inp: verify_commit(
+            pr, cfg, s_, inp, active=jnp.ones((b,), bool),
+            spec=jnp.ones((b,), bool)))(params, st0, jnp.asarray(inputs))
+    assert np.asarray(n_acc).tolist() == [n] * b
+    comm = np.asarray(comm)
+    assert np.array_equal(comm[:, :n], seq[:, 1:1 + n])
+    assert np.array_equal(np.asarray(nxt), seq[:, n])
+    assert _flat_equal(st_v, snaps[n])
+
+
+@pytest.mark.parametrize("n", [[1, 2, 4], [4, 1, 3]])
+def test_per_slot_rejection_depths(n):
+    """Slots rejecting at different depths roll back independently: each
+    slot's committed tokens and feedback token follow its own depth."""
+    cfg = _cfg("pp")
+    params = _params(cfg)
+    b, k = 3, 4
+    toks = jax.random.randint(jax.random.PRNGKey(1), (b, 8), 0, cfg.vocab)
+    lg, st0 = D.prefill(params, cfg, toks, max_len=64)
+    cur = jnp.argmax(lg, -1).astype(jnp.int32)
+    jstep = jax.jit(lambda pr, s_, tk: generate_step(
+        pr, cfg, s_, tk, active=jnp.ones((b,), bool)))
+    seq, st_ref, cr = [np.asarray(cur)], st0, cur
+    for _ in range(k):
+        lgr, st_ref = jstep(params, st_ref, cr)
+        cr = jnp.argmax(lgr, -1).astype(jnp.int32)
+        seq.append(np.asarray(cr))
+    seq = np.stack(seq, 1)
+    inputs = seq[:, :k].copy()
+    for i, d in enumerate(n):
+        if d < k:
+            inputs[i, d] = (inputs[i, d] + 1) % cfg.vocab
+    _, comm, n_acc, nxt, _ = verify_commit(
+        params, cfg, st0, jnp.asarray(inputs),
+        active=jnp.ones((b,), bool), spec=jnp.ones((b,), bool))
+    assert np.asarray(n_acc).tolist() == n
+    comm, nxt = np.asarray(comm), np.asarray(nxt)
+    for i, d in enumerate(n):
+        assert np.array_equal(comm[i, :d], seq[i, 1:1 + d])
+        assert nxt[i] == seq[i, d]
+
+
+@pytest.mark.parametrize("mode", ["pp", "fp"])
+def test_spec_off_window_equals_one_step(mode):
+    """A window whose slots all opted out commits exactly what one plain
+    generate step commits — bit-for-bit, including the logits."""
+    cfg = _cfg(mode)
+    params = _params(cfg)
+    b = 2
+    toks = jax.random.randint(jax.random.PRNGKey(1), (b, 8), 0, cfg.vocab)
+    lg, st0 = D.prefill(params, cfg, toks, max_len=64)
+    _, st1 = D.prefill(params, cfg, toks, max_len=64)
+    cur = jnp.argmax(lg, -1).astype(jnp.int32)
+    active = jnp.ones((b,), bool)
+    lg_ref, st_ref = generate_step(params, cfg, st0, cur, active=active)
+    st_v, comm, n_acc, nxt, lg_v = verify_commit(
+        params, cfg, st1, jnp.stack([cur, cur, cur], 1), active=active,
+        spec=jnp.zeros((b,), bool))
+    assert np.asarray(n_acc).tolist() == [1, 1]
+    assert np.array_equal(np.asarray(lg_v), np.asarray(lg_ref))
+    assert np.array_equal(np.asarray(nxt),
+                          np.argmax(np.asarray(lg_ref), -1))
+    assert _flat_equal(st_v, st_ref)
+
+
+# -- free_slot during speculation -----------------------------------------
+
+@pytest.mark.parametrize("paged", [False, True])
+def test_free_mid_speculation_then_reinsert(paged):
+    """Free a slot between speculative windows, re-insert a new request:
+    the resulting serving state is bit-identical to a fresh engine that
+    only ever saw the surviving + new requests — no pending draft tokens,
+    no leaked speculatively-grown pages."""
+    cfg = _cfg("pp")
+    params = _params(cfg)
+    prompts = _prompts(cfg, [7, 12])
+    eng = SOIEngine(cfg, max_concurrent_decodes=2, max_len=128, paged=paged,
+                    speculate=4)
+    ds = eng.init_decode_state(params)
+    for i, p in enumerate(prompts):
+        ds = eng.insert(eng.prefill(params, p), ds, i)
+    for _ in range(3):
+        ds, _ = eng.generate(params, ds)
+    # slot 0's window is "in flight" in the serving sense (its feedback
+    # token and speculative pages are pending) — free it and reuse the slot
+    ds = eng.free_slot(ds, 0)
+    assert not eng._spec_pending[0]
+    newp = _prompts(cfg, [9], seed=3)[0]
+    ds = eng.insert(eng.prefill(params, newp), ds, 0)
+    streams = [[], []]
+    for _ in range(4):
+        ds, rt = eng.generate(params, ds)
+        rt = rt.convert_to_numpy()
+        for i in range(2):
+            sd = rt.get_result_at_slot(i)
+            streams[i].extend(int(x) for x in sd.tokens[:int(sd.accepted[0])])
+
+    # fresh reference: same final population, slot 1 advanced to the same
+    # clock before slot 0's re-insert
+    eng2 = SOIEngine(cfg, max_concurrent_decodes=2, max_len=128, paged=paged,
+                     speculate=4)
+    ds2 = eng2.init_decode_state(params)
+    ds2 = eng2.insert(eng2.prefill(params, prompts[1]), ds2, 1)
+    while eng2._clock[1] < eng._clock[1] - sum(len(s) for s in [streams[1]]):
+        ds2, _ = eng2.generate(params, ds2)
+    ds2 = eng2.insert(eng2.prefill(params, newp), ds2, 0)
+    ref = [[], []]
+    for _ in range(4):
+        ds2, rt = eng2.generate(params, ds2)
+        rt = rt.convert_to_numpy()
+        for i in range(2):
+            sd = rt.get_result_at_slot(i)
+            ref[i].extend(int(x) for x in sd.tokens[:int(sd.accepted[0])])
+    assert streams[0] == ref[0]
+    if paged:
+        # no leaked pages: every mapped page belongs to an occupied slot's
+        # committed positions; free both slots and the pools drain to empty
+        ds = eng.free_slot(ds, 0)
+        ds = eng.free_slot(ds, 1)
+        for pt in (eng._pt_outer, eng._pt_mid):
+            if pt is not None:
+                assert (pt.map == 0).all()
+                assert (pt.refs[1:] == 0).all()
+
+
+@pytest.mark.parametrize("paged", [False, True])
+def test_free_then_reinsert_same_prompt_bitexact(paged):
+    """free -> re-insert the SAME prompt reproduces a fresh engine's state
+    bit-for-bit on both layouts (the regression named by the issue)."""
+    cfg = _cfg("pp")
+    params = _params(cfg)
+    prompt = _prompts(cfg, [9])[0]
+    eng = SOIEngine(cfg, max_concurrent_decodes=1, max_len=64, paged=paged,
+                    speculate=4)
+    ds = eng.init_decode_state(params)
+    ds = eng.insert(eng.prefill(params, prompt), ds, 0)
+    for _ in range(2):
+        ds, _ = eng.generate(params, ds)
+    ds = eng.free_slot(ds, 0)
+    ds = eng.insert(eng.prefill(params, prompt), ds, 0)
+
+    eng2 = SOIEngine(cfg, max_concurrent_decodes=1, max_len=64, paged=paged,
+                     speculate=4)
+    ds2 = eng2.init_decode_state(params)
+    ds2 = eng2.insert(eng2.prefill(params, prompt), ds2, 0)
+    for _ in range(3):
+        ds, rt = eng.generate(params, ds)
+        ds2, rt2 = eng2.generate(params, ds2)
+        assert np.array_equal(np.asarray(rt.data), np.asarray(rt2.data))
+    if not paged:
+        assert _flat_equal(ds["model"], ds2["model"])
+    else:
+        # paged pools may place pages at different ids after the free/reuse
+        # cycle; compare through the logical view: token streams above plus
+        # identical per-slot clocks
+        assert eng._clock[0] == eng2._clock[0]
+
+
+# -- compile-count guard ---------------------------------------------------
+
+def test_spec_compile_guard():
+    """Speculative serving compiles at most 2 extra programs (here: ONE
+    fused draft+verify window) no matter how many windows run, how K
+    relates to stride, or how slots churn."""
+    cfg = _cfg("pp")
+    params = _params(cfg)
+    prompts = _prompts(cfg, [7, 12, 9])
+    eng = SOIEngine(cfg, max_concurrent_decodes=3, max_len=128, paged=True,
+                    speculate=4)
+    ds = eng.init_decode_state(params)
+    for i, p in enumerate(prompts):
+        ds = eng.insert(eng.prefill(params, p), ds, i)
+    for _ in range(5):
+        ds, _ = eng.generate(params, ds)
+    ds = eng.free_slot(ds, 1)               # churn: free + re-insert + mixed
+    ds = eng.insert(eng.prefill(params, _prompts(cfg, [10], seed=2)[0]),
+                    ds, 1, speculate=False)
+    for _ in range(5):
+        ds, _ = eng.generate(params, ds)
+    assert eng.spec_compiles <= 2
+    assert eng.spec_compiles == 1           # the fused window traces once
+
+
+def test_result_tokens_spec_layout():
+    """ResultTokens carries K token columns + accepted count per slot."""
+    cfg = _cfg("pp")
+    params = _params(cfg)
+    eng = SOIEngine(cfg, max_concurrent_decodes=2, max_len=64, speculate=3)
+    ds = eng.init_decode_state(params)
+    ds = eng.insert(eng.prefill(params, _prompts(cfg, [8])[0]), ds, 0)
+    ds, rt = eng.generate(params, ds)
+    assert rt.tokens_idx == (0, 3)
+    assert rt.accepted_idx == (5, 6)
+    rt = rt.convert_to_numpy()
+    sd0, sd1 = rt.get_result_at_slot(0), rt.get_result_at_slot(1)
+    assert sd0.tokens.shape == (3,)
+    assert 1 <= int(sd0.accepted[0]) <= 3
+    assert int(sd0.valid[0]) == 1 and int(sd1.valid[0]) == 0
+
+
+def test_speculate_validation():
+    cfg = _cfg("pp")
+    with pytest.raises(ValueError):
+        SOIEngine(cfg, speculate=0)
+    params = _params(cfg)
+    eng = SOIEngine(cfg, max_concurrent_decodes=1, max_len=64)
+    ds = eng.init_decode_state(params)
+    with pytest.raises(ValueError):
+        eng.insert(eng.prefill(params, _prompts(cfg, [8])[0]), ds, 0,
+                   speculate=True)
