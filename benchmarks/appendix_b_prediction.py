@@ -6,7 +6,6 @@ Reduced-scale real training on the synthetic separation task."""
 
 from __future__ import annotations
 
-import time
 
 import jax
 import jax.numpy as jnp

@@ -24,12 +24,12 @@ import json
 import time
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 
 import repro.configs.qwen3_1_7b as Q
 from repro.distributed.sharding import split_axes
 from repro.engine import SOIEngine
+from repro.engine.contracts import host_get
 from repro.models import decode as D
 from repro.models import transformer as T
 
@@ -54,8 +54,10 @@ def _drive(engine, params, tokens, n_insert, steps):
     outs = []
     for _ in range(steps):
         ds, res = engine.generate(params, ds)
-        outs.append(np.asarray(res.logits[:n_insert]))
-    return np.stack(outs), ds
+        # keep the device reference; logits are fresh outputs (never
+        # donated), so they stay valid until the single drain below
+        outs.append(res.logits[:n_insert])
+    return np.stack(host_get(outs)), ds
 
 
 def _time_steps(engine, params, ds, n=20):

@@ -26,7 +26,6 @@ import json
 import time
 
 import jax
-import numpy as np
 
 import repro.configs.qwen3_1_7b as Q
 from repro.distributed.sharding import split_axes

@@ -24,7 +24,6 @@ head recompute show up as ratio < 1.
 from __future__ import annotations
 
 import json
-import math
 import os
 import sys
 

@@ -52,13 +52,25 @@ def _serve(cfg, params, prompts, gen, *, speculate):
         ds = eng.insert(eng.prefill(params, p), ds, i)
     counts = [0] * len(prompts)
     calls = 0
-    while min(counts) < gen:
-        ds, rt = eng.generate(params, ds)
+
+    def drain(rt):
         rt = rt.convert_to_numpy()
-        calls += 1
         for i in range(len(prompts)):
             sd = rt.get_result_at_slot(i)
             counts[i] += 1 if sd.accepted is None else int(sd.accepted[0])
+
+    # deferred drain: convert the PREVIOUS window's results after the next
+    # one is dispatched so the device->host copy overlaps device compute
+    # (the loop runs at most one extra window; max_len has +8 headroom)
+    pending = None
+    while min(counts) < gen:
+        ds, rt = eng.generate(params, ds)
+        calls += 1
+        if pending is not None:
+            drain(pending)
+        pending = rt
+    if pending is not None:
+        drain(pending)
     return eng, sum(counts), calls
 
 

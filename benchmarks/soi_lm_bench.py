@@ -24,6 +24,7 @@ import jax.numpy as jnp
 
 import repro.configs.qwen3_1_7b as Q
 from repro.distributed.sharding import split_axes
+from repro.engine.contracts import host_get
 from repro.engine.step import generate_step
 from repro.models import decode as D
 from repro.models import transformer as T
@@ -95,6 +96,29 @@ def run(csv=False, out_json="BENCH_soi_lm.json"):
     # the dispatch-pipelined number the history tracks)
     t_std_sync = _time_fixed_phase(jstd, params_std, state_std)
 
+    # overlapped host loop: the serving loop's real per-step cost model
+    # (launch/serve.py) — dispatch step k, then drain step k-1's logits
+    # while k runs, so the device->host copy hides behind device compute
+    # instead of stalling dispatch. Per-step sync (above) charges every
+    # step a full copy stall; this charges only the drain that does not
+    # overlap — the branch split should move toward the devloop ratio.
+    def _time_overlapped(jfn, params_, state, n=50):
+        lg, _ = jfn(params_, state, tok)
+        jax.block_until_ready(lg)
+        t0 = time.time()
+        pending = None
+        for _ in range(n):
+            lg, _ = jfn(params_, state, tok)
+            if pending is not None:
+                host_get(pending)           # drain k-1 under k's compute
+            pending = lg
+        host_get(pending)
+        return (time.time() - t0) / n
+
+    t_phase0_ov = _time_overlapped(jsoi, params_soi, st_p0)
+    t_offphase_ov = _time_overlapped(jsoi, params_soi, st_off)
+    t_std_ov = _time_overlapped(jstd, params_std, state_std)
+
     # The host-loop numbers above are DISPATCH-BOUND at smoke scale: one
     # Python->XLA round trip per step costs more than the tiny model's
     # compute, which is why they once showed off-phase ~ phase-0 (the
@@ -145,6 +169,15 @@ def run(csv=False, out_json="BENCH_soi_lm.json"):
     t_avg = (t_phase0 + (st - 1) * t_offphase) / st
     rows["wallclock_step_std_sync_s"] = t_std_sync
     rows["avg_wallclock_reduction_%"] = 100 * (1 - t_avg / t_std_sync)
+    # deferred-drain host loop (the serving loop's methodology)
+    rows["hostloop_overlap_step_std_s"] = t_std_ov
+    rows["hostloop_overlap_step_soi_phase0_s"] = t_phase0_ov
+    rows["hostloop_overlap_step_soi_offphase_s"] = t_offphase_ov
+    rows["hostloop_overlap_offphase_speedup_vs_phase0_x"] = (t_phase0_ov
+                                                             / t_offphase_ov)
+    t_avg_ov = (t_phase0_ov + (st - 1) * t_offphase_ov) / st
+    rows["hostloop_overlap_avg_wallclock_reduction_%"] = (
+        100 * (1 - t_avg_ov / t_std_ov))
     # dispatch-free (device-loop) counterparts of the fixed-phase numbers
     rows["devloop_step_std_s"] = t_std_dev
     rows["devloop_step_soi_phase0_s"] = t_phase0_dev

@@ -7,8 +7,6 @@ supervisor — then decode a few tokens.
     python examples/quickstart.py
 """
 
-import jax
-import jax.numpy as jnp
 
 from repro.launch import serve as serve_mod
 from repro.launch import train as train_mod

@@ -1,0 +1,80 @@
+"""repro.analysis: static + runtime contract checker for the engine hot path.
+
+Four passes over every jitted entry point of ``repro.engine`` (and the host
+driver code around them), each enforcing one serving contract:
+
+* ``donation``   — decode-state buffers are donated, no donation is
+                   silently dropped by XLA, no use-after-donate (DON0xx);
+* ``hostsync``   — no implicit device->host transfer inside a per-step
+                   loop: one batched explicit drain per step, deferred one
+                   step so it overlaps dispatched compute (SYNC0xx; AST
+                   pass + runtime tripwires);
+* ``retrace``    — O(1) compiled programs under normal traffic; repeat
+                   traffic compiles nothing (RET0xx);
+* ``dtype``      — the carried decode state is a dtype fixed point, and no
+                   narrowing/f64/weak-type promotion hides in the compiled
+                   step (DT0xx).
+
+Run ``python -m repro.analysis`` for the report, ``--ci`` to gate on the
+checked-in baseline (``analysis_baseline.json``).  The contracts themselves
+are documented in ``docs/CONTRACTS.md``.
+"""
+
+from __future__ import annotations
+
+from repro.analysis.report import (BaselineDiff, Finding, Report,
+                                   compare_to_baseline, load_baseline)
+from repro.analysis.targets import (AnalysisTarget, build_target,
+                                    default_targets, drive_traffic,
+                                    get_target)
+
+PASSES = ("donation", "hostsync", "retrace", "dtype")
+
+
+def run_pass(pass_name: str, target) -> list:
+    if pass_name == "donation":
+        from repro.analysis import donation
+        return donation.run(target)
+    if pass_name == "hostsync":
+        from repro.analysis import hostsync, runtime
+        return hostsync.run() + runtime.run(target)
+    if pass_name == "retrace":
+        from repro.analysis import retrace
+        return retrace.run(target)
+    if pass_name == "dtype":
+        from repro.analysis import dtype_drift
+        return dtype_drift.run(target)
+    raise ValueError(f"unknown pass {pass_name!r} (have {PASSES})")
+
+
+def analyze(target_names=None, passes=PASSES, progress=None) -> Report:
+    """Run ``passes`` over ``target_names`` (default: the full matrix).
+
+    The static half of ``hostsync`` is target-independent and runs once.
+    Returns a :class:`Report`.
+    """
+    from repro.analysis import hostsync
+
+    target_names = list(target_names or default_targets())
+    passes = list(passes)
+    report = Report(targets=target_names, passes=passes)
+    if "hostsync" in passes:
+        report.extend(hostsync.run())
+    for name in target_names:
+        target = get_target(name)
+        for pass_name in passes:
+            if progress:
+                progress(f"{name}:{pass_name}")
+            if pass_name == "hostsync":
+                from repro.analysis import runtime
+                report.extend(runtime.run(target))
+            else:
+                report.extend(run_pass(pass_name, target))
+    report.dedupe()
+    return report
+
+
+__all__ = ["AnalysisTarget", "BaselineDiff", "Finding", "PASSES", "Report",
+           "analyze", "build_target", "compare_to_baseline",
+           "default_targets", "drive_traffic", "get_target", "load_baseline",
+           "run_pass"]

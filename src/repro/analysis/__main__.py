@@ -1,0 +1,67 @@
+"""CLI: ``python -m repro.analysis [--ci] [--targets a,b] [--passes p,q]``.
+
+Default mode prints the findings report and writes the machine-readable
+JSON next to nothing (use ``--report`` to persist it).  ``--ci`` compares
+against the checked-in baseline (``analysis_baseline.json`` at the repo
+root) and exits 1 on any NEW finding — the gate the ``analysis`` CI job
+runs.  See ``docs/CONTRACTS.md`` for the contracts and the baseline
+amendment protocol.
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+
+from repro.analysis import PASSES, analyze, compare_to_baseline
+from repro.analysis.hostsync import repo_root
+from repro.analysis.targets import default_targets
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(prog="python -m repro.analysis")
+    ap.add_argument("--ci", action="store_true",
+                    help="compare against the baseline; exit 1 on any NEW "
+                         "finding")
+    ap.add_argument("--targets", default=None,
+                    help=f"comma-separated subset of "
+                         f"{','.join(default_targets())}")
+    ap.add_argument("--passes", default=None,
+                    help=f"comma-separated subset of {','.join(PASSES)}")
+    ap.add_argument("--report", default=None, metavar="PATH",
+                    help="write the machine-readable findings JSON here")
+    ap.add_argument("--baseline", default=None, metavar="PATH",
+                    help="baseline file (default: analysis_baseline.json "
+                         "at the repo root)")
+    ap.add_argument("-q", "--quiet", action="store_true")
+    args = ap.parse_args(argv)
+
+    targets = args.targets.split(",") if args.targets else None
+    passes = args.passes.split(",") if args.passes else PASSES
+    progress = (None if args.quiet else
+                lambda s: print(f"  analyzing {s} ...", file=sys.stderr))
+    report = analyze(targets, passes, progress=progress)
+    if args.report:
+        report.write(args.report)
+    print(report.render())
+
+    if not args.ci:
+        return 0
+    baseline = args.baseline or str(repo_root() / "analysis_baseline.json")
+    diff = compare_to_baseline(report, baseline)
+    if diff.accepted:
+        print(f"{len(diff.accepted)} finding(s) accepted by baseline")
+    for key in diff.stale:
+        print(f"stale baseline entry (no longer reproduces, prune it): "
+              f"{key}")
+    if diff.new:
+        print(f"\n{len(diff.new)} NEW finding(s) not in {baseline}:")
+        for f in diff.new:
+            print(f.render())
+        return 1
+    print("analysis gate: clean")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,160 @@
+"""Donation / aliasing analyzer (DON0xx).
+
+Every hot-path entry must donate its decode-state argument so XLA updates
+the caches in place; a missed donation doubles resident KV memory and adds
+a copy per step. Three layers of checking per ``JitEntry``:
+
+* **declaration** — the entry's ``state_args`` must all appear in its
+  ``donate_argnums`` (DON001), and any other argument holding large buffers
+  must be either donated or explicitly annotated ``readonly_ok`` with a
+  reason (DON001);
+* **lowering** — ``jfn.lower(*args)`` is run under a warnings trap: jax
+  emits ``"Some donated buffers were not usable"`` when XLA drops a
+  donation (dtype/layout mismatch between the donated input and every
+  output), which we promote to DON002.  As a belt-and-suspenders check the
+  lowered stablehlo is scanned for ``tf.aliasing_output`` /
+  ``jax.buffer_donor`` attributes — a donated arg whose leaves produced
+  neither was silently ignored (DON002);
+* **runtime** — after real traffic, every leaf of the engine's live decode
+  state must be alive (``not is_deleted()``): a deleted leaf means some
+  host-side code kept a reference to a donated buffer (use-after-donate,
+  DON003).  Conversely, if a generate step deleted *nothing*, donation
+  isn't actually wired through the call path (DON001).
+"""
+
+from __future__ import annotations
+
+import warnings
+
+import jax
+import numpy as np
+
+from repro.analysis import targets as T
+from repro.analysis.report import Finding
+from repro.engine.contracts import _DROPPED_DONATION_MSG
+
+# smoke-scale engines: decode-state cache leaves are tens of KB while true
+# scalars/rows stay tiny — anything at/over this rides the hot path
+BIG_BYTES = 16 * 1024
+
+# aliasing audit floor: a donated scalar/row leaf whose INPUT is dead in
+# the program (e.g. a clock recomputed from another arg) legitimately
+# cannot alias — only buffer-sized leaves must show up in the alias table
+ALIAS_MIN_BYTES = 512
+
+
+def _nbytes(leaf) -> int:
+    try:
+        return int(np.prod(leaf.shape)) * np.dtype(leaf.dtype).itemsize
+    except (TypeError, AttributeError):
+        return 0
+
+
+def _leaves(x):
+    return [l for l in jax.tree_util.tree_leaves(x) if l is not None]
+
+
+def check_entry(target_name: str, entry) -> list:
+    findings = []
+    where = f"{target_name}:{entry.name}"
+    donate = set(entry.donate)
+
+    for argnum in entry.state_args:
+        if argnum not in donate:
+            findings.append(Finding(
+                "donation", "DON001", where,
+                f"state argument {argnum} is not in donate_argnums: the "
+                f"decode-state caches will be copied, not updated in place"))
+
+    for argnum, arg in enumerate(entry.args):
+        if argnum in donate or argnum in entry.readonly_ok:
+            continue
+        big = [l for l in _leaves(arg) if _nbytes(l) >= BIG_BYTES]
+        if big:
+            findings.append(Finding(
+                "donation", "DON001", f"{where}:arg{argnum}",
+                f"{len(big)} undonated buffer(s) >= {BIG_BYTES}B (max "
+                f"{max(_nbytes(l) for l in big)}B) without a readonly_ok "
+                f"annotation — donate them or declare why they must "
+                f"outlive the call"))
+
+    with warnings.catch_warnings(record=True) as caught:
+        warnings.simplefilter("always")
+        try:
+            lowered = entry.jfn.lower(*entry.args)
+        except Exception as e:   # lowering itself failing is a finding
+            findings.append(Finding(
+                "donation", "DON002", where,
+                f"entry failed to lower with example args: {e!r}"))
+            return findings
+    for w in caught:
+        if _DROPPED_DONATION_MSG in str(w.message):
+            findings.append(Finding(
+                "donation", "DON002", where,
+                f"XLA dropped a requested donation (no output matched the "
+                f"donated buffer's shape/dtype): {w.message}"))
+
+    if donate:
+        text = lowered.as_text()
+        aliased = text.count("tf.aliasing_output") + text.count(
+            "jax.buffer_donor")
+        wanted = sum(1 for a in donate for l in _leaves(entry.args[a])
+                     if _nbytes(l) >= ALIAS_MIN_BYTES)
+        if aliased < wanted:
+            findings.append(Finding(
+                "donation", "DON002", where,
+                f"only {aliased}/{wanted} donated leaves carry an aliasing/"
+                f"buffer-donor attribute in the lowered program — the rest "
+                f"were silently not donated"))
+    return findings
+
+
+def check_runtime(target) -> list:
+    """Drive real traffic, then audit buffer liveness (DON003 / DON001)."""
+    findings = []
+    engine = target.engine
+    before = None
+    orig_generate = engine.generate
+
+    # snapshot the pre-step state leaves: donation marks them deleted, so
+    # "nothing was invalidated" proves donate_argnums never took effect
+    def counting_generate(params, ds, *a, **kw):
+        nonlocal before
+        before = _leaves(ds)
+        return orig_generate(params, ds, *a, **kw)
+
+    engine.generate = counting_generate
+    try:
+        T.drive_traffic(target, drain=lambda res: res.convert_to_numpy())
+    finally:
+        engine.generate = orig_generate
+
+    live = engine.live_decode_state
+    dead = [l for l in _leaves(live)
+            if hasattr(l, "is_deleted") and l.is_deleted()]
+    if dead:
+        findings.append(Finding(
+            "donation", "DON003", f"{target.name}:live_decode_state",
+            f"{len(dead)} leaves of the LIVE decode state are deleted "
+            f"buffers — host code is holding results of a donated call "
+            f"(use-after-donate)"))
+    if before is not None:
+        invalidated = [l for l in before
+                       if hasattr(l, "is_deleted") and l.is_deleted()]
+        if not invalidated:
+            findings.append(Finding(
+                "donation", "DON001", f"{target.name}:generate",
+                "no pre-step decode-state buffer was invalidated by the "
+                "last generate call — donate_argnums is not reaching the "
+                "compiled step"))
+    return findings
+
+
+def run(target, entries=None) -> list:
+    entries = (target.engine.analysis_entries(target.params)
+               if entries is None else entries)
+    findings = []
+    for entry in entries:
+        findings.extend(check_entry(target.name, entry))
+    findings.extend(check_runtime(target))
+    return findings

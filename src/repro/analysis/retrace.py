@@ -1,0 +1,111 @@
+"""Retrace-trigger lint (RET0xx).
+
+The engine's compiled-program budget under normal traffic is O(1) per
+entry: one generate/speculative-window program, one insert, one release,
+and one prefill program per bucket (or exactly one when chunked).  Each
+extra trace is a multi-second compile stall in serving, so anything in a
+compile-cache key that varies per request — a Python scalar positional
+arg, a pytree whose *structure* differs between calls, a weak-type
+promotion flipping dtypes — shows up here.
+
+Two checks, both measured on DELTAS (building ``analysis_entries`` itself
+traces the prefill program once):
+
+* **static** (RET002): example args of every ``JitEntry`` are scanned for
+  Python scalars / numpy generics in non-static positions — those hash
+  into the jit cache key by VALUE, so every new value recompiles;
+* **dynamic** (RET001): the scripted traffic (staggered lengths across two
+  buckets, slot free + re-insert, multi-step decode) runs TWICE; the
+  second round must add zero entries to any jit cache and zero engine
+  compile counters.  First-round budgets are also enforced: more compiles
+  than distinct shapes demands explains means the cache key includes
+  per-request data.
+"""
+
+from __future__ import annotations
+
+import numbers
+
+import numpy as np
+
+from repro.analysis import targets as T
+from repro.analysis.report import Finding
+
+
+def _cache_size(jfn) -> int:
+    try:
+        return jfn._cache_size()
+    except Exception:
+        return -1
+
+
+def _static_scan(target_name, entry) -> list:
+    findings = []
+    for argnum, arg in enumerate(entry.args):
+        # a bare Python/numpy scalar in a traced position becomes a
+        # WEAK-typed 0-d array: the same call site alternating scalar and
+        # array inputs compiles two programs, and the weak type leaks into
+        # every dtype promotion downstream
+        if isinstance(arg, (bool, numbers.Number, np.generic)):
+            findings.append(Finding(
+                "retrace", "RET002", f"{target_name}:{entry.name}:arg{argnum}",
+                f"Python scalar {type(arg).__name__} passed positionally — "
+                f"it traces weak-typed, so alternating with array inputs "
+                f"recompiles and the weak type poisons promotions; pass "
+                f"jnp.asarray(x, dtype) instead"))
+    return findings
+
+
+def run(target) -> list:
+    engine, params = target.engine, target.params
+    findings = []
+    entries = engine.analysis_entries(params)
+    for entry in entries:
+        findings.extend(_static_scan(target.name, entry))
+
+    jfns = {e.name: e.jfn for e in entries}
+
+    def snapshot():
+        sizes = {n: _cache_size(f) for n, f in jfns.items()}
+        sizes["#prefill_compiles"] = engine.prefill_compiles
+        return sizes
+
+    base = snapshot()
+    T.drive_traffic(target)
+    warm = snapshot()
+    T.drive_traffic(target)
+    steady = snapshot()
+
+    chunked = getattr(engine, "_chunk", None) is not None
+    buckets = getattr(engine, "_buckets", None)
+    # distinct prompt buckets the scripted traffic hits (pow2 over the
+    # staggered lengths); chunked prefill always compiles exactly one
+    if chunked or not buckets:
+        prefill_budget = 1
+    else:
+        prefill_budget = len({min(b for b in buckets if b >= L)
+                              for L in target.prompt_lengths})
+
+    for name in jfns:
+        first = warm[name] - base[name]
+        budget = prefill_budget if name.startswith("prefill") else 1
+        if first > budget:
+            findings.append(Finding(
+                "retrace", "RET001", f"{target.name}:{name}",
+                f"{first} programs compiled under first-round traffic "
+                f"(budget {budget}) — the compile-cache key varies with "
+                f"per-request data"))
+        growth = steady[name] - warm[name]
+        if growth > 0:
+            findings.append(Finding(
+                "retrace", "RET001", f"{target.name}:{name}",
+                f"cache grew by {growth} on a REPEAT of identical "
+                f"traffic — steady-state serving keeps recompiling"))
+
+    pf_growth = steady["#prefill_compiles"] - warm["#prefill_compiles"]
+    if pf_growth > 0:
+        findings.append(Finding(
+            "retrace", "RET001", f"{target.name}:prefill_compiles",
+            f"engine prefill_compiles counter rose by {pf_growth} on "
+            f"repeated identical traffic"))
+    return findings

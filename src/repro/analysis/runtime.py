@@ -1,0 +1,102 @@
+"""Host-sync detector, runtime half (SYNC002).
+
+Cross-checks the static AST pass by actually running the scripted traffic
+with two tripwires armed around the decode loop:
+
+* ``jax.transfer_guard_device_to_host("disallow")`` — on real accelerators
+  any implicit device->host copy raises inside the guarded region.  On the
+  CPU backend this guard is vacuous (host buffers are zero-copy), so:
+* the ``ArrayImpl`` host-materialization funnel (``_value``, ``__array__``)
+  is instrumented: every host materialization during the monitored window
+  is recorded with the triggering source line, and any record NOT issued
+  under ``repro.engine.contracts.sanctioned_drain`` (the explicit batched
+  drain ``host_get`` wraps) is a finding.
+
+Known hole, documented rather than papered over: ``np.asarray`` and
+``.item()`` on CPU go through the C-level buffer protocol and bypass both
+tripwires — those are exactly what the static AST pass catches, which is
+why the two halves ship together.
+"""
+
+from __future__ import annotations
+
+import contextlib
+import traceback
+
+import jax
+
+from repro.analysis.report import Finding
+from repro.engine import contracts
+
+
+def _caller_frame():
+    """First stack frame outside jax internals and this module."""
+    for frame in reversed(traceback.extract_stack()):
+        fn = frame.filename
+        if ("/jax/" in fn or "/jax_" in fn or "runtime.py" in fn
+                or "contracts.py" in fn):
+            continue
+        return f"{fn.split('/site-packages/')[-1]}:{frame.lineno}"
+    return "<unknown>"
+
+
+@contextlib.contextmanager
+def sync_monitor(records: list):
+    """Record every unsanctioned host materialization of a jax array."""
+    from jax._src import array as jarray
+
+    cls = jarray.ArrayImpl
+    orig_value = cls._value
+
+    @property
+    def traced_value(self):
+        if not contracts.in_sanctioned_drain():
+            records.append(_caller_frame())
+        return orig_value.fget(self)
+
+    cls._value = traced_value
+    try:
+        yield records
+    finally:
+        cls._value = orig_value
+
+
+def run(target) -> list:
+    engine, params = target.engine, target.params
+    records: list = []
+    findings = []
+
+    # prefill/insert are allowed to sync (once per request, off the decode
+    # clock) — arm the tripwires around the generate loop only
+    ds = engine.init_decode_state(params)
+    rng = jax.random.PRNGKey(11)
+    for slot, length in enumerate(
+            target.prompt_lengths[:engine.max_concurrent_decodes]):
+        toks = jax.random.randint(jax.random.fold_in(rng, slot),
+                                  (length,), 0, target.cfg.vocab)
+        prefix = engine.prefill(params, toks)
+        ds = engine.insert(prefix, ds, slot)
+
+    pending = None
+    with sync_monitor(records), \
+            jax.transfer_guard_device_to_host("disallow"):
+        try:
+            for _ in range(3):
+                ds, res = engine.generate(params, ds)
+                if pending is not None:
+                    pending.convert_to_numpy()
+                pending = res
+        except Exception as e:
+            findings.append(Finding(
+                "hostsync", "SYNC002", f"{target.name}:generate",
+                f"transfer guard tripped inside the decode loop: {e!r}"))
+    if pending is not None:
+        pending.convert_to_numpy()
+
+    for where in sorted(set(records)):
+        findings.append(Finding(
+            "hostsync", "SYNC002", f"{target.name}:{where}",
+            f"unsanctioned host materialization inside the decode loop "
+            f"({records.count(where)}x) — route it through the batched "
+            f"drain (contracts.host_get) or move it off the step path"))
+    return findings

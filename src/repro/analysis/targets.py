@@ -1,0 +1,137 @@
+"""Analysis targets: the engine configurations whose hot paths are under
+contract, plus the scripted traffic used by the runtime passes.
+
+The matrix mirrors the serving test surface: dense/paged layouts x GQA
+(qwen3 smoke) / MLA absorbed decode (deepseek-v2 smoke) x speculative
+windows on/off, plus a prefix-cache target exercising the hydrate/COW/scrub
+entries. Every engine is smoke-scale — the contracts under analysis
+(donation aliasing, pytree structures, compile-cache keys, dtype flow) are
+scale-independent, so lowering the smoke program answers for the full one.
+
+Targets are built lazily (``build_target``): each constructs a dedicated
+``SOIEngine`` — the analyzer drives real traffic through it, and paged
+engines tolerate exactly one live decode state.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Tuple
+
+import jax
+
+
+def _gqa_cfg(soi="pp"):
+    import repro.configs.qwen3_1_7b as Q
+    return dataclasses.replace(Q.smoke_config(soi=soi), dtype="float32")
+
+
+def _mla_cfg(soi="pp"):
+    import repro.configs.deepseek_v2_236b as DS
+    return dataclasses.replace(DS.smoke_config(soi=soi), dtype="float32")
+
+
+# name -> (cfg builder, engine kwargs, traffic prompt lengths)
+_COMMON = dict(max_concurrent_decodes=2, max_len=32)
+MATRIX = {
+    "gqa-dense": (_gqa_cfg, dict(_COMMON)),
+    "gqa-paged": (_gqa_cfg, dict(_COMMON, paged=True, page_size=8)),
+    "gqa-dense-spec": (_gqa_cfg, dict(_COMMON, speculate=2)),
+    "gqa-paged-spec": (_gqa_cfg, dict(_COMMON, paged=True, page_size=8,
+                                      speculate=2)),
+    "mla-dense": (_mla_cfg, dict(_COMMON)),
+    "mla-paged": (_mla_cfg, dict(_COMMON, paged=True, page_size=8)),
+    "mla-dense-spec": (_mla_cfg, dict(_COMMON, speculate=2)),
+    "mla-paged-spec": (_mla_cfg, dict(_COMMON, paged=True, page_size=8,
+                                      speculate=2)),
+    # hydrate / COW / scrub entries only exist on a prefix-cache engine;
+    # max_len grows so an aligned prefix boundary (lcm 32) is reachable
+    "gqa-paged-pc": (_gqa_cfg, dict(max_concurrent_decodes=2, max_len=96,
+                                    paged=True, page_size=16,
+                                    prefill_chunk=16, prefix_cache=True)),
+}
+
+
+@dataclasses.dataclass
+class AnalysisTarget:
+    name: str
+    cfg: Any
+    engine: Any
+    params: Any
+    prompt_lengths: Tuple[int, ...]
+
+
+def build_target(name: str) -> AnalysisTarget:
+    from repro.distributed.sharding import split_axes
+    from repro.engine import SOIEngine
+    from repro.models import transformer as T
+
+    cfg_fn, kwargs = MATRIX[name]
+    cfg = cfg_fn()
+    params, _ = split_axes(T.init(jax.random.PRNGKey(0), cfg))
+    engine = SOIEngine(cfg, **kwargs)
+    if name.endswith("-pc"):
+        # two prompts sharing a 40-token head: the second hits at the
+        # 32-aligned boundary, exercising hydrate + shared-page insert
+        lengths = (40, 40)
+    else:
+        # spans two pow2 buckets (16 and 32) and both SOI phases
+        lengths = (5, 9, 17)
+    return AnalysisTarget(name=name, cfg=cfg, engine=engine, params=params,
+                          prompt_lengths=lengths)
+
+
+def default_targets() -> list:
+    return list(MATRIX)
+
+
+def drive_traffic(target: AnalysisTarget, *, gen_steps: int = 3,
+                  drain=None):
+    """Scripted 'normal traffic': staggered prefills + inserts, a few
+    generate steps, a free / re-insert cycle, another step. ``drain`` (if
+    given) is called with each step's ResultTokens AFTER the next step has
+    been dispatched — the serving loop's deferred-drain idiom. Returns the
+    final decode state (also held by ``engine.live_decode_state``)."""
+    engine, params = target.engine, target.params
+    cfg = target.cfg
+    rng = jax.random.PRNGKey(7)
+    slots = engine.max_concurrent_decodes
+    lengths = target.prompt_lengths
+    shared_head = jax.random.randint(rng, (max(lengths),), 0, cfg.vocab)
+
+    def prompt(i, length):
+        # prefix-cache targets share the head so the second prompt hits
+        p = jax.random.fold_in(rng, i)
+        toks = jax.random.randint(p, (length,), 0, cfg.vocab)
+        if target.name.endswith("-pc"):
+            toks = shared_head[:length]
+        return toks
+
+    ds = engine.init_decode_state(params)
+    for i, length in enumerate(lengths):
+        slot = i % slots
+        if i >= slots:
+            ds = engine.free_slot(ds, slot)
+        prefix = engine.prefill(params, prompt(i, length))
+        ds = engine.insert(prefix, ds, slot)
+    pending = None
+    for _ in range(gen_steps):
+        ds, res = engine.generate(params, ds)
+        if pending is not None and drain is not None:
+            drain(pending)
+        pending = res
+    if pending is not None and drain is not None:
+        drain(pending)
+    return ds
+
+
+_TARGET_CACHE: dict = {}
+
+
+def get_target(name: str) -> AnalysisTarget:
+    """Process-wide cache: params/engine construction dominates analysis
+    runtime, and passes are read-only over the engine geometry (each pass
+    that needs traffic re-inits the decode state itself)."""
+    if name not in _TARGET_CACHE:
+        _TARGET_CACHE[name] = build_target(name)
+    return _TARGET_CACHE[name]

@@ -25,7 +25,6 @@ Causality invariant (property-tested): with PP, output at time t depends on inpu
 from __future__ import annotations
 
 import dataclasses
-from typing import Sequence
 
 import jax
 import jax.numpy as jnp

@@ -14,7 +14,6 @@ These helpers exist where *explicit* control beats the partitioner:
 
 from __future__ import annotations
 
-import functools
 
 import jax
 import jax.numpy as jnp

@@ -14,7 +14,6 @@ device runs ``M + S - 1`` ticks; at tick t, stage s processes microbatch
 
 from __future__ import annotations
 
-import functools
 
 import jax
 import jax.numpy as jnp

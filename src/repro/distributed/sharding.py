@@ -17,7 +17,6 @@ Rules express the full parallelism palette:
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, NamedTuple
 
 import jax
 import numpy as np

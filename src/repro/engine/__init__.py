@@ -211,6 +211,34 @@ tokens/window; ``spec_compiles`` counts window traces (the compile guard
 pins it at 1 per engine regardless of K). ``ResultTokens`` widens to K
 token columns plus a per-slot ``accepted`` count.
 
+Hot-path contracts (enforced by ``repro.analysis``)
+---------------------------------------------------
+
+Four properties of the jitted entry points are load-bearing for serving
+performance and are checked mechanically (CI gate ``python -m
+repro.analysis --ci``; full statement in ``docs/CONTRACTS.md``):
+
+1. **Donation** — every state-threading call donates its decode-state
+   argument and the compiled program aliases each buffer-sized leaf; all
+   jit sites go through ``repro.engine.contracts.checked_jit``, which
+   turns jax's silently-dropped-donation *warning* into a
+   ``DroppedDonationError``. Params / caller-owned ``Prefix`` values are
+   never donated (annotated ``readonly_ok`` in ``analysis_entries``).
+2. **No per-step host sync** — the decode loop performs exactly one
+   explicit batched device→host copy per step
+   (``ResultTokens.convert_to_numpy`` → ``contracts.host_get``), deferred
+   one step so it overlaps dispatched compute. Sanctioned exceptions are
+   marked ``# sync-ok: <reason>`` in source.
+3. **One compile per entry** — slot phase, position, page maps, and
+   true length are *data*; repeat traffic compiles nothing
+   (``prefill_compiles`` / jit-cache deltas stay zero).
+4. **Dtype stability** — the decode state is a dtype/weak-type fixed
+   point across every carrying call; no narrowing or f64 creeps into the
+   compiled step.
+
+``SOIEngine.analysis_entries(params)`` enumerates the jitted entries with
+traffic-shaped example arguments for the analyzer.
+
 Follow-ons recorded in ROADMAP.md: multi-host prefill/generate
 disaggregation, phase-aligned slot scheduling, cross-engine prefix-cache
 persistence.

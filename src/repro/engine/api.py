@@ -14,7 +14,8 @@ import dataclasses
 from typing import Any, Optional, Tuple
 
 import jax
-import numpy as np
+
+from repro.engine.contracts import host_get
 
 Params = Any
 DecodeState = Any
@@ -51,9 +52,13 @@ class ResultTokens:
     accepted_idx: Optional[tuple] = None
 
     def convert_to_numpy(self) -> "ResultTokens":
-        return dataclasses.replace(
-            self, data=np.asarray(self.data),
-            logits=None if self.logits is None else np.asarray(self.logits))
+        """Drain this step's results to host numpy in ONE explicit batched
+        transfer (``repro.engine.contracts.host_get``) — the sanctioned
+        per-step device->host copy of the serving loop. Call it on the
+        *previous* step's results after dispatching the next step, so the
+        copy overlaps device compute instead of stalling dispatch."""
+        data, logits = host_get((self.data, self.logits))
+        return dataclasses.replace(self, data=data, logits=logits)
 
     def get_result_at_slot(self, slot: int) -> SlotData:
         return SlotData(

@@ -1,0 +1,140 @@
+"""Hot-path contract enforcement primitives for the serving engine.
+
+The engine's performance rests on invariants the type system cannot see:
+
+* **donation** — decode-state buffers dominate serving HBM; every jitted
+  state transition donates them, and a donation XLA silently drops (shape
+  or dtype mismatch between the donated input and every output) reverts the
+  step to double-buffering. ``checked_jit`` turns that silent drop into a
+  ``DroppedDonationError`` at the first trace.
+* **single sanctioned drain** — the only device->host transfer a per-step
+  serving loop may make is the batched token drain. ``host_get`` is that
+  drain: an explicit ``jax.device_get`` the static/runtime analyzers
+  (``repro.analysis``) recognize as sanctioned; any *other* implicit
+  transfer inside the hot path is a finding.
+
+Both are used by the engine itself; ``repro.analysis`` instruments them.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import warnings
+
+import jax
+
+_DROPPED_DONATION_MSG = "Some donated buffers were not usable"
+
+
+class DroppedDonationError(RuntimeError):
+    """XLA dropped a requested buffer donation (no output could alias the
+    donated input). On the serving hot path this silently doubles the
+    decode-state footprint and adds a copy per step, so the engine refuses
+    to run rather than degrade."""
+
+
+# Incremented (via ``sanctioned_drain``) while the engine performs its one
+# sanctioned device->host drain; the runtime host-sync analyzer treats any
+# conversion that happens OUTSIDE a sanctioned window as a finding.
+_SANCTIONED_DEPTH = 0
+
+
+class sanctioned_drain:
+    """Context marking an intentional, batched device->host transfer."""
+
+    def __enter__(self):
+        global _SANCTIONED_DEPTH
+        _SANCTIONED_DEPTH += 1
+        return self
+
+    def __exit__(self, *exc):
+        global _SANCTIONED_DEPTH
+        _SANCTIONED_DEPTH -= 1
+        return False
+
+
+def in_sanctioned_drain() -> bool:
+    return _SANCTIONED_DEPTH > 0
+
+
+def host_get(tree):
+    """The engine's sanctioned device->host drain: ONE explicit, batched
+    ``jax.device_get`` per step (JetStream's ``ResultTokens`` idiom). Using
+    this instead of ``np.asarray``/``.item()`` keeps the transfer explicit —
+    visible to ``jax.transfer_guard`` policies and to the
+    ``repro.analysis`` host-sync instrumentation — and lets one call drain
+    a whole pytree in a single copy."""
+    with sanctioned_drain():
+        return jax.device_get(tree)
+
+
+class CheckedJit:
+    """``jax.jit`` wrapper that raises ``DroppedDonationError`` when XLA
+    drops a requested donation (jax only warns: ``UserWarning: Some donated
+    buffers were not usable``). The check costs one ``catch_warnings``
+    context per call — noise against a compiled serving step — and fires at
+    trace time, so a geometry change that breaks aliasing fails the first
+    step instead of silently double-buffering forever.
+
+    Attribute access falls through to the underlying pjit function, so
+    ``lower`` / ``eval_shape`` / ``_cache_size`` keep working for AOT
+    inspection and the ``repro.analysis`` passes.
+    """
+
+    def __init__(self, fun, *, donate_argnums=(), **jit_kwargs):
+        self._fun = fun
+        self.donate_argnums = tuple(
+            (donate_argnums,) if isinstance(donate_argnums, int)
+            else donate_argnums)
+        self._jfn = jax.jit(fun, donate_argnums=donate_argnums,
+                            **jit_kwargs)
+
+    def __call__(self, *args, **kwargs):
+        with warnings.catch_warnings():
+            warnings.filterwarnings("error", message=_DROPPED_DONATION_MSG,
+                                    category=UserWarning)
+            try:
+                return self._jfn(*args, **kwargs)
+            except UserWarning as w:   # the filter promoted the drop
+                raise DroppedDonationError(
+                    f"XLA dropped a requested donation while compiling "
+                    f"{getattr(self._fun, '__name__', self._fun)}: {w}. "
+                    f"The donated buffer has no shape/dtype-matching "
+                    f"output to alias, so the step would double-buffer "
+                    f"the decode state.") from w
+
+    def __getattr__(self, name):
+        return getattr(self._jfn, name)
+
+
+def checked_jit(fun=None, *, donate_argnums=(), **jit_kwargs):
+    """Drop-in ``jax.jit`` replacement enforcing the donation contract."""
+    if fun is None:
+        return lambda f: CheckedJit(f, donate_argnums=donate_argnums,
+                                    **jit_kwargs)
+    return CheckedJit(fun, donate_argnums=donate_argnums, **jit_kwargs)
+
+
+@dataclasses.dataclass(frozen=True)
+class JitEntry:
+    """One jitted engine entry point, described for static analysis.
+
+    ``args`` are example arguments shaped like live traffic (concrete
+    arrays or ``jax.ShapeDtypeStruct``); the analysis passes only *lower*
+    or *trace* with them, never execute, so donation example args are safe
+    to share. ``state_args`` are the positions the donation contract
+    requires donated (the decode-state buffers that dominate HBM);
+    ``readonly_ok`` maps positions whose large undonated inputs are by
+    design (params shared across calls, live pools read by hydration) to
+    the reason — the donation analyzer reports any OTHER large undonated
+    input. ``carry`` is ``(in_argnum, out_index)`` locating the carried
+    state in the inputs and outputs (``out_index=None``: the whole output
+    is the new state) for the dtype-stability check.
+    """
+    name: str
+    jfn: object
+    args: tuple
+    donate: tuple = ()
+    state_args: tuple = ()
+    readonly_ok: dict = dataclasses.field(default_factory=dict)
+    carry: tuple | None = None

@@ -23,6 +23,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ModelCfg
+from repro.engine.contracts import checked_jit
 from repro.engine.step import generate_step
 from repro.models import decode as D
 from repro.models.transformer import _noc
@@ -60,8 +61,11 @@ def lm_stream_session(params, cfg: ModelCfg, *, batch: int = 1,
     trunk (online SOI prefill) before the session starts; the first pushed
     token then decodes at position S.
     """
-    jstep = jax.jit(lambda p, s_, tok: generate_step(p, cfg, s_, tok,
-                                                     constrain=constrain))
+    # donate the carried state: the session owns it exclusively (push
+    # reassigns self.state every step), so without donation each push
+    # double-buffers the per-slot caches
+    jstep = checked_jit(lambda p, s_, tok: generate_step(
+        p, cfg, s_, tok, constrain=constrain), donate_argnums=(1,))
     if prompt is not None:
         _, state = D.prefill(params, cfg, jnp.asarray(prompt),
                              max_len=max_len, constrain=constrain)
@@ -89,7 +93,9 @@ def _unet_step_program(cfg):
             return branches[0](p, ns, inner, frame)
         return jax.lax.switch(t % period, branches, p, ns, inner, frame)
 
-    return jax.jit(raw)
+    # the inner stream state is the session's exclusively-owned carry;
+    # params/noise state are shared across sessions and never donated
+    return checked_jit(raw, donate_argnums=(2,))
 
 
 def unet_stream_session(params, nstate, cfg, *, batch: int = 1,

@@ -46,8 +46,9 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 
-from repro.configs.base import ModelCfg, Segment
+from repro.configs.base import ModelCfg
 from repro.engine.api import Engine, Prefix, ResultTokens
+from repro.engine.contracts import JitEntry, checked_jit, host_get
 from repro.engine.pages import PageTable, PrefixEntry, PrefixIndex, chain_keys
 from repro.engine.speculative import speculative_window
 from repro.engine.step import generate_step
@@ -513,18 +514,22 @@ class SOIEngine(Engine):
             return dict(ds, model=m)
 
         # donate the decode state: the per-slot KV caches dominate serving
-        # HBM, and without donation every step double-buffers them
-        self._gen = jax.jit(_gen, donate_argnums=(1,))
-        self._specgen = jax.jit(_specgen, donate_argnums=(1,))
-        self._ins = jax.jit(_ins, donate_argnums=(0,))
-        self._prefill_fn = jax.jit(_prefill)
-        self._prefill_chunk_fn = jax.jit(_prefill_chunk, donate_argnums=(1,))
-        self._fresh_prefix_fn = jax.jit(_fresh_prefix_state)
-        self._release_fn = jax.jit(_release, donate_argnums=(0,))
-        self._scrub_fn = jax.jit(_scrub_pages, donate_argnums=(0,))
-        self._hydrate_fn = jax.jit(_hydrate, donate_argnums=(0,))
-        self._cow_outer_fn = jax.jit(_cow_outer, donate_argnums=(0,))
-        self._cow_mid_fn = jax.jit(_cow_mid, donate_argnums=(0,))
+        # HBM, and without donation every step double-buffers them.
+        # checked_jit raises DroppedDonationError (instead of jax's
+        # UserWarning) if XLA cannot honor a donation — a silent drop here
+        # would double the serving footprint and add a copy per step.
+        self._gen = checked_jit(_gen, donate_argnums=(1,))
+        self._specgen = checked_jit(_specgen, donate_argnums=(1,))
+        self._ins = checked_jit(_ins, donate_argnums=(0,))
+        self._prefill_fn = checked_jit(_prefill)
+        self._prefill_chunk_fn = checked_jit(_prefill_chunk,
+                                             donate_argnums=(1,))
+        self._fresh_prefix_fn = checked_jit(_fresh_prefix_state)
+        self._release_fn = checked_jit(_release, donate_argnums=(0,))
+        self._scrub_fn = checked_jit(_scrub_pages, donate_argnums=(0,))
+        self._hydrate_fn = checked_jit(_hydrate, donate_argnums=(0,))
+        self._cow_outer_fn = checked_jit(_cow_outer, donate_argnums=(0,))
+        self._cow_mid_fn = checked_jit(_cow_mid, donate_argnums=(0,))
 
     def _resolve_buckets(self, policy):
         """Prefill bucket lengths: None (exact-length, one compile per
@@ -626,6 +631,13 @@ class SOIEngine(Engine):
         # index — and the serving counters that describe it — restart with it
         self._prefix_index = PrefixIndex()
         self._pc_stats = {k: 0 for k in self._pc_stats}
+        if self._paged:
+            # attach the page maps from the start: generate_step passes
+            # "pages" through the returned state, so a state WITHOUT the key
+            # would give insert/release a second pytree structure (pre- vs
+            # post-first-generate) and double their compile count
+            ms = dict(ms)
+            ms["pages"] = self._page_maps()
         state = {"model": ms,
                  "tokens": jnp.zeros((self._slots,), jnp.int32),
                  "active": jnp.zeros((self._slots,), bool)}
@@ -1180,8 +1192,9 @@ class SOIEngine(Engine):
         new_ds, data, logits = self._specgen(params, decode_state, spec_mask)
         # the accepted counts gate host bookkeeping (clock advance, page
         # rollback), so every window syncs the result row to the host —
-        # the same single device->host copy callers make to read tokens
-        host = np.asarray(data)
+        # the same single device->host copy callers make to read tokens;
+        # host_get keeps it the engine's ONE sanctioned explicit drain
+        host = host_get(data)  # sync-ok: accepted counts gate page rollback
         n = host[:, k + 2]
         if self._paged:
             self._rollback_spec_pages(n)
@@ -1245,13 +1258,125 @@ class SOIEngine(Engine):
             ds = self._release_fn(decode_state, sl, rows)
             self._live = ds
             return ds
+        # released-page rows pad to the fixed pages_per_slot length (extra
+        # entries land on the always-masked null page, whose pos lanes are
+        # already -1): variable-length rows would retrace _release_fn once
+        # per distinct freed-page count
         rows = {}
         if self._pt_outer is not None:
-            rows["outer"] = jnp.asarray(self._pt_outer.release(s_i))
+            rows["outer"] = self._pad_row(self._pt_outer,
+                                          self._pt_outer.release(s_i))
         if self._pt_mid is not None:
-            rows["mid"] = jnp.asarray(self._pt_mid.release(s_i))
+            rows["mid"] = self._pad_row(self._pt_mid,
+                                        self._pt_mid.release(s_i))
         self._clock[s_i] = 0
         ds = self._release_fn(decode_state, jnp.asarray(s_i, jnp.int32),
                               rows)
         self._live = ds
         return ds
+
+    # -- static-analysis hooks --------------------------------------------
+
+    def analysis_entries(self, params) -> list:
+        """Describe every jitted entry point for ``repro.analysis``.
+
+        Returns ``JitEntry`` records pairing each entry with example
+        arguments shaped exactly like live traffic (prefill-state examples
+        are abstract ``ShapeDtypeStruct`` trees from ``jax.eval_shape``; the
+        decode state is a real freshly initialized one). Analysis passes
+        only ``lower``/``trace`` with these — nothing is executed, so no
+        donation ever fires. Building the entries initializes a fresh
+        decode state: use a dedicated engine instance, the ONE-live-state
+        rule applies to analysis too. Tracing the prefill example bumps
+        ``prefill_compiles`` (the counter counts traces); run compile-count
+        measurements on counter *deltas*.
+        """
+        cfg = self.cfg
+        ro_params = ("params are shared by every call on the engine and "
+                     "must never be donated")
+        ds = self.init_decode_state(params)
+        slot = jnp.asarray(0, jnp.int32)
+        first = jnp.zeros((1,), jnp.int32)
+        entries = []
+        if self._chunk is not None:
+            tok_c = jnp.zeros((1, self._chunk), jnp.int32)
+            off = jnp.asarray(0, jnp.int32)
+            tl = jnp.asarray(self._chunk, jnp.int32)
+            ms_ex = jax.eval_shape(self._fresh_prefix_fn, params)
+            entries.append(JitEntry(
+                "fresh_prefix", self._fresh_prefix_fn, (params,),
+                readonly_ok={0: ro_params}))
+            entries.append(JitEntry(
+                "prefill_chunk", self._prefill_chunk_fn,
+                (params, ms_ex, tok_c, off, tl), donate=(1,),
+                state_args=(1,), readonly_ok={0: ro_params}, carry=(1, 1)))
+        else:
+            length = self._buckets[0] if self._buckets else min(8,
+                                                                self.max_len)
+            tok = jnp.zeros((1, length), jnp.int32)
+            tl = (jnp.asarray(length, jnp.int32) if self._buckets
+                  else None)
+            _, ms_ex = jax.eval_shape(self._prefill_fn, params, tok, tl,
+                                      None)
+            entries.append(JitEntry(
+                "prefill", self._prefill_fn, (params, tok, tl, None),
+                readonly_ok={0: ro_params}))
+        page_rows = None
+        if self._paged:
+            page_rows = {}
+            if self._pt_outer is not None:
+                page_rows["outer"] = jnp.zeros(
+                    self._pt_outer.pages_per_slot, jnp.int32)
+            if self._pt_mid is not None:
+                page_rows["mid"] = jnp.zeros(
+                    self._pt_mid.pages_per_slot, jnp.int32)
+        entries.append(JitEntry(
+            "insert", self._ins, (ds, ms_ex, first, slot, page_rows),
+            donate=(0,), state_args=(0,),
+            readonly_ok={1: "a Prefix is caller-owned and re-insertable "
+                            "(one prefill may fan into several slots)"},
+            carry=(0, None)))
+        if self._speculate is None:
+            entries.append(JitEntry(
+                "generate", self._gen, (params, ds), donate=(1,),
+                state_args=(1,), readonly_ok={0: ro_params}, carry=(1, 0)))
+        else:
+            mask = jnp.asarray(self._spec_slots)
+            entries.append(JitEntry(
+                "speculative_window", self._specgen, (params, ds, mask),
+                donate=(1,), state_args=(1,), readonly_ok={0: ro_params},
+                carry=(1, 0)))
+        if self._paged:
+            rows = {k: jnp.zeros_like(v) for k, v in page_rows.items()}
+        else:
+            rows = {"outer": slot}
+            if cfg.soi is not None:
+                rows["mid"] = slot
+        entries.append(JitEntry(
+            "release", self._release_fn, (ds, slot, rows), donate=(0,),
+            state_args=(0,), carry=(0, None)))
+        if self._prefix_cache:
+            entries.append(JitEntry(
+                "scrub", self._scrub_fn, (ds, rows), donate=(0,),
+                state_args=(0,), carry=(0, None)))
+            n_tok = jnp.asarray(self._chunk, jnp.int32)
+            n_fr = jnp.asarray(
+                self._chunk // (cfg.soi.stride if cfg.soi else 1),
+                jnp.int32)
+            entries.append(JitEntry(
+                "hydrate", self._hydrate_fn,
+                (ms_ex, ds["model"], rows, n_tok, n_fr), donate=(0,),
+                state_args=(0,),
+                readonly_ok={1: "the LIVE pool state hydration gathers "
+                                "from; it outlives the call"},
+                carry=(0, None)))
+            src_p = jnp.asarray(1, jnp.int32)
+            dst_p = jnp.asarray(2, jnp.int32)
+            entries.append(JitEntry(
+                "cow_outer", self._cow_outer_fn, (ds, src_p, dst_p),
+                donate=(0,), state_args=(0,), carry=(0, None)))
+            if self._pt_mid is not None:
+                entries.append(JitEntry(
+                    "cow_mid", self._cow_mid_fn, (ds, src_p, dst_p),
+                    donate=(0,), state_args=(0,), carry=(0, None)))
+        return entries

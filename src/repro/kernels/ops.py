@@ -10,7 +10,6 @@ override (tests use "interpret" to execute the kernel bodies on CPU).
 
 from __future__ import annotations
 
-import functools
 
 import jax
 import jax.numpy as jnp

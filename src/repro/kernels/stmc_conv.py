@@ -9,7 +9,6 @@ paper's U-Net — far under the 16 MB VMEM budget at 128-aligned tiles).
 
 from __future__ import annotations
 
-import functools
 
 import jax
 import jax.numpy as jnp

@@ -160,14 +160,14 @@ def main(argv=None):
 
     out = {slot: [first[slot]] for slot in admitted}
     n_steps = args.gen_len - 1   # every slot gains >= one token per call
-    t0 = time.time()
-    done = 0
-    for _ in range(n_steps):
-        state, result = engine.generate(params, state)
-        result = result.convert_to_numpy()
+
+    def drain(res, state, done):
+        # ONE batched explicit device->host copy per step (host_get under
+        # convert_to_numpy); token extraction below runs on host numpy
+        res = res.convert_to_numpy()
         for slot in admitted:
             if len(out[slot]) < args.gen_len:
-                sd = result.get_result_at_slot(slot)
+                sd = res.get_result_at_slot(slot)
                 # per-token engines commit their one token; speculative
                 # windows commit the accepted prefix of up to K
                 n = 1 if sd.accepted is None else int(sd.accepted[0])
@@ -176,8 +176,26 @@ def main(argv=None):
                 if len(out[slot]) == args.gen_len:
                     state = engine.free_slot(state, slot)
                     done += 1
-        if done == len(admitted):
-            break
+        return state, done
+
+    t0 = time.time()
+    done = 0
+    pending = None     # the previous step's still-on-device ResultTokens
+    for _ in range(n_steps):
+        state, result = engine.generate(params, state)
+        # drain the PREVIOUS step's tokens while this step runs on device:
+        # deferring the copy by one step overlaps host extraction with
+        # dispatched compute instead of stalling the pipeline on a sync
+        # (a finished slot is then freed one step late; its ring/page
+        # writes stay confined to buffers the free will scrub)
+        if pending is not None:
+            state, done = drain(pending, state, done)
+            if done == len(admitted):
+                pending = None
+                break
+        pending = result
+    if pending is not None:
+        state, done = drain(pending, state, done)
     dt = time.time() - t0
     total = sum(len(v) for v in out.values())
     # each slot's FIRST token came from prefill (before the decode clock

@@ -10,7 +10,6 @@ layout that fits a 123B x 32k x 128-batch cache in 16 GB/chip HBM).
 
 from __future__ import annotations
 
-import functools
 
 import jax
 import jax.numpy as jnp
@@ -18,7 +17,7 @@ from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.configs.base import SHAPES, ModelCfg
 from repro.distributed.sharding import (ShardingRules, make_shardings,
-                                        spec_for, split_axes)
+                                        split_axes)
 from repro.models import decode as D
 from repro.models import transformer as T
 

@@ -22,7 +22,7 @@ import numpy as np
 import repro.configs as configs
 from repro.data.pipeline import ShardedLMPipeline
 from repro.distributed.fault_tolerance import SupervisorConfig, TrainSupervisor
-from repro.distributed.sharding import ShardingRules, split_axes
+from repro.distributed.sharding import split_axes
 from repro.launch.steps import make_train_step
 from repro.models import transformer as T
 from repro.optim import adamw_init

@@ -29,9 +29,8 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.base import AttnCfg
-from repro.distributed.sharding import A
 from repro.kernels import ops as kops
-from repro.models.layers import apply_rope, dense_init, norm_init, norm_apply, ones_init
+from repro.models.layers import apply_rope, dense_init, norm_init, norm_apply
 
 Array = jax.Array
 

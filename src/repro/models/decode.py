@@ -38,9 +38,10 @@ from repro.models import moe as moem
 from repro.models import rglru as rgm
 from repro.models import rwkv as rkm
 from repro.models.layers import norm_apply
-from repro.models.transformer import (_block_apply, _dtype, _head_weights,
-                                      _noc, _segment_forward, _split_segment_params,
-                                      encode, soi_partition, trunk)
+from repro.models.transformer import (_dtype, _head_weights, _noc,
+                                      _segment_forward,
+                                      _split_segment_params, encode,
+                                      soi_partition)
 
 Array = jax.Array
 

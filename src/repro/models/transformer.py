@@ -21,22 +21,19 @@ next token (paper's FP latency story).
 from __future__ import annotations
 
 import dataclasses
-import functools
 import math
 
 import jax
 import jax.numpy as jnp
 
-from repro.configs.base import (AttnCfg, BlockCfg, EncoderCfg, MLPCfg, ModelCfg,
-                                MoECfg, RGLRUCfg, RWKVCfg, Segment, SOILMCfg)
+from repro.configs.base import BlockCfg, ModelCfg, Segment, SOILMCfg
 from repro.distributed.sharding import A, split_axes
 from repro.models import attention as attn
 from repro.models import mlp as mlpm
 from repro.models import moe as moem
 from repro.models import rglru as rgm
 from repro.models import rwkv as rkm
-from repro.models.layers import (dense_init, embed_init, norm_apply, norm_init,
-                                 zeros_init)
+from repro.models.layers import dense_init, embed_init, norm_apply, norm_init
 
 Array = jax.Array
 

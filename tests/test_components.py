@@ -3,7 +3,6 @@ optimizer, schedules, gradient compression (hypothesis where it pays)."""
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 import pytest
 
 pytest.importorskip("hypothesis")

@@ -10,9 +10,7 @@ import pytest
 
 from repro.checkpoint import Checkpointer, latest_step, restore, save
 from repro.data.pipeline import ShardedLMPipeline
-from repro.distributed.fault_tolerance import (SupervisorConfig,
-                                               StepDeadlineExceeded,
-                                               TrainSupervisor)
+from repro.distributed.fault_tolerance import SupervisorConfig, TrainSupervisor
 
 
 def _state(v=0.0):

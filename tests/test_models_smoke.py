@@ -1,7 +1,6 @@
 """Per-assigned-architecture smoke tests: reduced same-family config, one
 forward + one train step on CPU, asserting shapes and finiteness."""
 
-import dataclasses
 
 import jax
 import jax.numpy as jnp

@@ -26,7 +26,6 @@ import dataclasses
 import functools
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 import pytest
 

@@ -7,7 +7,6 @@ import jax
 import jax.numpy as jnp
 import pytest
 
-import repro.configs as C
 from repro.distributed.sharding import split_axes
 from repro.models import decode as D
 from repro.models import transformer as T
