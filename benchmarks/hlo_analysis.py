@@ -1,363 +1,28 @@
-"""Trip-count-aware HLO cost analysis.
+"""Thin re-import shim — the trip-count-aware HLO parser now lives at
+``repro.analysis.hlo`` (promoted so the ``cost`` analysis pass and
+``repro.launch.plan`` can consume it without importing benchmarks).
 
-XLA's ``compiled.cost_analysis()`` visits a ``while`` body ONCE, so any
-scan-over-layers model under-reports FLOPs by ~the layer count (verified in
-EXPERIMENTS.md §Roofline). This module parses the optimized HLO text and
-computes, per executable:
-
-  * flops            — dot/conv FLOPs, while-bodies multiplied by their trip
-                       count (extracted from the loop condition's compare
-                       constant).
-  * bytes            — HBM-traffic proxy: sum of operand+result bytes of every
-                       scheduled top-level op (fusion internals excluded:
-                       they live in registers/VMEM).
-  * collective bytes — per collective kind; plus ring-model *wire* bytes
-                       (all-reduce 2(n-1)/n, all-gather/reduce-scatter
-                       (n-1)/n, all-to-all (n-1)/n, permute 1x) using the
-                       replica-group size.
-
-Pure text processing — no jax dependency — so it also serves as the parser
-for stored dry-run artifacts.
+Kept so existing callers (`launch/dryrun.py`, `examples/scattered_decode.py`,
+`soi_lm_bench.py`, stored-artifact workflows documented in the roofline
+docstring) keep working unchanged. New code should import
+``repro.analysis.hlo`` directly.
 """
 
 from __future__ import annotations
 
-import dataclasses
-import math
-import re
-from collections import defaultdict
+import pathlib
+import sys
 
-_DTYPE_BYTES = {
-    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2,
-    "s32": 4, "u32": 4, "s64": 8, "u64": 8, "f8e4m3fn": 1, "f8e5m2": 1,
-    "bf16": 2, "f16": 2, "f32": 4, "f64": 8, "c64": 8, "c128": 16,
-    "token": 0, "opaque": 0,
-}
+_SRC = str(pathlib.Path(__file__).resolve().parents[1] / "src")
+if _SRC not in sys.path:
+    sys.path.insert(0, _SRC)
 
-_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([\d,]*)\]")
-_COMP_RE = re.compile(r"^(ENTRY\s+)?%?([\w.\-]+)\s*\((.*)\)\s*->\s*.*{\s*$")
-_TRIP_RE = re.compile(r'"known_trip_count":\s*\{"n":"(\d+)"\}')
-_OPERAND_RE = re.compile(r"%([\w.\-]+)")
-_CALLS_RE = re.compile(r"calls=%?([\w.\-]+)")
-_BODY_RE = re.compile(r"body=%?([\w.\-]+)")
-_COND_RE = re.compile(r"condition=%?([\w.\-]+)")
-_GROUPS_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
-_GROUPS_LIST_RE = re.compile(r"replica_groups=\{\{([^}]*)\}")
-_CONST_RE = re.compile(r"constant\((\d+)\)")
-_DOT_DIMS_RE = re.compile(r"lhs_contracting_dims=\{([\d,]*)\}")
-_WINDOW_RE = re.compile(r"window=\{size=([\dx]+)")
-
-COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
-               "collective-permute")
-
-
-def shape_bytes(type_str: str) -> int:
-    """Bytes of a (possibly tuple) HLO type string."""
-    total = 0
-    for dtype, dims in _SHAPE_RE.findall(type_str):
-        if dtype not in _DTYPE_BYTES:
-            continue
-        n = 1
-        for d in dims.split(","):
-            if d:
-                n *= int(d)
-        total += n * _DTYPE_BYTES[dtype]
-    return total
-
-
-def shape_dims(type_str: str):
-    m = _SHAPE_RE.search(type_str)
-    if not m:
-        return None, ()
-    dims = tuple(int(d) for d in m.group(2).split(",") if d)
-    return m.group(1), dims
-
-
-@dataclasses.dataclass
-class Instr:
-    name: str
-    type_str: str
-    opcode: str
-    rest: str            # operands + attrs raw text
-    operands: tuple
-
-
-_OPCODE_RE = re.compile(r"([\w\-]+)\((.*)$", re.S)
-
-
-def _parse_instr(line: str):
-    """Manual parse: tuple types contain spaces and '=' (inside /*index=N*/
-    comments), so a single regex cannot split type/opcode reliably."""
-    s = line.strip()
-    if s.startswith("ROOT "):
-        s = s[5:]
-    if not s.startswith("%"):
-        return None
-    eq = s.find(" = ")
-    if eq < 0:
-        return None
-    name = s[1:eq]
-    rest = s[eq + 3:]
-    if rest.startswith("("):           # tuple type: balanced-paren scan
-        depth = 0
-        end = 0
-        for i, ch in enumerate(rest):
-            if ch == "(":
-                depth += 1
-            elif ch == ")":
-                depth -= 1
-                if depth == 0:
-                    end = i
-                    break
-        type_str = rest[:end + 1]
-        tail = rest[end + 1:].lstrip()
-    else:
-        sp = rest.find(" ")
-        if sp < 0:
-            return None
-        type_str = rest[:sp]
-        tail = rest[sp + 1:]
-    m = _OPCODE_RE.match(tail)
-    if not m:
-        return None
-    opcode, args = m.groups()
-    # operand names = %refs before the closing paren of the operand list
-    depth, i = 1, 0
-    while i < len(args) and depth > 0:
-        if args[i] == "(":
-            depth += 1
-        elif args[i] == ")":
-            depth -= 1
-        i += 1
-    ops = tuple(_OPERAND_RE.findall(args[:i]))
-    return Instr(name, type_str, opcode, args, ops)
-
-
-def parse_module(text: str) -> dict:
-    """name -> list[Instr] for every computation in the module; '__entry__'
-    holds the entry computation's name."""
-    comps: dict = {}
-    current = None
-    entry = None
-    for line in text.splitlines():
-        if not line:
-            continue
-        if line.rstrip().endswith("{") and "->" in line and "= " not in line[:8]:
-            mc = _COMP_RE.match(line)
-            if mc:
-                current = mc.group(2)
-                comps[current] = []
-                if mc.group(1):
-                    entry = current
-                continue
-        if line.startswith("}"):
-            current = None
-            continue
-        if current is None:
-            continue
-        ins = _parse_instr(line)
-        if ins is not None:
-            comps[current].append(ins)
-    comps["__entry__"] = entry
-    return comps
-
-
-def _trip_count(comps, cond_name: str) -> int:
-    """Loop trip count from the condition computation's compare constant.
-    jax scans lower to 0..N-1 LT-compared loops; take the max int constant
-    appearing in the condition computation."""
-    best = None
-    for ins in comps.get(cond_name, ()):
-        if ins.opcode == "constant":
-            m = re.match(r"(\d+)\)", ins.rest.strip())
-            if m:
-                v = int(m.group(1))
-                best = v if best is None else max(best, v)
-    return best if best else 1
-
-
-def _group_size(rest: str, num_partitions: int) -> int:
-    m = _GROUPS_RE.search(rest)
-    if m:
-        return int(m.group(2))
-    m = _GROUPS_LIST_RE.search(rest)
-    if m:
-        return len([x for x in m.group(1).split(",") if x.strip() != ""])
-    return num_partitions
-
-
-def _dot_flops(ins: Instr, shapes: dict) -> float:
-    lhs = ins.operands[0] if ins.operands else None
-    _, rdims = shape_dims(ins.type_str)
-    out_elems = math.prod(rdims) if rdims else 1
-    m = _DOT_DIMS_RE.search(ins.rest)
-    contracted = 1
-    if m and lhs in shapes:
-        _, ldims = shape_dims(shapes[lhs])
-        for idx in m.group(1).split(","):
-            if idx:
-                contracted *= ldims[int(idx)]
-    return 2.0 * out_elems * contracted
-
-
-def _conv_flops(ins: Instr, shapes: dict) -> float:
-    _, rdims = shape_dims(ins.type_str)
-    out_elems = math.prod(rdims) if rdims else 1
-    kernel = 1
-    m = _WINDOW_RE.search(ins.rest)
-    if m:
-        for s in m.group(1).split("x"):
-            kernel *= int(s)
-    cin = 1
-    if len(ins.operands) >= 2 and ins.operands[1] in shapes:
-        _, kd = shape_dims(shapes[ins.operands[1]])
-        if kd:
-            cin = math.prod(kd) // max(kd[-1], 1) // max(kernel, 1) or 1
-    return 2.0 * out_elems * kernel * cin
-
-
-_SKIP_BYTES = {"parameter", "constant", "get-tuple-element", "tuple",
-               "bitcast", "after-all", "partition-id", "replica-id"}
-
-# HBM-traffic ops: on TPU, elementwise chains (convert/broadcast/select/...)
-# fuse into producers/consumers, so counting every standalone CPU-backend op
-# wildly overstates traffic (and double-counts the CPU's bf16->f32 widening
-# round-trips). We count ops that genuinely touch HBM on the TPU plan:
-# matmuls/convs, data movement, fusion boundaries, reductions, collectives.
-_TRAFFIC_OPS = {"dot", "convolution", "fusion", "copy", "dynamic-slice",
-                "dynamic-update-slice", "gather", "scatter", "sort",
-                "reduce", "concatenate", "pad", "slice", "iota", "rng",
-                "reduce-window", "select-and-scatter", "transpose"}
-
-
-def analyze(text: str, *, num_partitions: int | None = None) -> dict:
-    """Aggregate costs for the entry computation (per-device numbers, since
-    post-SPMD HLO shapes are per-device)."""
-    if num_partitions is None:
-        m = re.search(r"num_partitions=(\d+)", text)
-        num_partitions = int(m.group(1)) if m else 1
-    comps = parse_module(text)
-    entry = comps.pop("__entry__")
-    memo: dict = {}
-
-    def comp_cost(name: str) -> dict:
-        if name in memo:
-            return memo[name]
-        memo[name] = zero = {"flops": 0.0, "bytes": 0.0,
-                             "coll_bytes": defaultdict(float),
-                             "wire_bytes": 0.0}
-        agg = {"flops": 0.0, "bytes": 0.0, "coll_bytes": defaultdict(float),
-               "wire_bytes": 0.0}
-        instrs = comps.get(name, ())
-        shapes = {i.name: i.type_str for i in instrs}
-
-        def add(sub, mult=1.0):
-            agg["flops"] += sub["flops"] * mult
-            agg["bytes"] += sub["bytes"] * mult
-            agg["wire_bytes"] += sub["wire_bytes"] * mult
-            for k, v in sub["coll_bytes"].items():
-                agg["coll_bytes"][k] += v * mult
-
-        for ins in instrs:
-            op = ins.opcode
-            if op == "while":
-                body = _BODY_RE.search(ins.rest)
-                cond = _COND_RE.search(ins.rest)
-                mt = _TRIP_RE.search(ins.rest)   # XLA's own annotation first
-                if mt:
-                    trip = int(mt.group(1))
-                elif cond:
-                    trip = _trip_count(comps, cond.group(1))
-                else:
-                    trip = 1
-                if body:
-                    add(comp_cost(body.group(1)), trip)
-                if cond:
-                    add(comp_cost(cond.group(1)), trip)
-                continue
-            if op in ("call", "async-start"):
-                m = re.search(r"to_apply=%?([\w.\-]+)", ins.rest)
-                if m:
-                    add(comp_cost(m.group(1)))
-            if op == "conditional":
-                branches = re.findall(r"branch_computations=\{([^}]*)\}",
-                                      ins.rest)
-                if branches:
-                    names = _OPERAND_RE.findall(branches[0])
-                    if names:
-                        costs = [comp_cost(n) for n in names]
-                        add(max(costs, key=lambda c: c["flops"]))
-            if op == "fusion":
-                m = _CALLS_RE.search(ins.rest)
-                if m:
-                    sub = comp_cost(m.group(1))
-                    agg["flops"] += sub["flops"]   # dots inside fusions
-                    # fusion bytes counted at the fusion boundary below
-            if op == "dot":
-                agg["flops"] += _dot_flops(ins, shapes)
-            elif op == "convolution":
-                agg["flops"] += _conv_flops(ins, shapes)
-            elif op in ("sort",):
-                _, rd = shape_dims(ins.type_str)
-                n = math.prod(rd) if rd else 1
-                agg["flops"] += n * max(math.log2(max(n, 2)), 1.0)
-            if op in COLLECTIVES or any(op.startswith(c + "-start")
-                                        for c in COLLECTIVES):
-                base = op.replace("-start", "")
-                nbytes = shape_bytes(ins.type_str)
-                g = _group_size(ins.rest, num_partitions)
-                agg["coll_bytes"][base] += nbytes
-                if base == "all-reduce":
-                    wire = 2.0 * nbytes * (g - 1) / max(g, 1)
-                elif base in ("all-gather", "reduce-scatter", "all-to-all"):
-                    wire = nbytes * (g - 1) / max(g, 1)
-                else:
-                    wire = nbytes
-                agg["wire_bytes"] += wire
-            # HBM byte proxy (fusion-aware, see _TRAFFIC_OPS). Slicing ops
-            # move only the slice (XLA aliases the big buffer in place), so
-            # charging their full operands would bill every scan iteration
-            # for the whole stacked-layers tensor.
-            if op in ("dynamic-slice", "gather", "slice"):
-                agg["bytes"] += 2.0 * shape_bytes(ins.type_str)
-            elif op == "dynamic-update-slice":
-                upd = (shapes.get(ins.operands[1])
-                       if len(ins.operands) > 1 else None)
-                agg["bytes"] += 2.0 * shape_bytes(upd or "f32[]")
-            elif op == "scatter":
-                upd = (shapes.get(ins.operands[2])
-                       if len(ins.operands) > 2 else None)
-                agg["bytes"] += 2.0 * shape_bytes(upd or ins.type_str)
-            elif op == "fusion":
-                # CPU splits elementwise chains into many tiny kLoop fusions;
-                # on TPU the chain fuses into one pass whose inputs mostly
-                # come from registers/VMEM. Count the write side only — the
-                # read side of long-lived buffers is billed at their
-                # producing dot/slice/collective.
-                agg["bytes"] += shape_bytes(ins.type_str)
-            elif op in _TRAFFIC_OPS or op in COLLECTIVES:
-                b = shape_bytes(ins.type_str)
-                for o in ins.operands:
-                    if o in shapes:
-                        b += shape_bytes(shapes[o])
-                agg["bytes"] += b
-
-        memo[name] = agg
-        return agg
-
-    out = comp_cost(entry) if entry else {"flops": 0, "bytes": 0,
-                                          "coll_bytes": {}, "wire_bytes": 0}
-    out = dict(out)
-    out["coll_bytes"] = dict(out["coll_bytes"])
-    out["num_partitions"] = num_partitions
-    return out
-
-
-def flops_of(fn, *args):
-    """Trip-count-aware FLOPs of ``jit(fn)`` lowered on ``args`` (XLA's own
-    cost_analysis visits scan bodies once, under-reporting layer-scanned
-    models — see module docstring). jax imported lazily: the rest of this
-    module stays usable as a pure-text parser for stored dry-run artifacts."""
-    import jax
-    compiled = jax.jit(fn).lower(*args).compile()
-    return analyze(compiled.as_text())["flops"]
+from repro.analysis.hlo import (   # noqa: E402,F401
+    COLLECTIVES,
+    Instr,
+    analyze,
+    flops_of,
+    parse_module,
+    shape_bytes,
+    shape_dims,
+)

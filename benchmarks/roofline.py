@@ -27,9 +27,20 @@ import json
 import os
 import sys
 
-PEAK_FLOPS = 197e12        # bf16 / chip
-HBM_BW = 819e9             # bytes/s
-LINK_BW = 50e9             # bytes/s/link (ICI)
+# Hardware numbers live in repro.launch.plan (the capacity planner) —
+# ONE source of truth for the TPU v5e roofline; names re-exported so the
+# existing `roofline.PEAK_FLOPS` consumers keep working.
+import pathlib as _pathlib
+
+_SRC = str(_pathlib.Path(__file__).resolve().parents[1] / "src")
+if _SRC not in sys.path:
+    sys.path.insert(0, _SRC)
+
+from repro.launch.plan import TPU_V5E as _V5E   # noqa: E402
+
+PEAK_FLOPS = _V5E.peak_flops   # bf16 / chip
+HBM_BW = _V5E.hbm_bw           # bytes/s
+LINK_BW = _V5E.link_bw         # bytes/s/link (ICI)
 
 SHAPE_TOKENS = {
     "train_4k": 4096 * 256,

@@ -61,6 +61,20 @@ def main() -> None:
     except Exception as e:
         print(f"(roofline table unavailable: {e})")
 
+    # trajectory lint: every BENCH_*.json this run left behind must parse
+    # as the flat-scalar trajectory schema — a malformed file fails the
+    # harness here instead of silently corrupting repro.launch.plan's
+    # measured inputs (the same validator gates checked-in files in tier-1)
+    from repro.launch.bench import repo_bench_files, validate_bench_file
+    errors = []
+    for path in repo_bench_files("."):
+        errors += validate_bench_file(path)
+    if errors:
+        print("\nBENCH schema lint FAILED:")
+        for e in errors:
+            print(f"  {e}")
+        raise SystemExit(1)
+
     if not args.csv:
         print(f"\ntotal benchmark time: {time.time() - t0:.1f}s")
 

@@ -16,7 +16,6 @@ phase-specialized steppers (the ``make_soi_steppers`` shim is gone).
 
 from __future__ import annotations
 
-import json
 import time
 
 import jax
@@ -36,6 +35,25 @@ def _flops_of(fn, *args):
     sys.path.insert(0, str(pathlib.Path(__file__).resolve().parents[1]))
     from benchmarks.hlo_analysis import flops_of
     return flops_of(fn, *args)
+
+
+def _measured_mem(fn, *args):
+    """XLA's own numbers for the compiled step: bytes accessed per
+    execution (cost_analysis) and peak buffer residency (memory_analysis:
+    arguments + outputs + temps - donated aliases). These are the measured
+    counterparts of the parser-derived bytes in cost_baseline.json — both
+    axes land in the trajectory so repro.launch.plan can compare."""
+    compiled = jax.jit(fn).lower(*args).compile()
+    ca = compiled.cost_analysis()
+    if isinstance(ca, list):          # CPU backend returns a list
+        ca = ca[0] if ca else {}
+    ma = compiled.memory_analysis()
+    try:
+        peak = float(ma.argument_size_in_bytes + ma.output_size_in_bytes
+                     + ma.temp_size_in_bytes - ma.alias_size_in_bytes)
+    except AttributeError:
+        peak = 0.0
+    return float(ca.get("bytes accessed", 0.0)), peak
 
 
 def run(csv=False, out_json="BENCH_soi_lm.json"):
@@ -129,10 +147,15 @@ def run(csv=False, out_json="BENCH_soi_lm.json"):
     # the two sets of numbers bracket dispatch overhead vs the branch
     # split. Both are emitted; regressions watch the devloop ratio.
     def _time_device_loop(cfg_, params_, state, pin_t, n=200):
+        # pin_t=None leaves the clock free-running: slots stay aligned but
+        # the cond genuinely alternates phase-0 / off-phase across the
+        # loop — the steady-state step the capacity planner predicts from
+        # the two pinned rows ((p0 + (stride-1)*off) / stride).
         def nsteps(p, st_):
             def body(_, carry):
                 st_i, _lg = carry
-                lg, ns = generate_step(p, cfg_, dict(st_i, t=pin_t), tok)
+                st_in = st_i if pin_t is None else dict(st_i, t=pin_t)
+                lg, ns = generate_step(p, cfg_, st_in, tok)
                 return ns, lg
             return jax.lax.fori_loop(
                 0, n, body, (st_, jnp.zeros((b, cfg_.vocab), jnp.float32)))
@@ -150,12 +173,26 @@ def run(csv=False, out_json="BENCH_soi_lm.json"):
                                        jnp.ones((b,), jnp.int32))
     t_std_dev = _time_device_loop(cfg_std, params_std, state_std,
                                   jnp.asarray(state_std["t"]))
+    # independently measured phase-ALIGNED loop (free-running clock): the
+    # honesty target for repro.launch.plan's per-phase composition
+    t_aligned_dev = _time_device_loop(cfg_soi, params_soi, st_p0, None)
+
+    # measured memory axes of the two compiled steps (XLA's own numbers)
+    soi_bytes, soi_peak = _measured_mem(soi_step, params_soi, state_soi, tok)
+    std_bytes, std_peak = _measured_mem(std_step, params_std, state_std, tok)
 
     rows = {
+        "batch": b,
+        "stride": cfg_soi.soi.stride,
         "std_step_flops": f_std,
         # static count of the ONE program: includes BOTH lax.cond branches;
         # runtime executes one (the skip branch whenever no window completes)
         "soi_unified_step_flops": f_soi,
+        # XLA-measured memory axes of the compiled steps
+        "std_step_bytes_accessed": std_bytes,
+        "soi_step_bytes_accessed": soi_bytes,
+        "std_step_peak_bytes": std_peak,
+        "soi_step_peak_bytes": soi_peak,
     }
     rows["wallclock_step_std_s"] = t_std
     rows["wallclock_step_soi_s"] = t_soi
@@ -187,8 +224,11 @@ def run(csv=False, out_json="BENCH_soi_lm.json"):
     t_avg_dev = (t_phase0_dev + (st - 1) * t_offphase_dev) / st
     rows["devloop_avg_wallclock_reduction_%"] = 100 * (1 - t_avg_dev
                                                        / t_std_dev)
-    with open(out_json, "w") as f:
-        json.dump(rows, f, indent=2)
+    # free-running clock: the measured steady state the planner's
+    # (p0 + (stride-1)*off)/stride composition must predict within ±30%
+    rows["devloop_step_soi_aligned_s"] = t_aligned_dev
+    from repro.launch.bench import write_bench
+    write_bench(rows, out_json)
     if csv:
         print(f"soi_lm_decode/avg,{t_soi*1e6:.0f},"
               f"reduction={rows['avg_wallclock_reduction_%']:.1f}%")

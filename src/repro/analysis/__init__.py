@@ -1,6 +1,6 @@
 """repro.analysis: static + runtime contract checker for the engine hot path.
 
-Four passes over every jitted entry point of ``repro.engine`` (and the host
+Five passes over every jitted entry point of ``repro.engine`` (and the host
 driver code around them), each enforcing one serving contract:
 
 * ``donation``   — decode-state buffers are donated, no donation is
@@ -13,11 +13,18 @@ driver code around them), each enforcing one serving contract:
                    traffic compiles nothing (RET0xx);
 * ``dtype``      — the carried decode state is a dtype fixed point, and no
                    narrowing/f64/weak-type promotion hides in the compiled
-                   step (DT0xx).
+                   step (DT0xx);
+* ``cost``       — the paper's complexity claims hold STATICALLY in the
+                   optimized HLO: off-phase cheaper than phase-0 by the
+                   middle trunk's floor, paged bytes bounded vs dense, the
+                   speculative window within its K-step identity, prefix
+                   hits O(suffix), and no FLOP/byte drift beyond the
+                   checked-in ``cost_baseline.json`` (COST0xx).
 
 Run ``python -m repro.analysis`` for the report, ``--ci`` to gate on the
-checked-in baseline (``analysis_baseline.json``).  The contracts themselves
-are documented in ``docs/CONTRACTS.md``.
+checked-in baselines (``analysis_baseline.json`` + ``cost_baseline.json``),
+``--update-baseline`` to regenerate both after an audited change.  The
+contracts themselves are documented in ``docs/CONTRACTS.md``.
 """
 
 from __future__ import annotations
@@ -28,7 +35,7 @@ from repro.analysis.targets import (AnalysisTarget, build_target,
                                     default_targets, drive_traffic,
                                     get_target)
 
-PASSES = ("donation", "hostsync", "retrace", "dtype")
+PASSES = ("donation", "hostsync", "retrace", "dtype", "cost")
 
 
 def run_pass(pass_name: str, target) -> list:
@@ -44,6 +51,11 @@ def run_pass(pass_name: str, target) -> list:
     if pass_name == "dtype":
         from repro.analysis import dtype_drift
         return dtype_drift.run(target)
+    if pass_name == "cost":
+        # single-target shape: in-cell certifications + baseline rows only;
+        # cross-cell checks (COST002/COST003) need the matrix — see analyze()
+        from repro.analysis import cost
+        return cost.run(target)
     raise ValueError(f"unknown pass {pass_name!r} (have {PASSES})")
 
 
@@ -51,6 +63,9 @@ def analyze(target_names=None, passes=PASSES, progress=None) -> Report:
     """Run ``passes`` over ``target_names`` (default: the full matrix).
 
     The static half of ``hostsync`` is target-independent and runs once.
+    The ``cost`` pass runs once over the whole invocation AFTER the
+    per-target loop (its COST002/COST003 certifications compare sibling
+    cells) and deposits per-entry metrics in ``Report.metrics``.
     Returns a :class:`Report`.
     """
     from repro.analysis import hostsync
@@ -60,9 +75,10 @@ def analyze(target_names=None, passes=PASSES, progress=None) -> Report:
     report = Report(targets=target_names, passes=passes)
     if "hostsync" in passes:
         report.extend(hostsync.run())
+    per_target = [p for p in passes if p != "cost"]
     for name in target_names:
         target = get_target(name)
-        for pass_name in passes:
+        for pass_name in per_target:
             if progress:
                 progress(f"{name}:{pass_name}")
             if pass_name == "hostsync":
@@ -70,6 +86,13 @@ def analyze(target_names=None, passes=PASSES, progress=None) -> Report:
                 report.extend(runtime.run(target))
             else:
                 report.extend(run_pass(pass_name, target))
+    if "cost" in passes:
+        from repro.analysis import cost
+        if progress:
+            progress("cost:matrix")
+        findings, metrics = cost.run_matrix(target_names)
+        report.extend(findings)
+        report.metrics = metrics
     report.dedupe()
     return report
 

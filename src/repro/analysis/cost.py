@@ -1,0 +1,350 @@
+"""The ``cost`` pass: static certification of SOI's FLOP/byte claims.
+
+Every jitted entry of every matrix cell is lowered and its optimized HLO
+parsed twice with :mod:`repro.analysis.hlo` — once selecting the most
+expensive branch of each ``conditional`` (``cond="max"``: the phase-0 step,
+where the compressed middle runs) and once the cheapest (``cond="min"``:
+the off-phase step, where the ``lax.cond`` skips it). The pair gives the
+paper's computational-complexity claims as *static* facts about the ONE
+compiled program, with no phase-specialized lowerings and nothing executed.
+
+Finding codes (family COST, gated like every other pass):
+
+  COST001  off-phase generate FLOPs are NOT below phase-0 by at least the
+           middle trunk's closed-form matmul floor — the SOI skip was lost
+           in lowering (a cond flattened, or the middle leaked into the
+           always-taken path). Spec windows must bank K skips.
+  COST002  paged generate touches more than ``PAGED_BYTES_TOL``x the bytes
+           of its dense sibling — a dense-view gather crept back into the
+           paged step (today's measured ratio is ~1.02x; a full-view
+           gather regression is ~8x).
+  COST003  the fused speculative window costs more than its exact identity
+           bound: (K-1) draft (off-phase) steps + K verify (worst-case
+           phase-0) steps of the non-speculative sibling cell. Anything
+           above (slack ``SPEC_WINDOW_TOL``) means the window re-runs work
+           K-per-token serving would not.
+  COST004  a prefix-cache hit is not O(suffix): ``hydrate`` must contain
+           zero matmul FLOPs (it is a pure page gather) and move fewer
+           bytes than ONE prefill chunk — otherwise hitting the cache is
+           no cheaper than prefilling the prefix.
+  COST005  drift vs the checked-in ``cost_baseline.json``: an entry's
+           FLOPs/bytes/peak grew beyond the baseline tolerance, or a new
+           entry has no baseline row. Regenerate with
+           ``python -m repro.analysis --update-baseline`` after auditing
+           the diff it prints.
+
+Certifications that compare cells (COST002/COST003) run only when the
+sibling cell is part of the same invocation — ``--ci`` always runs the full
+matrix, so CI sees every cross-cell assertion.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+
+from repro.analysis.hlo import analyze as hlo_analyze
+from repro.analysis.report import Finding
+
+PASS = "cost"
+
+# Calibrated bounds (see docs/CONTRACTS.md §5 for the measurements):
+SPEC_WINDOW_TOL = 1.02   # window vs (K-1)*off + K*p0 — identity is exact;
+                         # slack covers bookkeeping dots around the scan
+PAGED_BYTES_TOL = 1.25   # paged/dense generate bytes — measured ~1.02x;
+                         # a dense-view gather regression lands ~8x
+BASELINE_TOL = 0.10      # default headroom for COST005 growth
+
+METRIC_KEYS = ("flops", "flops_min", "bytes", "bytes_min", "peak_bytes")
+
+
+@dataclasses.dataclass(frozen=True)
+class EntryCost:
+    """Static cost of one compiled entry. ``flops``/``bytes`` charge the
+    most expensive branch of every conditional (phase-0); the ``_min``
+    variants the cheapest (off-phase). ``peak_bytes`` is XLA's buffer
+    residency: arguments + outputs + temps − donated aliases."""
+    flops: float
+    flops_min: float
+    bytes: float
+    bytes_min: float
+    peak_bytes: float
+    contract: dict | None = None
+
+    def to_metrics(self) -> dict:
+        return {k: getattr(self, k) for k in METRIC_KEYS}
+
+
+def _peak_bytes(compiled) -> float:
+    try:
+        ma = compiled.memory_analysis()
+        return float(ma.argument_size_in_bytes + ma.output_size_in_bytes
+                     + ma.temp_size_in_bytes - ma.alias_size_in_bytes)
+    except Exception:           # backend without memory_analysis
+        return 0.0
+
+
+_COST_CACHE: dict = {}
+
+
+def measure_target(target) -> dict:
+    """entry name -> :class:`EntryCost` for every jitted entry of the
+    target's engine. Lower+compile only — nothing executes, so donation
+    example args are safe. Cached per target name (compilation dominates)."""
+    if target.name in _COST_CACHE:
+        return _COST_CACHE[target.name]
+    out = {}
+    for e in target.engine.analysis_entries(target.params):
+        compiled = e.jfn.lower(*e.args).compile()
+        txt = compiled.as_text()
+        cmax = hlo_analyze(txt, cond="max")
+        cmin = hlo_analyze(txt, cond="min")
+        out[e.name] = EntryCost(
+            flops=cmax["flops"], flops_min=cmin["flops"],
+            bytes=cmax["bytes"], bytes_min=cmin["bytes"],
+            peak_bytes=_peak_bytes(compiled), contract=e.cost)
+    _COST_CACHE[target.name] = out
+    return out
+
+
+def middle_trunk_floor(cfg, batch: int) -> float:
+    """Closed-form LOWER bound on the per-step matmul FLOPs of the SOI
+    middle trunk: the projections/MLPs a phase-0 step must run and an
+    off-phase step must skip, for ``batch`` decoding slots.
+
+    Deliberately conservative — only unconditional matmuls are counted
+    (GQA q/k/v/o projections, dense MLP matmuls, routed+shared expert
+    matmuls at top_k occupancy); attention score/value products, norms and
+    MLA's absorbed low-rank path are left out. The certified gap
+    (phase-0 − off-phase) must STILL clear this floor, so any slack only
+    makes COST001 harder to fool."""
+    from repro.models.transformer import soi_partition
+
+    if cfg.soi is None:
+        return 0.0
+    _, mid, _ = soi_partition(cfg)
+    d = cfg.d_model
+    per_tok = 0.0
+    for seg in mid:
+        for i in range(seg.n_layers):
+            blk = seg.blocks[i % len(seg.blocks)]
+            a = blk.attn
+            if a is not None and not a.is_mla:
+                # q + k + v + o projections, per token
+                per_tok += 2.0 * d * a.head_dim * (2 * a.n_heads + 2 * a.n_kv)
+            if blk.mlp is not None and blk.mlp.d_ff:
+                mults = 3 if blk.mlp.kind in ("swiglu", "geglu") else 2
+                per_tok += mults * 2.0 * d * blk.mlp.d_ff
+            if blk.moe is not None:
+                m = blk.moe
+                mults = 3 if m.mlp_kind in ("swiglu", "geglu") else 2
+                per_tok += m.top_k * mults * 2.0 * d * m.d_expert
+                per_tok += m.n_shared * mults * 2.0 * d * m.d_shared
+    return per_tok * batch
+
+
+def load_cost_baseline(path: str):
+    """Parsed cost baseline, or ``None`` when the file is absent (COST005
+    then reports every entry as missing — run ``--update-baseline``)."""
+    try:
+        with open(path) as fh:
+            return json.load(fh)
+    except FileNotFoundError:
+        return None
+
+
+def write_cost_baseline(metrics: dict, path: str,
+                        tolerance: float = BASELINE_TOL,
+                        merge_with=None) -> dict:
+    """Write ``cost_baseline.json`` from a run's metrics. ``merge_with``
+    (an existing parsed baseline) preserves rows for cells NOT in this
+    run, so ``--update-baseline --targets subset`` cannot silently drop
+    the rest of the matrix."""
+    cells = dict((merge_with or {}).get("cells", {}))
+    for tname, entries in metrics.items():
+        cells[tname] = {e: {k: m[k] for k in METRIC_KEYS}
+                        for e, m in entries.items()}
+    data = {"version": 1, "tolerance": tolerance,
+            "cells": {k: cells[k] for k in sorted(cells)}}
+    with open(path, "w") as fh:
+        json.dump(data, fh, indent=2)
+        fh.write("\n")
+    return data
+
+
+def diff_cost_baseline(metrics: dict, baseline) -> list:
+    """Human-readable per-metric changes vs a parsed baseline (for the
+    ``--update-baseline`` printout). Returns ``"cell.entry.metric: old ->
+    new (+x%)"`` lines for every changed value, plus added/removed rows."""
+    lines = []
+    old_cells = (baseline or {}).get("cells", {})
+    for tname in sorted(metrics):
+        base_entries = old_cells.get(tname, {})
+        for ename in sorted(metrics[tname]):
+            where = f"{tname}.{ename}"
+            if ename not in base_entries:
+                lines.append(f"  + {where} (new entry)")
+                continue
+            for k in METRIC_KEYS:
+                new = metrics[tname][ename].get(k, 0.0)
+                old = base_entries[ename].get(k, 0.0)
+                if new != old:
+                    pct = 100.0 * (new - old) / old if old else float("inf")
+                    lines.append(f"  ~ {where}.{k}: {old:,.0f} -> "
+                                 f"{new:,.0f} ({pct:+.1f}%)")
+        for ename in sorted(set(base_entries) - set(metrics[tname])):
+            lines.append(f"  - {tname}.{ename} (entry gone)")
+    return lines
+
+
+def _find(code, where, message):
+    return Finding(pass_name=PASS, code=code, where=where, message=message)
+
+
+def _certify_cell(name, costs, cfg) -> list:
+    """In-cell assertions: COST001 (off-phase skip) and COST004 (prefix
+    hit is O(suffix))."""
+    findings = []
+    for ename, c in costs.items():
+        ct = c.contract or {}
+        role = ct.get("role")
+        if role in ("generate", "spec_window") and cfg.soi is not None:
+            mult = ct.get("k", 1) if role == "spec_window" else 1
+            floor = middle_trunk_floor(cfg, ct.get("batch", 1)) * mult
+            gap = c.flops - c.flops_min
+            if gap + 0.5 < floor:
+                findings.append(_find(
+                    "COST001", f"{name}.{ename}",
+                    f"off-phase skip lost in lowering: phase-0 "
+                    f"{c.flops:,.0f} FLOPs vs off-phase {c.flops_min:,.0f} "
+                    f"(gap {gap:,.0f}) — the middle trunk's matmul floor "
+                    f"is {floor:,.0f} for stride {ct.get('stride')} "
+                    f"batch {ct.get('batch')}"
+                    + (f" x K={ct['k']} skips" if mult > 1 else "")))
+        if role == "hydrate":
+            if c.flops > 0.5:
+                findings.append(_find(
+                    "COST004", f"{name}.{ename}",
+                    f"prefix-cache hydrate contains {c.flops:,.0f} matmul "
+                    f"FLOPs — a hit must be a pure page gather, not "
+                    f"recompute"))
+            chunk = costs.get("prefill_chunk")
+            if chunk is not None and c.bytes >= chunk.bytes:
+                findings.append(_find(
+                    "COST004", f"{name}.{ename}",
+                    f"hydrate moves {c.bytes:,.0f} bytes >= one prefill "
+                    f"chunk's {chunk.bytes:,.0f} — a prefix hit is not "
+                    f"O(suffix)"))
+    return findings
+
+
+def _step_entry(costs):
+    """The cell's decode-step entry: ``generate`` or the fused window."""
+    for ename in ("generate", "speculative_window"):
+        if ename in costs:
+            return ename, costs[ename]
+    return None, None
+
+
+def _certify_cross(all_costs: dict) -> list:
+    """Cross-cell assertions, for every pair present in this run:
+    COST002 (paged bytes vs dense sibling) and COST003 (spec window vs
+    the per-token identity of the non-spec sibling)."""
+    findings = []
+    for name, costs in all_costs.items():
+        ename, step = _step_entry(costs)
+        if step is None:
+            continue
+        # COST002: -paged vs -dense, same arch / same spec mode
+        if "-paged" in name:
+            sib = all_costs.get(name.replace("-paged", "-dense"))
+            if sib is not None:
+                _, dense = _step_entry(sib)
+                if dense is not None and dense.bytes > 0 \
+                        and step.bytes > PAGED_BYTES_TOL * dense.bytes:
+                    findings.append(_find(
+                        "COST002", f"{name}.{ename}",
+                        f"paged step touches {step.bytes:,.0f} bytes = "
+                        f"{step.bytes / dense.bytes:.2f}x its dense "
+                        f"sibling's {dense.bytes:,.0f} (bound "
+                        f"{PAGED_BYTES_TOL}x) — a dense-view gather is "
+                        f"back on the paged path"))
+        # COST003: the fused window vs K per-token steps of the sibling
+        k = (step.contract or {}).get("k")
+        if ename == "speculative_window" and k and name.endswith("-spec"):
+            sib = all_costs.get(name[:-len("-spec")])
+            if sib is not None and "generate" in sib:
+                g = sib["generate"]
+                bound = (k - 1) * g.flops_min + k * g.flops
+                if step.flops > SPEC_WINDOW_TOL * bound:
+                    findings.append(_find(
+                        "COST003", f"{name}.{ename}",
+                        f"fused speculative window costs {step.flops:,.0f} "
+                        f"FLOPs > {SPEC_WINDOW_TOL}x its identity bound "
+                        f"{bound:,.0f} = (K-1) off-phase drafts + K "
+                        f"worst-case verify steps of {name[:-5]} (K={k})"))
+    return findings
+
+
+def _certify_baseline(metrics: dict, baseline) -> list:
+    """COST005: growth beyond tolerance, or entries with no baseline row.
+    Shrinkage never fails — it only means the baseline is refreshable."""
+    findings = []
+    cells = (baseline or {}).get("cells", {})
+    tol = (baseline or {}).get("tolerance", BASELINE_TOL)
+    for tname, entries in metrics.items():
+        base_entries = cells.get(tname, {})
+        for ename, m in entries.items():
+            where = f"{tname}.{ename}"
+            base = base_entries.get(ename)
+            if base is None:
+                findings.append(_find(
+                    "COST005", where,
+                    "no cost baseline row for this entry — run `python -m "
+                    "repro.analysis --update-baseline`, audit the printed "
+                    "diff, and commit cost_baseline.json"))
+                continue
+            grown = [f"{k} {base[k]:,.0f} -> {m[k]:,.0f} "
+                     f"(+{100.0 * (m[k] - base[k]) / base[k]:.1f}%)"
+                     for k in METRIC_KEYS
+                     if base.get(k, 0.0) > 0 and m[k] > base[k] * (1 + tol)]
+            if grown:
+                findings.append(_find(
+                    "COST005", where,
+                    f"cost regression beyond the {tol:.0%} baseline "
+                    f"tolerance: " + "; ".join(grown)))
+    return findings
+
+
+def run_matrix(target_names, baseline_path=None):
+    """Measure + certify ``target_names``. Returns ``(findings, metrics)``
+    where ``metrics`` is ``{target: {entry: {flops, flops_min, bytes,
+    bytes_min, peak_bytes}}}`` — the payload ``--update-baseline``
+    persists. ``baseline_path=None`` resolves ``cost_baseline.json`` at
+    the repo root; pass ``False`` to skip COST005 entirely."""
+    from repro.analysis.targets import get_target
+
+    all_costs, metrics = {}, {}
+    for name in target_names:
+        t = get_target(name)
+        all_costs[name] = measure_target(t)
+        metrics[name] = {e: c.to_metrics()
+                         for e, c in all_costs[name].items()}
+    findings = []
+    for name, costs in all_costs.items():
+        findings += _certify_cell(name, costs, get_target(name).cfg)
+    findings += _certify_cross(all_costs)
+    if baseline_path is not False:
+        if baseline_path is None:
+            from repro.analysis.hostsync import repo_root
+            baseline_path = str(repo_root() / "cost_baseline.json")
+        findings += _certify_baseline(metrics,
+                                      load_cost_baseline(baseline_path))
+    return findings, metrics
+
+
+def run(target) -> list:
+    """Single-target entry point (the ``run_pass`` shape): in-cell
+    certifications + baseline rows for this cell only. Cross-cell checks
+    need the matrix — use :func:`run_matrix` (``analyze`` does)."""
+    return run_matrix([target.name])[0]

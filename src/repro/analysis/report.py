@@ -41,6 +41,11 @@ from typing import List, Optional
 #   DT001   carried-state dtype drift (output leaf dtype != input leaf)
 #   DT002   narrowing float conversion below the config compute dtype
 #   DT003   float64 / weak-type float on a bit-exactness path
+#   COST001 off-phase generate not cheaper than phase-0 by the middle floor
+#   COST002 paged generate bytes beyond the dense-sibling bound
+#   COST003 fused speculative window above its K-step identity bound
+#   COST004 prefix-cache hydrate recomputes (not a pure O(suffix) gather)
+#   COST005 FLOPs/bytes/peak drift beyond cost_baseline.json tolerance
 
 
 @dataclasses.dataclass(frozen=True)
@@ -68,6 +73,10 @@ class Report:
     findings: List[Finding] = dataclasses.field(default_factory=list)
     targets: List[str] = dataclasses.field(default_factory=list)
     passes: List[str] = dataclasses.field(default_factory=list)
+    # per-entry static cost metrics from the ``cost`` pass:
+    # {target: {entry: {flops, flops_min, bytes, bytes_min, peak_bytes}}}
+    # — the payload ``--update-baseline`` writes to cost_baseline.json.
+    metrics: dict = dataclasses.field(default_factory=dict)
 
     def extend(self, findings) -> None:
         self.findings.extend(findings)
@@ -83,10 +92,13 @@ class Report:
         self.findings = kept
 
     def to_dict(self) -> dict:
-        return {"version": 1,
-                "targets": self.targets,
-                "passes": self.passes,
-                "findings": [f.to_dict() for f in self.findings]}
+        out = {"version": 1,
+               "targets": self.targets,
+               "passes": self.passes,
+               "findings": [f.to_dict() for f in self.findings]}
+        if self.metrics:
+            out["metrics"] = self.metrics
+        return out
 
     def write(self, path: str) -> None:
         with open(path, "w") as fh:

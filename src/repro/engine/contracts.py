@@ -130,6 +130,14 @@ class JitEntry:
     input. ``carry`` is ``(in_argnum, out_index)`` locating the carried
     state in the inputs and outputs (``out_index=None``: the whole output
     is the new state) for the dtype-stability check.
+
+    ``cost`` is the entry's static cost contract for the ``cost`` pass
+    (repro.analysis.cost): a dict with ``role`` (``"generate"``,
+    ``"spec_window"``, ``"prefill"``, ``"prefill_chunk"``, ``"hydrate"``
+    or ``"aux"``) plus the parameters the certifier needs to state the
+    paper's claims about this program (``stride``, ``k``, ``batch``,
+    ``tokens``). ``None`` means the entry carries no cost assertion and
+    is only metered for the baseline.
     """
     name: str
     jfn: object
@@ -138,3 +146,4 @@ class JitEntry:
     state_args: tuple = ()
     readonly_ok: dict = dataclasses.field(default_factory=dict)
     carry: tuple | None = None
+    cost: dict | None = None

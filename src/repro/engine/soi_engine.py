@@ -1294,6 +1294,7 @@ class SOIEngine(Engine):
         cfg = self.cfg
         ro_params = ("params are shared by every call on the engine and "
                      "must never be donated")
+        stride = cfg.soi.stride if cfg.soi is not None else 1
         ds = self.init_decode_state(params)
         slot = jnp.asarray(0, jnp.int32)
         first = jnp.zeros((1,), jnp.int32)
@@ -1309,7 +1310,9 @@ class SOIEngine(Engine):
             entries.append(JitEntry(
                 "prefill_chunk", self._prefill_chunk_fn,
                 (params, ms_ex, tok_c, off, tl), donate=(1,),
-                state_args=(1,), readonly_ok={0: ro_params}, carry=(1, 1)))
+                state_args=(1,), readonly_ok={0: ro_params}, carry=(1, 1),
+                cost={"role": "prefill_chunk", "tokens": self._chunk,
+                      "batch": 1, "stride": stride}))
         else:
             length = self._buckets[0] if self._buckets else min(8,
                                                                 self.max_len)
@@ -1320,7 +1323,9 @@ class SOIEngine(Engine):
                                       None)
             entries.append(JitEntry(
                 "prefill", self._prefill_fn, (params, tok, tl, None),
-                readonly_ok={0: ro_params}))
+                readonly_ok={0: ro_params},
+                cost={"role": "prefill", "tokens": length, "batch": 1,
+                      "stride": stride}))
         page_rows = None
         if self._paged:
             page_rows = {}
@@ -1339,13 +1344,17 @@ class SOIEngine(Engine):
         if self._speculate is None:
             entries.append(JitEntry(
                 "generate", self._gen, (params, ds), donate=(1,),
-                state_args=(1,), readonly_ok={0: ro_params}, carry=(1, 0)))
+                state_args=(1,), readonly_ok={0: ro_params}, carry=(1, 0),
+                cost={"role": "generate", "stride": stride,
+                      "batch": self._slots}))
         else:
             mask = jnp.asarray(self._spec_slots)
             entries.append(JitEntry(
                 "speculative_window", self._specgen, (params, ds, mask),
                 donate=(1,), state_args=(1,), readonly_ok={0: ro_params},
-                carry=(1, 0)))
+                carry=(1, 0),
+                cost={"role": "spec_window", "stride": stride,
+                      "k": self._speculate, "batch": self._slots}))
         if self._paged:
             rows = {k: jnp.zeros_like(v) for k, v in page_rows.items()}
         else:
@@ -1369,7 +1378,9 @@ class SOIEngine(Engine):
                 state_args=(0,),
                 readonly_ok={1: "the LIVE pool state hydration gathers "
                                 "from; it outlives the call"},
-                carry=(0, None)))
+                carry=(0, None),
+                cost={"role": "hydrate", "tokens": self._chunk,
+                      "stride": stride}))
             src_p = jnp.asarray(1, jnp.int32)
             dst_p = jnp.asarray(2, jnp.int32)
             entries.append(JitEntry(

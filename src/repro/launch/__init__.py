@@ -1,2 +1,3 @@
 """Launch layer: production meshes, AOT dry-run, training and serving
-drivers."""
+drivers, the capacity planner (``repro.launch.plan``), and the BENCH
+trajectory schema (``repro.launch.bench``)."""

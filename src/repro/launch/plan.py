@@ -1,0 +1,318 @@
+"""Capacity planner: what does serving a config cell cost on real hardware?
+
+``plan_cell`` combines the static per-entry costs certified by the
+``cost`` analysis pass (FLOPs/bytes of the ONE compiled step, phase-0 and
+off-phase branches separately) with a :class:`HardwareSpec` roofline and
+the engine's state geometry to predict, per matrix cell:
+
+  * seconds/step for phase-0 and off-phase, and the steady-state
+    stride-average (1 phase-0 + stride-1 off-phase steps);
+  * tokens/s at full occupancy (speculative cells: K committed tokens per
+    window at full acceptance — the static upper bound);
+  * HBM residency: params + decode-state pools, decode-state bytes/slot,
+    and the max concurrent slots that fit the spec's HBM;
+  * compile count (one program per engine entry — the O(1) contract).
+
+The numbers come from ``cost_baseline.json`` when present (no jit, fast)
+and are measured live otherwise.
+
+Honesty checks (``check_soi_bench`` / ``check_paged_bench`` /
+``check_selfspec_bench``) close the loop against the measured
+``BENCH_*.json`` trajectory wherever a bench exists, and a tier-1 test
+gates them at ±30%:
+
+  * tok/s: the planner's steady-state composition (1 phase-0 + stride-1
+    off-phase steps, from the bench's independently timed per-phase rows)
+    vs the bench's *separately measured* phase-aligned device loop;
+  * bytes: the planner's static state-geometry prediction (eval_shape over
+    a throwaway engine, zero execution) vs the bench's measured ``nbytes``
+    per slot, dense and paged;
+  * compile count: the O(1) prediction vs the bench's measured compile
+    counters.
+
+The hardware spec numbers are also what ``benchmarks/roofline.py`` uses —
+one source of truth for the TPU v5e roofline.
+
+CLI: ``PYTHONPATH=src python -m repro.launch.plan [--cells a,b] [--json]``.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+import math
+
+
+@dataclasses.dataclass(frozen=True)
+class HardwareSpec:
+    """Per-chip roofline + capacity numbers."""
+    name: str
+    peak_flops: float          # FLOP/s (bf16 systolic peak)
+    hbm_bw: float              # bytes/s
+    hbm_bytes: float           # capacity, bytes
+    link_bw: float             # bytes/s per ICI link
+    hbm_reserve_frac: float = 0.10   # headroom for temps/workspace
+
+
+TPU_V5E = HardwareSpec(name="tpu-v5e", peak_flops=197e12, hbm_bw=819e9,
+                       hbm_bytes=16 * 2**30, link_bw=50e9)
+
+
+@dataclasses.dataclass(frozen=True)
+class CellPlan:
+    cell: str
+    hardware: str
+    stride: int
+    k: int                       # speculation window (1 = per-token)
+    batch: int                   # engine slots in the analysis matrix
+    step_s_phase0: float
+    step_s_offphase: float
+    step_s_avg: float            # stride-average per committed token
+    tok_s: float                 # batch * k-per-window / window, steady state
+    param_bytes: float
+    state_bytes_per_slot: float
+    state_bytes_total: float
+    hbm_resident_bytes: float    # params + pools at matrix-cell geometry
+    max_slots: int               # slots that fit spec HBM next to params
+    compile_count: int           # one program per engine entry (O(1) contract)
+
+    def to_dict(self) -> dict:
+        return dataclasses.asdict(self)
+
+
+def _roofline_s(flops: float, nbytes: float, spec: HardwareSpec) -> float:
+    return max(flops / spec.peak_flops, nbytes / spec.hbm_bw)
+
+
+def _cell_shape(name: str):
+    """(cfg, engine_kwargs, stride, k, batch) for a matrix cell — derived
+    from the analysis matrix without building an engine."""
+    from repro.analysis.targets import MATRIX
+    cfg_fn, kwargs = MATRIX[name]
+    cfg = cfg_fn()
+    stride = cfg.soi.stride if cfg.soi is not None else 1
+    k = int(kwargs.get("speculate") or 1)
+    batch = int(kwargs["max_concurrent_decodes"])
+    return cfg, kwargs, stride, k, batch
+
+
+def load_cell_metrics(names, baseline_path=None) -> dict:
+    """Per-entry cost metrics per cell: from ``cost_baseline.json`` when it
+    covers the cell (fast, no jit), measured live otherwise."""
+    from repro.analysis import cost
+
+    if baseline_path is None:
+        from repro.analysis.hostsync import repo_root
+        baseline_path = str(repo_root() / "cost_baseline.json")
+    cells = ((cost.load_cost_baseline(baseline_path) or {})
+             .get("cells", {}))
+    out = {n: cells[n] for n in names if n in cells}
+    missing = [n for n in names if n not in out]
+    if missing:
+        _, live = cost.run_matrix(missing, baseline_path=False)
+        out.update(live)
+    return out
+
+
+def state_bytes_per_slot(cfg, engine_kwargs) -> float:
+    """Static decode-state footprint: eval_shape over a THROWAWAY engine's
+    ``init_decode_state`` (nothing executes, nothing allocates), summing
+    the attention-cache groups — the same groups
+    ``benchmarks/paged_kv_bench.py`` measures with ``nbytes``, so the
+    honesty check compares like with like."""
+    import jax
+    from repro.engine import SOIEngine
+    from repro.launch.specs import abstract_params
+
+    engine = SOIEngine(cfg, **engine_kwargs)
+    shapes, _ = abstract_params(cfg)
+    ds = jax.eval_shape(engine.init_decode_state, shapes)
+    total = 0
+    for key in ("segments", "pre", "mid", "post"):
+        if key in ds["model"]:
+            total += sum(math.prod(x.shape) * x.dtype.itemsize
+                         for x in jax.tree.leaves(ds["model"][key]))
+    return total / float(engine_kwargs["max_concurrent_decodes"])
+
+
+def _param_bytes(cfg) -> float:
+    import jax
+    from repro.launch.specs import abstract_params
+    shapes, _ = abstract_params(cfg)
+    return float(sum(math.prod(x.shape) * x.dtype.itemsize
+                     for x in jax.tree.leaves(shapes)))
+
+
+def plan_cell(name: str, spec: HardwareSpec = TPU_V5E,
+              metrics: dict | None = None) -> CellPlan:
+    """Predict serving cost/capacity for one matrix cell on ``spec``."""
+    if metrics is None:
+        metrics = load_cell_metrics([name])[name]
+    cfg, kwargs, stride, k, batch = _cell_shape(name)
+    step_name = ("speculative_window" if "speculative_window" in metrics
+                 else "generate")
+    step = metrics[step_name]
+    # cond=max charges every conditional's expensive branch (phase-0);
+    # cond=min the cheap one (off-phase). A speculative window already
+    # contains its K verify + K-1 draft steps, so divide by K committed
+    # tokens (full acceptance — the static upper bound).
+    s_p0 = _roofline_s(step["flops"], step["bytes"], spec) / k
+    s_off = _roofline_s(step["flops_min"], step["bytes_min"], spec) / k
+    s_avg = (s_p0 + (stride - 1) * s_off) / stride
+    pbytes = _param_bytes(cfg)
+    per_slot = state_bytes_per_slot(cfg, kwargs)
+    total_state = per_slot * batch
+    avail = spec.hbm_bytes * (1.0 - spec.hbm_reserve_frac) - pbytes
+    max_slots = int(avail // per_slot) if per_slot > 0 and avail > 0 else 0
+    return CellPlan(
+        cell=name, hardware=spec.name, stride=stride, k=k, batch=batch,
+        step_s_phase0=s_p0, step_s_offphase=s_off, step_s_avg=s_avg,
+        tok_s=batch / s_avg if s_avg > 0 else float("inf"),
+        param_bytes=pbytes, state_bytes_per_slot=per_slot,
+        state_bytes_total=total_state,
+        hbm_resident_bytes=pbytes + total_state, max_slots=max_slots,
+        compile_count=len(metrics))
+
+
+def plan_matrix(names=None, spec: HardwareSpec = TPU_V5E) -> dict:
+    from repro.analysis.targets import default_targets
+    names = list(names or default_targets())
+    metrics = load_cell_metrics(names)
+    return {n: plan_cell(n, spec, metrics[n]) for n in names}
+
+
+# ---- honesty checks: prediction vs the measured BENCH trajectory --------
+
+
+def _rel_err(pred: float, meas: float) -> float:
+    return pred / meas - 1.0 if meas else float("inf")
+
+
+def check_soi_bench(bench: dict) -> dict:
+    """Planner's steady-state composition vs BENCH_soi_lm.json.
+
+    The plan's tok/s model is ``(phase0 + (stride-1) * offphase) / stride``;
+    the bench independently measures BOTH the per-phase device-loop steps
+    (clock pinned) and a phase-aligned device loop (clock free-running, so
+    the lax.cond really alternates). If the composition does not predict
+    the aligned measurement, the planner's core model is wrong."""
+    stride = int(bench.get("stride", 2))
+    batch = int(bench.get("batch", 4))
+    pred_s = (bench["devloop_step_soi_phase0_s"]
+              + (stride - 1) * bench["devloop_step_soi_offphase_s"]) / stride
+    meas_s = bench["devloop_step_soi_aligned_s"]
+    return {"what": "steady-state SOI tok/s (devloop)",
+            "predicted_tok_s": batch / pred_s,
+            "measured_tok_s": batch / meas_s,
+            "rel_err": _rel_err(batch / pred_s, batch / meas_s)}
+
+
+def check_paged_bench(bench: dict) -> list:
+    """Static state-geometry bytes/slot vs BENCH_paged_kv.json's measured
+    ``nbytes`` — dense and paged, at the bench's exact geometry."""
+    import dataclasses as dc
+
+    import repro.configs.qwen3_1_7b as Q
+    from repro.models import decode as D
+
+    slots = int(bench["slots"])
+    resident = int(bench["resident_batch"])
+    max_len = int(bench["max_len"])
+    page = int(bench["page_size"])
+    cfg = dc.replace(Q.smoke_config(soi="pp"), dtype="float32")
+    outer_len, mid_len = D.paged_group_lens(cfg, max_len)
+    pred_dense = state_bytes_per_slot(
+        cfg, dict(max_concurrent_decodes=slots, max_len=max_len))
+    pred_paged = state_bytes_per_slot(
+        cfg, dict(max_concurrent_decodes=slots, max_len=max_len,
+                  paged=True, page_size=page,
+                  n_pages=resident * (outer_len // page) + 1,
+                  n_pages_mid=resident * (mid_len // page) + 1))
+    return [
+        {"what": "dense decode-state bytes/slot",
+         "predicted": pred_dense, "measured": bench["dense_bytes_per_slot"],
+         "rel_err": _rel_err(pred_dense, bench["dense_bytes_per_slot"])},
+        {"what": "paged decode-state bytes/slot",
+         "predicted": pred_paged, "measured": bench["paged_bytes_per_slot"],
+         "rel_err": _rel_err(pred_paged, bench["paged_bytes_per_slot"])},
+    ]
+
+
+def check_selfspec_bench(bench: dict) -> list:
+    """O(1)-compile prediction vs BENCH_selfspec.json's measured compile
+    counters: every sweep point must have compiled its window exactly once."""
+    out = []
+    for sweep, rows in bench.items():
+        if isinstance(rows, dict) and "spec_compiles" in rows:
+            out.append({"what": f"compile count ({sweep})",
+                        "predicted": 1,
+                        "measured": rows["spec_compiles"],
+                        "rel_err": _rel_err(1, rows["spec_compiles"])})
+    return out
+
+
+def run_honesty_checks(root=None) -> list:
+    """All predicted-vs-measured comparisons for which a bench file exists.
+    Returns dicts with ``rel_err``; the tier-1 test gates |rel_err| <= 0.3
+    (compile counts: exact)."""
+    import pathlib
+    if root is None:
+        from repro.analysis.hostsync import repo_root
+        root = repo_root()
+    root = pathlib.Path(root)
+    checks = []
+    soi = root / "BENCH_soi_lm.json"
+    if soi.exists():
+        bench = json.loads(soi.read_text())
+        if "devloop_step_soi_aligned_s" in bench:
+            checks.append(check_soi_bench(bench))
+    paged = root / "BENCH_paged_kv.json"
+    if paged.exists():
+        checks += check_paged_bench(json.loads(paged.read_text()))
+    spec = root / "BENCH_selfspec.json"
+    if spec.exists():
+        checks += check_selfspec_bench(json.loads(spec.read_text()))
+    return checks
+
+
+def main(argv=None) -> int:
+    import argparse
+    ap = argparse.ArgumentParser(prog="python -m repro.launch.plan")
+    ap.add_argument("--cells", default=None,
+                    help="comma-separated matrix cells (default: all)")
+    ap.add_argument("--json", action="store_true",
+                    help="machine-readable output")
+    args = ap.parse_args(argv)
+    cells = args.cells.split(",") if args.cells else None
+    plans = plan_matrix(cells)
+    checks = run_honesty_checks()
+    if args.json:
+        print(json.dumps({"hardware": dataclasses.asdict(TPU_V5E),
+                          "plans": {n: p.to_dict() for n, p in plans.items()},
+                          "honesty": checks}, indent=2))
+        return 0
+    print(f"== repro.launch.plan @ {TPU_V5E.name} "
+          f"({TPU_V5E.peak_flops / 1e12:.0f} TFLOP/s, "
+          f"{TPU_V5E.hbm_bw / 1e9:.0f} GB/s, "
+          f"{TPU_V5E.hbm_bytes / 2**30:.0f} GiB) ==")
+    hdr = (f"{'cell':16s} {'tok/s':>12s} {'step p0':>10s} {'step off':>10s} "
+           f"{'B/slot':>10s} {'max slots':>10s} {'programs':>8s}")
+    print(hdr)
+    for n, p in plans.items():
+        print(f"{n:16s} {p.tok_s:12,.0f} {p.step_s_phase0 * 1e6:9.2f}u "
+              f"{p.step_s_offphase * 1e6:9.2f}u "
+              f"{p.state_bytes_per_slot:10,.0f} {p.max_slots:10,d} "
+              f"{p.compile_count:8d}")
+    if checks:
+        print("\n-- honesty: prediction vs measured BENCH trajectory --")
+        for c in checks:
+            pred = c.get("predicted", c.get("predicted_tok_s"))
+            meas = c.get("measured", c.get("measured_tok_s"))
+            print(f"  {c['what']:38s} pred {pred:14,.2f}  "
+                  f"meas {meas:14,.2f}  err {c['rel_err']:+.1%}")
+    return 0
+
+
+if __name__ == "__main__":
+    import sys
+    sys.exit(main())
