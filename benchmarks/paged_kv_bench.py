@@ -20,7 +20,7 @@ trajectory file the CI trend tooling picks up).
 from __future__ import annotations
 
 import dataclasses
-import time
+from repro.obs.clock import now
 
 import jax
 import numpy as np
@@ -84,11 +84,11 @@ def _time_steps(engine, params, ds, n=20):
     """Steady-state seconds/step on an already-compiled, warm engine."""
     ds, _ = engine.generate(params, ds)
     jax.block_until_ready(ds["model"]["t"])
-    t0 = time.time()
+    t0 = now()
     for _ in range(n):
         ds, _ = engine.generate(params, ds)
     jax.block_until_ready(ds["model"]["t"])
-    return (time.time() - t0) / n
+    return (now() - t0) / n
 
 
 def run(csv=False, out_json="BENCH_paged_kv.json"):

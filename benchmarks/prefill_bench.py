@@ -23,7 +23,7 @@ from __future__ import annotations
 
 import dataclasses
 import json
-import time
+from repro.obs.clock import now
 
 import jax
 
@@ -41,17 +41,17 @@ def _drive(engine, params, tokens):
     """Prefill the whole stream cold, then re-prefill it warm. Returns
     (compiles, cold_s, warm_s_per_req, first_tokens)."""
     firsts = []
-    t0 = time.time()
+    t0 = now()
     for i, ln in enumerate(LENGTHS):
         prefix = engine.prefill(params, tokens[i, :ln])
         firsts.append(int(prefix.first_token[0]))
     jax.block_until_ready(prefix.logits)
-    cold = time.time() - t0
-    t0 = time.time()
+    cold = now() - t0
+    t0 = now()
     for i, ln in enumerate(LENGTHS):
         prefix = engine.prefill(params, tokens[i, :ln])
     jax.block_until_ready(prefix.logits)
-    warm = (time.time() - t0) / len(LENGTHS)
+    warm = (now() - t0) / len(LENGTHS)
     return engine.prefill_compiles, cold, warm, firsts
 
 

@@ -25,7 +25,7 @@ from __future__ import annotations
 
 import dataclasses
 import json
-import time
+from repro.obs.clock import now
 
 import jax
 import jax.numpy as jnp
@@ -58,11 +58,11 @@ def _drive(eng, params, prompts, record):
     prefill+insert wall seconds."""
     ds = eng.init_decode_state(params)
     for i, toks in enumerate(prompts):
-        t0 = time.time()
+        t0 = now()
         prefix = eng.prefill(params, toks)
         ds = eng.insert(prefix, ds, i)
         jax.block_until_ready(ds["model"]["t"])
-        record[i] = time.time() - t0
+        record[i] = now() - t0
     return ds
 
 

@@ -5,7 +5,7 @@ MACs than pruning alone (the two techniques cut different axes: SOI removes
 
 from __future__ import annotations
 
-import time
+from repro.obs.clock import now
 
 import jax
 import jax.numpy as jnp
@@ -72,14 +72,14 @@ def run(csv=False, steps=200):
     fracs = (0.0, 0.3, 0.6)
     rows = []
     for label, cfg in variants:
-        t0 = time.time()
+        t0 = now()
         params, ns = _train(cfg, steps)
         rep = unet.complexity_report(cfg)
         for f in fracs:
             pp = _prune_global(params, f) if f else params
             s = _eval(pp, ns, cfg)
             macs = rep.mmacs_per_s * (1 - f)   # dense-equivalent effective
-            rows.append((label, f, s, macs, time.time() - t0))
+            rows.append((label, f, s, macs, now() - t0))
     if csv:
         for label, f, s, m, dt in rows:
             print(f"pruning_soi/{label.replace(' ', '_')}_p{int(f*100)},"

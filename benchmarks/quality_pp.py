@@ -6,7 +6,7 @@ App. B (strided beats plain convs for longer predictions) and App. D/E
 
 from __future__ import annotations
 
-import time
+from repro.obs.clock import now
 
 import jax
 import jax.numpy as jnp
@@ -54,10 +54,10 @@ def run(csv=False, steps=200):
     rows = []
     for label, soi in variants:
         cfg = unet.UNetConfig(soi=soi, **KW)
-        t0 = time.time()
+        t0 = now()
         s = train_eval(cfg, steps)
         rep = unet.complexity_report(cfg)
-        rows.append((label, s, 100 * rep.retain, time.time() - t0))
+        rows.append((label, s, 100 * rep.retain, now() - t0))
     if csv:
         for label, s, r, dt in rows:
             print(f"quality_pp/{label.replace(' ', '_')},"

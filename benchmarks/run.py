@@ -9,7 +9,6 @@ from __future__ import annotations
 
 import argparse
 import sys
-import time
 
 
 def main() -> None:
@@ -20,11 +19,13 @@ def main() -> None:
     args = ap.parse_args()
 
     sys.path.insert(0, "src")
-    t0 = time.time()
+    from repro.obs.clock import now
+    t0 = now()
 
     from benchmarks import (appendix_b_prediction, paged_kv_bench,
                             prefill_bench, prefix_cache_bench, pruning_soi,
-                            quality_pp, selfspec_bench, soi_lm_bench,
+                            quality_pp, selfspec_bench,
+                            serving_trace_bench, soi_lm_bench,
                             table1_pp_soi, table2_fp_soi, table3_resampling,
                             table4_asc)
 
@@ -44,6 +45,7 @@ def main() -> None:
         prefill_bench.run(csv=args.csv)
         prefix_cache_bench.run(csv=args.csv)
         selfspec_bench.run(csv=args.csv)
+        serving_trace_bench.run(csv=args.csv)
 
     # roofline summary (from stored dry-run artifacts, if present)
     try:
@@ -76,7 +78,7 @@ def main() -> None:
         raise SystemExit(1)
 
     if not args.csv:
-        print(f"\ntotal benchmark time: {time.time() - t0:.1f}s")
+        print(f"\ntotal benchmark time: {now() - t0:.1f}s")
 
 
 if __name__ == "__main__":

@@ -27,7 +27,7 @@ from __future__ import annotations
 
 import dataclasses
 import json
-import time
+from repro.obs.clock import now
 
 import numpy as np
 
@@ -76,9 +76,9 @@ def _serve(cfg, params, prompts, gen, *, speculate):
 
 def _time_serve(cfg, params, prompts, *, speculate):
     _serve(cfg, params, prompts, WARM, speculate=speculate)   # compile+warm
-    t0 = time.time()
+    t0 = now()
     eng, toks, calls = _serve(cfg, params, prompts, GEN, speculate=speculate)
-    dt = time.time() - t0
+    dt = now() - t0
     return eng, toks / dt, calls
 
 

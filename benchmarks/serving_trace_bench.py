@@ -1,0 +1,140 @@
+"""Multi-tenant serving-trace benchmark: the repo's first end-to-end load
+test of the serving stack (admission -> prefix cache -> SOI decode ->
+deferred drain) under traffic-shaped load.
+
+``repro.obs.loadgen`` synthesizes the trace: Zipf-distributed tenants with
+shared prompt prefixes (the system-prompt shape the copy-on-write prefix
+cache exists for), bursty Poisson arrivals, and mixed generation lengths.
+``run_load`` replays it through serve-style admission on a telemetry-on
+engine; the per-step phase-occupancy/middle-skip vector rides the existing
+one-step-deferred drain, so the observed numbers describe the same hot
+path serving runs (no extra host syncs — the ``gqa-paged-tele`` analysis
+cell certifies that).
+
+Reported into ``BENCH_serving_trace.json``:
+
+* prefix-cache hit rate over the whole trace;
+* TTFT and TPOT p50/p99 (arrival-relative, on the virtual clock — queue
+  wait under bursts is inside TTFT, as a user would see it);
+* decode throughput (tok/s, prefill-produced first tokens excluded);
+* ``off_phase_by_occ``: fraction of decode steps that skipped the
+  compressed middle, split by slot occupancy — the paper's partial-state
+  saving surviving (or washing out) as the batch fills with mixed phases.
+
+``--smoke`` shrinks the trace (CI-friendly) but writes the same schema;
+``--trace-out``/``--metrics-out`` additionally export the Perfetto trace
+and the flat metrics JSON (see docs/OBSERVABILITY.md).
+"""
+
+from __future__ import annotations
+
+import argparse
+import dataclasses
+
+import jax
+
+import repro.configs.qwen3_1_7b as Q
+from repro.distributed.sharding import split_axes
+from repro.engine import SOIEngine
+from repro.launch.bench import write_bench
+from repro.models import transformer as T
+from repro.obs import (EngineTelemetry, MetricsRegistry, Tracer, make_trace,
+                       run_load, write_metrics, write_trace)
+
+SLOTS = 4
+PAGE = 16
+CHUNK = 16
+MAX_LEN = 96           # prefix 32 + suffix <=16 + gen <=16, page-aligned
+PREFIX = 32            # lcm(chunk, page, stride*page) for cache alignment
+N_REQ = 24
+N_REQ_SMOKE = 8
+N_TENANTS = 4
+
+
+def run(csv=False, out_json="BENCH_serving_trace.json", smoke=False,
+        trace_out=None, metrics_out=None):
+    cfg = dataclasses.replace(Q.smoke_config(soi="pp"), dtype="float32")
+    params, _ = split_axes(T.init(jax.random.PRNGKey(0), cfg))
+    n_req = N_REQ_SMOKE if smoke else N_REQ
+    # pools sized generously: admission pressure is loadgen's own knob
+    # (deferred_admissions reports it); the bench measures steady serving
+    eng = SOIEngine(cfg, max_concurrent_decodes=SLOTS, max_len=MAX_LEN,
+                    paged=True, page_size=PAGE, prefill_chunk=CHUNK,
+                    prefix_cache=True, n_pages=64, n_pages_mid=32,
+                    telemetry=True)
+    reqs = make_trace(n_req, cfg.vocab, n_tenants=N_TENANTS,
+                      prefix_len=PREFIX, suffix_lens=(8, 16),
+                      gen_lens=(8, 16), seed=0)
+    registry = MetricsRegistry()
+    telemetry = EngineTelemetry(cfg.soi.stride, registry=registry)
+    res = run_load(eng, params, reqs, tracer=Tracer(t0=0.0),
+                   telemetry=telemetry, registry=registry)
+
+    s = res.summary
+    rows = {
+        "arch": cfg.name, "soi": "pp", "stride": cfg.soi.stride,
+        "requests": n_req, "tenants": N_TENANTS, "slots": SLOTS,
+        "page_size": PAGE, "chunk": CHUNK, "shared_prefix_tokens": PREFIX,
+        "completed": s["completed"],
+        "hit_rate": s["hit_rate"],
+        "tokens_skipped": s["tokens_skipped"],
+        "deferred_admissions": s["deferred_admissions"],
+        "ttft_p50_s": s["ttft_p50_s"], "ttft_p99_s": s["ttft_p99_s"],
+        "tpot_p50_s": s["tpot_p50_s"], "tpot_p99_s": s["tpot_p99_s"],
+        "queue_wait_p50_s": s["queue_wait_p50_s"],
+        "queue_wait_p99_s": s["queue_wait_p99_s"],
+        "tok_s": s["tok_s"], "steps": s["steps"],
+        # occupancy -> fraction of decode steps whose compressed middle was
+        # skipped entirely (every occupied slot off-phase); sweep group so
+        # the trajectory keeps one row per occupancy level
+        "off_phase_by_occ": {
+            f"occ{occ}": rate for occ, rate in
+            sorted(res.telemetry.off_phase_rate_by_occupancy().items())},
+    }
+    write_bench(rows, out_json)
+    if trace_out:
+        write_trace(res.tracer, trace_out)
+    if metrics_out:
+        write_metrics(metrics_out, registry=registry, tracer=res.tracer)
+
+    if csv:
+        for k in ("hit_rate", "ttft_p50_s", "ttft_p99_s", "tpot_p50_s",
+                  "tpot_p99_s", "tok_s"):
+            print(f"serving_trace,{k},{rows[k]}")
+    else:
+        print(f"\n== Serving trace ({n_req} reqs, {N_TENANTS} tenants, "
+              f"{SLOTS} slots, prefix {PREFIX} tok) ==")
+        print(f"  completed {s['completed']}/{n_req}, "
+              f"hit rate {100 * s['hit_rate']:.0f}%, "
+              f"{s['tokens_skipped']} prompt tokens skipped, "
+              f"{s['deferred_admissions']} deferred admissions")
+        print(f"  TTFT p50/p99 {s['ttft_p50_s'] * 1e3:.0f}/"
+              f"{s['ttft_p99_s'] * 1e3:.0f} ms   "
+              f"TPOT p50/p99 {s['tpot_p50_s'] * 1e3:.0f}/"
+              f"{s['tpot_p99_s'] * 1e3:.0f} ms   "
+              f"{s['tok_s']:.1f} tok/s decode")
+        occ = rows["off_phase_by_occ"]
+        line = "  middle skipped: " + ", ".join(
+            f"{k}: {100 * v:.0f}% of steps" for k, v in occ.items())
+        print(line)
+        print(f"  -> {out_json}")
+    return rows
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="small trace (CI): same schema, fewer requests")
+    ap.add_argument("--csv", action="store_true")
+    ap.add_argument("--out", default="BENCH_serving_trace.json")
+    ap.add_argument("--trace-out", default=None, metavar="PATH",
+                    help="also write the Perfetto-openable Chrome trace")
+    ap.add_argument("--metrics-out", default=None, metavar="PATH",
+                    help="also write the flat metrics JSON")
+    args = ap.parse_args(argv)
+    run(csv=args.csv, out_json=args.out, smoke=args.smoke,
+        trace_out=args.trace_out, metrics_out=args.metrics_out)
+
+
+if __name__ == "__main__":
+    main()

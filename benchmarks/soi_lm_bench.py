@@ -16,7 +16,7 @@ phase-specialized steppers (the ``make_soi_steppers`` shim is gone).
 
 from __future__ import annotations
 
-import time
+from repro.obs.clock import now
 
 import jax
 import jax.numpy as jnp
@@ -77,17 +77,17 @@ def run(csv=False, out_json="BENCH_soi_lm.json"):
     jstd = jax.jit(std_step)
     st = state_std
     lg, st = jstd(params_std, st, tok)        # compile
-    t0 = time.time()
+    t0 = now()
     for _ in range(20):
         lg, st = jstd(params_std, st, tok)
-    t_std = (time.time() - t0) / 20
+    t_std = (now() - t0) / 20
     jsoi = jax.jit(soi_step)
     st = state_soi
     lg, st = jsoi(params_soi, st, tok)        # compile
-    t0 = time.time()
+    t0 = now()
     for _ in range(20):
         lg, st = jsoi(params_soi, st, tok)
-    t_soi = (time.time() - t0) / 20
+    t_soi = (now() - t0) / 20
 
     # lax.cond middle-skip, measured per branch: hold the clock vector fixed
     # (the returned state is discarded) so EVERY timed step takes the same
@@ -99,11 +99,11 @@ def run(csv=False, out_json="BENCH_soi_lm.json"):
     def _time_fixed_phase(jfn, params_, state, n=50):
         lg, _ = jfn(params_, state, tok)
         jax.block_until_ready(lg)
-        t0 = time.time()
+        t0 = now()
         for _ in range(n):
             lg, _ = jfn(params_, state, tok)
             jax.block_until_ready(lg)
-        return (time.time() - t0) / n
+        return (now() - t0) / n
 
     st_p0 = dict(state_soi, t=jnp.zeros((b,), jnp.int32))
     st_off = dict(state_soi, t=jnp.ones((b,), jnp.int32))
@@ -123,7 +123,7 @@ def run(csv=False, out_json="BENCH_soi_lm.json"):
     def _time_overlapped(jfn, params_, state, n=50):
         lg, _ = jfn(params_, state, tok)
         jax.block_until_ready(lg)
-        t0 = time.time()
+        t0 = now()
         pending = None
         for _ in range(n):
             lg, _ = jfn(params_, state, tok)
@@ -131,7 +131,7 @@ def run(csv=False, out_json="BENCH_soi_lm.json"):
                 host_get(pending)           # drain k-1 under k's compute
             pending = lg
         host_get(pending)
-        return (time.time() - t0) / n
+        return (now() - t0) / n
 
     t_phase0_ov = _time_overlapped(jsoi, params_soi, st_p0)
     t_offphase_ov = _time_overlapped(jsoi, params_soi, st_off)
@@ -162,10 +162,10 @@ def run(csv=False, out_json="BENCH_soi_lm.json"):
         jfn = jax.jit(nsteps)
         out = jfn(params_, state)
         jax.block_until_ready(out)          # compile + warm
-        t0 = time.time()
+        t0 = now()
         out = jfn(params_, state)
         jax.block_until_ready(out)
-        return (time.time() - t0) / n
+        return (now() - t0) / n
 
     t_phase0_dev = _time_device_loop(cfg_soi, params_soi, st_p0,
                                      jnp.zeros((b,), jnp.int32))

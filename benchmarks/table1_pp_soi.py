@@ -7,7 +7,7 @@ separation task; the full DNS runs need 14 GPU-hours/model x 5 seeds).
 from __future__ import annotations
 
 import json
-import time
+from repro.obs.clock import now
 
 from repro.configs import soi_unet_dns
 from repro.core.soi import SOIConvCfg
@@ -34,7 +34,7 @@ PAPER_ROWS = [
 
 
 def run(csv=False, out_json="BENCH_table1_pp_soi.json"):
-    t0 = time.time()
+    t0 = now()
     rows = []
     for label, pairs, want_retain, want_mmacs in PAPER_ROWS:
         soi = SOIConvCfg(pairs=pairs) if pairs else None
@@ -42,7 +42,7 @@ def run(csv=False, out_json="BENCH_table1_pp_soi.json"):
         rep = unet.complexity_report(cfg)
         rows.append((label, 100 * rep.retain, want_retain, rep.mmacs_per_s,
                      want_mmacs))
-    us = (time.time() - t0) / len(rows) * 1e6
+    us = (now() - t0) / len(rows) * 1e6
     # machine-readable trajectory point (the BENCH_*.json format the CI
     # trend tooling picks up): per-row retain vs paper + worst deviation
     traj = {"max_abs_retain_err_pp": max(abs(r - wr)

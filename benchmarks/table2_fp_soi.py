@@ -5,7 +5,7 @@ data, i.e. between inferences)."""
 from __future__ import annotations
 
 import json
-import time
+from repro.obs.clock import now
 
 from repro.configs import soi_unet_dns
 from repro.core.soi import SOIConvCfg
@@ -27,14 +27,14 @@ PAPER_ROWS = [
 
 
 def run(csv=False, out_json="BENCH_table2_fp_soi.json"):
-    t0 = time.time()
+    t0 = now()
     rows = []
     for label, soi, want_retain, want_pre in PAPER_ROWS:
         rep = unet.complexity_report(soi_unet_dns.config(soi))
         rows.append((label, 100 * rep.retain, want_retain,
                      100 * rep.precomputed_fraction, want_pre,
                      rep.on_arrival_macs_per_frame * 62.5 / 1e6))
-    us = (time.time() - t0) / len(rows) * 1e6
+    us = (now() - t0) / len(rows) * 1e6
     traj = {"max_abs_precomp_err_pp": max(abs(p - wp)
                                           for _, _, _, p, wp, _ in rows)}
     for label, r, wr, p, wp, oa in rows:

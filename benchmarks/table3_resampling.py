@@ -10,7 +10,7 @@ coarsens *internal* states.
 
 from __future__ import annotations
 
-import time
+from repro.obs.clock import now
 
 import jax
 import jax.numpy as jnp
@@ -73,11 +73,11 @@ def run(csv=False, steps=220):
     ]
     rows = []
     for label, cfg, resample in variants:
-        t0 = time.time()
+        t0 = now()
         snr_i = _train(cfg, steps=steps, resample=resample)
         rep = unet.complexity_report(cfg)
         macs = rep.mmacs_per_s * (0.5 if resample else 1.0)
-        rows.append((label, snr_i, macs, time.time() - t0))
+        rows.append((label, snr_i, macs, now() - t0))
     if csv:
         for label, s, m, dt in rows:
             print(f"table3_resampling/{label.replace(' ', '_')},"

@@ -6,7 +6,7 @@ insensitive to SOI (slow-moving outputs)."""
 from __future__ import annotations
 
 import json
-import time
+from repro.obs.clock import now
 
 import jax
 import jax.numpy as jnp
@@ -53,7 +53,7 @@ def _train_asc(cfg, steps=150, b=16, t=48, lr=3e-3, seed=0):
 
 def run(csv=False, train_quality=True, out_json="BENCH_table4_asc.json"):
     rows = []
-    t0 = time.time()
+    t0 = now()
     for size in ("I", "II", "III", "IV", "V", "VI", "VII"):
         base_cfg = soi_ghostnet_asc.config(size, soi=SOIConvCfg(pairs=()))
         soi_cfg = soi_ghostnet_asc.config(size)
@@ -62,7 +62,7 @@ def run(csv=False, train_quality=True, out_json="BENCH_table4_asc.json"):
         red = 100 * (1 - soi.macs_per_frame / base.macs_per_frame)
         rows.append((size, base.mmacs_per_s, soi.mmacs_per_s, red,
                      ghostnet.n_params(base_cfg), ghostnet.n_params(soi_cfg)))
-    us = (time.time() - t0) / len(rows) * 1e6
+    us = (now() - t0) / len(rows) * 1e6
     acc = {}
     if train_quality:
         c_b = soi_ghostnet_asc.smoke_config(SOIConvCfg(pairs=()))

@@ -33,6 +33,7 @@ DEFAULT_GLOBS = (
     "src/repro/engine/session.py",
     "src/repro/engine/soi_engine.py",
     "src/repro/engine/speculative.py",
+    "src/repro/obs/*.py",
     "benchmarks/*.py",
 )
 
@@ -91,9 +92,9 @@ class _FileScan(ast.NodeVisitor):
             if attr in _SAFE_PRODUCERS or _call_name(node) in _SAFE_PRODUCERS:
                 return True
             if _call_name(node) in {"len", "range", "min", "max", "enumerate",
-                                    "sum", "time"}:
+                                    "sum", "time", "now", "clock"}:
                 return True
-            if attr == "time":      # time.time()
+            if attr in {"time", "perf_counter", "monotonic", "now"}:
                 return True
         root = _root_name(node)
         return root is not None and root in self.safe

@@ -49,6 +49,11 @@ MATRIX = {
     "gqa-paged-pc": (_gqa_cfg, dict(max_concurrent_decodes=2, max_len=96,
                                     paged=True, page_size=16,
                                     prefill_chunk=16, prefix_cache=True)),
+    # telemetry-on serving: the per-step metrics vector must ride the
+    # existing deferred drain without new host syncs or dropped donations
+    # (repro.obs contract — docs/OBSERVABILITY.md)
+    "gqa-paged-tele": (_gqa_cfg, dict(_COMMON, paged=True, page_size=8,
+                                      telemetry=True)),
 }
 
 

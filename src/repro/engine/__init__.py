@@ -239,6 +239,22 @@ repro.analysis --ci``; full statement in ``docs/CONTRACTS.md``):
 ``SOIEngine.analysis_entries(params)`` enumerates the jitted entries with
 traffic-shaped example arguments for the analyzer.
 
+Observability (``repro.obs``)
+-----------------------------
+
+``SOIEngine(..., telemetry=True)`` makes every generate step / speculative
+window also compute a small per-step metrics vector *inside* the compiled
+program (``step.step_metrics``: phase-occupancy histogram over ``t %
+stride``, whether the middle's ``lax.cond`` fired, active-slot count) and
+attach it to ``ResultTokens.metrics`` — it drains with the tokens through
+the same one-step-deferred copy, so telemetry adds **zero host syncs**
+(contract 2; the ``gqa-paged-tele`` analysis cell certifies it).
+``repro.obs.EngineTelemetry`` consumes drained results and re-registers
+the engine's host-side stats (compile counters, ``prefix_cache_stats``,
+``spec_accept_stats``, ``pool_stats``, ``contracts.drain_count``) as
+gauges; ``repro.obs.Tracer`` records per-request lifecycle spans.
+Schema and Perfetto how-to: ``docs/OBSERVABILITY.md``.
+
 Follow-ons recorded in ROADMAP.md: multi-host prefill/generate
 disaggregation, phase-aligned slot scheduling, cross-engine prefix-cache
 persistence.

@@ -43,6 +43,11 @@ class ResultTokens:
     [token, valid, length] (the defaults below); speculative engines emit
     up to K tokens per slot — [tok_0..tok_{K-1}, valid, length, accepted] —
     and say so by widening ``tokens_idx`` and setting ``accepted_idx``.
+
+    ``metrics`` (telemetry-enabled engines; else None) is the step's small
+    device-side telemetry vector (``repro.engine.step.step_metrics``
+    layout): it drains in the SAME batched copy as the tokens, so
+    telemetry never adds a device->host transfer to the decode loop.
     """
     data: Any
     logits: Optional[Any] = None
@@ -50,6 +55,7 @@ class ResultTokens:
     valid_idx: tuple = (1, 2)
     length_idx: tuple = (2, 3)
     accepted_idx: Optional[tuple] = None
+    metrics: Optional[Any] = None
 
     def convert_to_numpy(self) -> "ResultTokens":
         """Drain this step's results to host numpy in ONE explicit batched
@@ -57,8 +63,10 @@ class ResultTokens:
         per-step device->host copy of the serving loop. Call it on the
         *previous* step's results after dispatching the next step, so the
         copy overlaps device compute instead of stalling dispatch."""
-        data, logits = host_get((self.data, self.logits))
-        return dataclasses.replace(self, data=data, logits=logits)
+        data, logits, metrics = host_get((self.data, self.logits,
+                                          self.metrics))
+        return dataclasses.replace(self, data=data, logits=logits,
+                                   metrics=metrics)
 
     def get_result_at_slot(self, slot: int) -> SlotData:
         return SlotData(

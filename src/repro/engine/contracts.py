@@ -37,14 +37,19 @@ class DroppedDonationError(RuntimeError):
 # sanctioned device->host drain; the runtime host-sync analyzer treats any
 # conversion that happens OUTSIDE a sanctioned window as a finding.
 _SANCTIONED_DEPTH = 0
+# Total sanctioned-drain entries since process start: the serving-visible
+# transfer budget (a loop draining N steps should show ~N calls — more
+# means something else is also syncing through host_get).
+_DRAIN_CALLS = 0
 
 
 class sanctioned_drain:
     """Context marking an intentional, batched device->host transfer."""
 
     def __enter__(self):
-        global _SANCTIONED_DEPTH
+        global _SANCTIONED_DEPTH, _DRAIN_CALLS
         _SANCTIONED_DEPTH += 1
+        _DRAIN_CALLS += 1
         return self
 
     def __exit__(self, *exc):
@@ -55,6 +60,13 @@ class sanctioned_drain:
 
 def in_sanctioned_drain() -> bool:
     return _SANCTIONED_DEPTH > 0
+
+
+def drain_count() -> int:
+    """Sanctioned-drain entries since process start (monotonic; compare
+    deltas across a serving session — ``repro.obs`` registers it as the
+    ``engine.sanctioned_drains`` gauge)."""
+    return _DRAIN_CALLS
 
 
 def host_get(tree):

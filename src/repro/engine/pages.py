@@ -69,10 +69,19 @@ class PageTable:
         self.map = np.zeros((n_slots, self.pages_per_slot), np.int32)
         self.refs = np.zeros(n_pages, np.int32)
         self._free = list(range(n_pages - 1, 0, -1))   # pop() -> lowest id
+        # peak simultaneously-allocated page count (capacity planning /
+        # repro.obs pool gauges); never resets — it describes the pool's
+        # whole lifetime
+        self.high_water = 0
 
     @property
     def free_pages(self) -> int:
         return len(self._free)
+
+    @property
+    def used_pages(self) -> int:
+        """Currently allocated pages (excludes the null page)."""
+        return self.n_pages - 1 - len(self._free)
 
     def _alloc_one(self, slot: int, idx: int) -> int:
         if not self._free:
@@ -83,6 +92,8 @@ class PageTable:
         pid = self._free.pop()
         self.map[slot, idx] = pid
         self.refs[pid] = 1
+        if self.used_pages > self.high_water:
+            self.high_water = self.used_pages
         return pid
 
     def _decref(self, pid: int) -> bool:

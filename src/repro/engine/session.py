@@ -34,16 +34,33 @@ class StreamSession:
 
     The session owns the carried state (clocks + partial-state pytree);
     callers just push inputs in arrival order.
+
+    ``registry`` (optional ``repro.obs.MetricsRegistry``) records per-push
+    observability: the ``session.pushes`` counter and the
+    ``session.push_dispatch_s`` latency histogram. The histogram measures
+    *dispatch* latency — jax returns before the step finishes on device —
+    so a healthy session shows microseconds here; milliseconds mean the
+    host is blocking inside the step loop (a retrace, or a hidden sync the
+    ``repro.analysis`` hostsync pass should have caught).
     """
 
-    def __init__(self, step, state):
+    def __init__(self, step, state, registry=None):
         self._step = step
         self.state = state
+        self._registry = registry
 
     def push(self, inp):
         """Feed one input (token ids (B,) / frame (B, C)); returns the
         step's output (logits / separated frame)."""
+        if self._registry is None:
+            self.state, out = self._step(self.state, inp)
+            return out
+        from repro.obs.clock import now
+        t0 = now()
         self.state, out = self._step(self.state, inp)
+        self._registry.counter("session.pushes").inc()
+        self._registry.histogram("session.push_dispatch_s").observe(
+            now() - t0)
         return out
 
     def run(self, xs):
@@ -54,7 +71,7 @@ class StreamSession:
 
 def lm_stream_session(params, cfg: ModelCfg, *, batch: int = 1,
                       max_len: int = 256, prompt=None,
-                      constrain=_noc) -> StreamSession:
+                      constrain=_noc, registry=None) -> StreamSession:
     """Token-streaming session over the unified LM step (SOI or plain).
 
     With ``prompt`` (B, S), the prompt is prefilled through the compressed
@@ -76,7 +93,7 @@ def lm_stream_session(params, cfg: ModelCfg, *, batch: int = 1,
         logits, ns = jstep(params, s_, jnp.asarray(tok, jnp.int32))
         return ns, logits
 
-    return StreamSession(step, state)
+    return StreamSession(step, state, registry=registry)
 
 
 @functools.lru_cache(maxsize=None)
@@ -99,7 +116,7 @@ def _unet_step_program(cfg):
 
 
 def unet_stream_session(params, nstate, cfg, *, batch: int = 1,
-                        dtype=jnp.float32) -> StreamSession:
+                        dtype=jnp.float32, registry=None) -> StreamSession:
     """Frame-streaming session for the causal U-Net (repro.models.unet).
 
     One jitted program for all SOI phases: ``lax.switch`` on the carried
@@ -114,4 +131,4 @@ def unet_stream_session(params, nstate, cfg, *, batch: int = 1,
         inner, y = jstep(params, nstate, s_["inner"], s_["t"], frame)
         return {"t": s_["t"] + 1, "inner": inner}, y
 
-    return StreamSession(step, state)
+    return StreamSession(step, state, registry=registry)

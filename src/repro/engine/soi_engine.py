@@ -51,7 +51,7 @@ from repro.engine.api import Engine, Prefix, ResultTokens
 from repro.engine.contracts import JitEntry, checked_jit, host_get
 from repro.engine.pages import PageTable, PrefixEntry, PrefixIndex, chain_keys
 from repro.engine.speculative import speculative_window
-from repro.engine.step import generate_step
+from repro.engine.step import generate_step, step_metrics
 from repro.kernels import ops as kops
 from repro.models import attention as attn
 from repro.models import decode as D
@@ -294,12 +294,21 @@ class SOIEngine(Engine):
                  page_size: int = 16, n_pages: int | None = None,
                  n_pages_mid: int | None = None,
                  prefill_buckets="pow2", prefill_chunk: int | None = None,
-                 prefix_cache: bool = False, speculate: int | None = None):
+                 prefix_cache: bool = False, speculate: int | None = None,
+                 telemetry: bool = False):
         self.cfg = cfg
         self.max_len = max_len
         self._slots = max_concurrent_decodes
         self._constrain = constrain
         self._paged = bool(paged)
+        # telemetry=True: every generate step (or speculative window) also
+        # computes the small per-step metrics vector (step_metrics layout)
+        # INSIDE the compiled program and attaches it to
+        # ResultTokens.metrics — it drains with the tokens, one step
+        # deferred, so telemetry-on serving adds no host sync (consumer:
+        # repro.obs.registry.EngineTelemetry; doc: docs/OBSERVABILITY.md)
+        self._telemetry = bool(telemetry)
+        self._metrics_stride = cfg.soi.stride if cfg.soi is not None else 1
         self._spec = None
         self._pt_outer = self._pt_mid = None
         self._occupied = np.zeros(self._slots, bool)
@@ -404,7 +413,18 @@ class SOIEngine(Engine):
                     f"max_len {max_len}: no prompt could ever hit")
             self._pc_align = align
 
+        def _metrics(ds):
+            # pre-step clocks: the phase histogram describes the step being
+            # taken, not the state it leaves behind; None (a no-op in every
+            # pytree) when telemetry is off, so the telemetry-off program
+            # is byte-identical to the pre-telemetry engine
+            if not self._telemetry:
+                return None
+            return step_metrics(ds["model"]["t"], ds["active"],
+                                self._metrics_stride)
+
         def _gen(params, ds):
+            met = _metrics(ds)
             logits, ms = generate_step(params, cfg, ds["model"], ds["tokens"],
                                        active=ds["active"],
                                        constrain=constrain)
@@ -412,10 +432,11 @@ class SOIEngine(Engine):
             data = jnp.stack([nxt, ds["active"].astype(jnp.int32),
                               ms["t"]], axis=1)
             return ({"model": ms, "tokens": nxt, "active": ds["active"]},
-                    data, logits)
+                    data, logits, met)
 
         def _specgen(params, ds, spec_mask):
             self.spec_compiles += 1     # body runs once per trace
+            met = _metrics(ds)          # one sample per window (entry phase)
             ms, committed, n_acc, nxt, logits = speculative_window(
                 params, cfg, ds["model"], ds["tokens"],
                 k=self._speculate, active=ds["active"], spec=spec_mask,
@@ -425,7 +446,7 @@ class SOIEngine(Engine):
                  jnp.stack([ds["active"].astype(jnp.int32), ms["t"], n_acc],
                            axis=1)], axis=1)
             return ({"model": ms, "tokens": nxt, "active": ds["active"]},
-                    data, logits)
+                    data, logits, met)
 
         def _ins(ds, pstate, first_token, slot, page_rows):
             model = insert_state(cfg, ds["model"], pstate, slot,
@@ -1101,9 +1122,9 @@ class SOIEngine(Engine):
             model["pages"] = self._page_maps()
             decode_state["model"] = model
             self._clock[self._occupied] += 1
-        new_ds, data, logits = self._gen(params, decode_state)
+        new_ds, data, logits, met = self._gen(params, decode_state)
         self._live = new_ds
-        return new_ds, ResultTokens(data=data, logits=logits)
+        return new_ds, ResultTokens(data=data, logits=logits, metrics=met)
 
     # -- speculative windows ---------------------------------------------
 
@@ -1189,7 +1210,8 @@ class SOIEngine(Engine):
             model["pages"] = self._page_maps()
             decode_state["model"] = model
         spec_mask = jnp.asarray(self._spec_slots)
-        new_ds, data, logits = self._specgen(params, decode_state, spec_mask)
+        new_ds, data, logits, met = self._specgen(params, decode_state,
+                                                  spec_mask)
         # the accepted counts gate host bookkeeping (clock advance, page
         # rollback), so every window syncs the result row to the host —
         # the same single device->host copy callers make to read tokens;
@@ -1208,7 +1230,7 @@ class SOIEngine(Engine):
         s["draft_candidates"] += int(spec_occ.sum()) * (k - 1)
         s["draft_accepted"] += int((n[spec_occ] - 1).sum())
         self._live = new_ds
-        return new_ds, ResultTokens(data=data, logits=logits,
+        return new_ds, ResultTokens(data=data, logits=logits, metrics=met,
                                     tokens_idx=(0, k),
                                     valid_idx=(k, k + 1),
                                     length_idx=(k + 1, k + 2),
@@ -1218,14 +1240,31 @@ class SOIEngine(Engine):
         """Accept-rate counters since engine construction: ``accept_rate``
         is the fraction of draft tokens the verifier kept;
         ``tokens_per_window`` the mean committed tokens per slot-window
-        (upper bound K; 1.0 means speculation never paid off)."""
+        (upper bound K; 1.0 means speculation never paid off). Both report
+        0.0 — never None/NaN — on an idle engine, so dashboards and BENCH
+        files can always treat them as finite floats."""
         s = dict(self.spec_stats)
         s["speculate"] = self._speculate
         s["accept_rate"] = (s["draft_accepted"] / s["draft_candidates"]
-                            if s["draft_candidates"] else None)
+                            if s["draft_candidates"] else 0.0)
         s["tokens_per_window"] = (s["committed"] / s["slot_windows"]
-                                  if s["slot_windows"] else None)
+                                  if s["slot_windows"] else 0.0)
         return s
+
+    def pool_stats(self) -> dict:
+        """Page-pool residency per cache group (paged engines; {} dense):
+        total real pages, currently free, currently used, and the
+        lifetime high-water mark — the ``repro.obs`` pool gauges and the
+        measured side of capacity planning."""
+        out = {}
+        for name, pt in (("outer", self._pt_outer), ("mid", self._pt_mid)):
+            if pt is None:
+                continue
+            out[name] = {"n_pages": pt.n_pages - 1,
+                         "free": pt.free_pages,
+                         "used": pt.used_pages,
+                         "high_water": pt.high_water}
+        return out
 
     def free_slot(self, decode_state, slot: int):
         s_i = int(slot)

@@ -80,6 +80,38 @@ def _run_segments(parts_p, parts_s, caches, cfg, x, t, constrain,
     return x, new
 
 
+def step_metrics(t, active, stride: int):
+    """Per-step device telemetry vector, computed INSIDE the jitted step.
+
+    Layout (int32, length ``stride + 2``)::
+
+        [occ_phase_0, ..., occ_phase_{stride-1}, mid_fired, n_active]
+
+    ``occ_phase_p`` counts active slots whose pre-step clock sits at
+    ``t % stride == p`` (the phase-occupancy histogram — phase-aligned
+    scheduling wants this mass concentrated); ``mid_fired`` is 1 iff the
+    compressed middle's ``lax.cond`` predicate would fire this step (some
+    active slot at phase 0); ``n_active`` is the live-slot count. Pass
+    ``stride=1`` for non-SOI configs (one bucket, middle "fires" whenever
+    any slot is active).
+
+    The vector stays on device: the engine attaches it to
+    ``ResultTokens.metrics`` and it reaches the host through the serving
+    loop's one-step-deferred drain (``convert_to_numpy``), never through
+    a per-step sync. ``repro.obs.registry.EngineTelemetry`` is the
+    host-side consumer.
+    """
+    t = jnp.asarray(t, jnp.int32)
+    b = t.shape[0]
+    act = (jnp.ones((b,), bool) if active is None
+           else jnp.asarray(active, bool))
+    one = jnp.where(act, 1, 0).astype(jnp.int32)
+    phase = t % stride
+    hist = jnp.zeros((stride,), jnp.int32).at[phase].add(one)
+    mid = jnp.any((phase == 0) & act).astype(jnp.int32)
+    return jnp.concatenate([hist, mid[None], jnp.sum(one)[None]])
+
+
 def generate_step(params, cfg: ModelCfg, state: dict, tokens, *,
                   active=None, constrain=_noc, draft: bool = False):
     """Advance every slot one token. tokens: (B,) int32; state["t"]: (B,).

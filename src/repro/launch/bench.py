@@ -27,6 +27,17 @@ import math
 import pathlib
 
 
+# Per-file required keys: trajectory files the trend tooling reads specific
+# fields from declare them here; validate_bench checks membership by file
+# name, so a refactor that renames (or forgets) a percentile field fails the
+# bench run / tier-1 instead of silently breaking the trend reader.
+REQUIRED_KEYS = {
+    "BENCH_serving_trace.json": (
+        "hit_rate", "ttft_p50_s", "ttft_p99_s", "tpot_p50_s", "tpot_p99_s",
+        "tok_s", "off_phase_by_occ"),
+}
+
+
 def _scalar_error(key: str, v) -> str | None:
     if isinstance(v, bool) or isinstance(v, (int, str)):
         return None
@@ -46,6 +57,9 @@ def validate_bench(data, name: str = "BENCH") -> list:
                 f"got {type(data).__name__}"]
     if not data:
         return [f"{name}: empty object — a bench that measured nothing"]
+    for req in REQUIRED_KEYS.get(name, ()):
+        if req not in data:
+            errors.append(f"{name}: missing required key {req!r}")
     for key, v in data.items():
         if not isinstance(key, str) or not key:
             errors.append(f"{name}: non-string or empty key {key!r}")

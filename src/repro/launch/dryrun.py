@@ -21,7 +21,7 @@ Usage:
 import argparse
 import dataclasses
 import json
-import time
+from repro.obs.clock import now
 import traceback
 
 import jax
@@ -66,7 +66,7 @@ def cell_runnable(cfg, shape_name: str) -> tuple[bool, str]:
 
 def run_cell(arch: str, shape_name: str, multi_pod: bool, *, soi=None,
              overrides: dict | None = None) -> dict:
-    t0 = time.time()
+    t0 = now()
     cfg = configs.get(arch) if soi is None else __import__(
         "importlib").import_module(
         "repro.configs." + arch.replace("-", "_").replace(".", "_")
@@ -129,9 +129,9 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool, *, soi=None,
                          donate_argnums=(1,))
         lowered = jitted.lower(param_shapes, state_shapes, tok)
 
-    t_lower = time.time()
+    t_lower = now()
     compiled = lowered.compile()
-    t_compile = time.time()
+    t_compile = now()
 
     ma = compiled.memory_analysis()
     ca = compiled.cost_analysis()

@@ -42,12 +42,20 @@ are excluded — the decode clock starts after insert), the prefill compile
 count, and — with the prefix cache on — hit rate, pages shared, tokens
 skipped, and COW copies, so recompile and cache regressions are visible
 from the CLI. The hit-rate counters never count the null page.
+
+``--trace-out trace.json`` (and/or ``--metrics-out metrics.json``) turns on
+observability (``repro.obs``): the engine is built with ``telemetry=True``
+(the per-step phase-occupancy/middle-skip vector rides the existing
+deferred drain — no extra host sync), every request's lifecycle is traced
+(queued → prefill → insert → first token → decode commits → done), and at
+exit the Perfetto-openable Chrome trace and/or the flat metrics JSON
+(registry snapshot + TTFT/TPOT percentiles) are written. Interval timing
+uses the shared monotonic clock ``repro.obs.now`` throughout.
 """
 
 from __future__ import annotations
 
 import argparse
-import time
 
 import jax
 import numpy as np
@@ -56,6 +64,8 @@ import repro.configs as configs
 from repro.distributed.sharding import split_axes
 from repro.engine import SOIEngine
 from repro.models import transformer as T
+from repro.obs import (EngineTelemetry, MetricsRegistry, Tracer, now,
+                       write_metrics, write_trace)
 
 
 def main(argv=None):
@@ -100,6 +110,13 @@ def main(argv=None):
     ap.add_argument("--mixed-spec", action="store_true",
                     help="with --speculate: opt every second request out of "
                          "speculation (mixed speculative/plain batch)")
+    ap.add_argument("--trace-out", default=None, metavar="PATH",
+                    help="write a Perfetto-openable Chrome-trace JSON of "
+                         "per-request lifecycle spans; implies engine "
+                         "telemetry (repro.obs)")
+    ap.add_argument("--metrics-out", default=None, metavar="PATH",
+                    help="write the flat metrics JSON (registry snapshot + "
+                         "TTFT/TPOT percentiles); implies engine telemetry")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
     if args.bucket == "pow2":
@@ -126,18 +143,26 @@ def main(argv=None):
     max_len = args.prompt_len + args.gen_len
     plens = [max(1, args.prompt_len - i * args.stagger) for i in range(b)]
 
+    obs_on = bool(args.trace_out or args.metrics_out)
     engine = SOIEngine(cfg, max_concurrent_decodes=b, max_len=max_len,
                        paged=args.paged, page_size=args.page_size,
                        prefill_buckets=buckets,
                        prefill_chunk=args.chunk_size,
                        prefix_cache=args.prefix_cache,
-                       speculate=args.speculate)
+                       speculate=args.speculate,
+                       telemetry=obs_on)
     state = engine.init_decode_state(params)
+    registry = MetricsRegistry()
+    telemetry = EngineTelemetry(
+        cfg.soi.stride if cfg.soi is not None else 1, registry=registry)
+    tracer = Tracer()
+    traces = {}
 
-    t0 = time.time()
+    t0 = now()
     first = {}
     admitted = []
     for slot in range(b):
+        tr = traces[slot] = tracer.request(slot, t_queued=t0)
         # admission: a request the page pool cannot back right now is
         # deferred, not crashed into a half-released slot mid-insert
         if not engine.can_insert(plens[slot], slot):
@@ -145,13 +170,22 @@ def main(argv=None):
                   f"{plens[slot]} tokens (size --paged pools for the "
                   f"resident population)")
             continue
+        tr.mark_prefill_start(plens[slot])
+        hits0 = (engine.prefix_cache_stats["hits"] if args.prefix_cache
+                 else 0)
         prefix = engine.prefill(params, prompt[slot, :plens[slot]])
+        tr.mark_prefill_end(
+            cache_hit=(args.prefix_cache
+                       and engine.prefix_cache_stats["hits"] > hits0),
+            tokens_skipped=(prefix.cache_meta or {}).get("hit", 0))
         spec = (slot % 2 == 0 if args.speculate and args.mixed_spec
                 else None)
         state = engine.insert(prefix, state, slot, speculate=spec)
+        tr.mark_inserted()
         first[slot] = int(prefix.first_token[0])
+        tr.mark_first_token()
         admitted.append(slot)
-    t_prefill = time.time() - t0
+    t_prefill = now() - t0
     if not admitted:
         print(f"arch={cfg.name}: no request admitted — the paged pools "
               f"cannot back a single prompt; grow n_pages or shrink "
@@ -165,6 +199,8 @@ def main(argv=None):
         # ONE batched explicit device->host copy per step (host_get under
         # convert_to_numpy); token extraction below runs on host numpy
         res = res.convert_to_numpy()
+        if obs_on:
+            telemetry.observe_result(res)
         for slot in admitted:
             if len(out[slot]) < args.gen_len:
                 sd = res.get_result_at_slot(slot)
@@ -172,13 +208,17 @@ def main(argv=None):
                 # windows commit the accepted prefix of up to K
                 n = 1 if sd.accepted is None else int(sd.accepted[0])
                 room = args.gen_len - len(out[slot])
-                out[slot].extend(int(x) for x in sd.tokens[:min(n, room)])
+                got = min(n, room)
+                out[slot].extend(int(x) for x in sd.tokens[:got])
+                if got:
+                    traces[slot].mark_decode(got)
                 if len(out[slot]) == args.gen_len:
+                    traces[slot].mark_done()
                     state = engine.free_slot(state, slot)
                     done += 1
         return state, done
 
-    t0 = time.time()
+    t0 = now()
     done = 0
     pending = None     # the previous step's still-on-device ResultTokens
     for _ in range(n_steps):
@@ -196,7 +236,7 @@ def main(argv=None):
         pending = result
     if pending is not None:
         state, done = drain(pending, state, done)
-    dt = time.time() - t0
+    dt = now() - t0
     total = sum(len(v) for v in out.values())
     # each slot's FIRST token came from prefill (before the decode clock
     # started): counting it in the decode-phase rate overstated tok/s by
@@ -213,12 +253,10 @@ def main(argv=None):
           f"({decoded / max(dt, 1e-9):.1f} tok/s decode)")
     if args.speculate:
         sp = engine.spec_accept_stats()
-        rate = sp["accept_rate"]
         print(f"speculative: K={args.speculate}, {sp['windows']} windows, "
               f"{sp['committed']} tokens committed "
               f"({sp['tokens_per_window']:.2f} tokens/window), "
-              f"draft accept rate "
-              f"{'-' if rate is None else f'{100 * rate:.0f}%'} "
+              f"draft accept rate {100 * sp['accept_rate']:.0f}% "
               f"({sp['draft_accepted']}/{sp['draft_candidates']})")
     if args.prefix_cache:
         pc = engine.prefix_cache_stats
@@ -228,6 +266,16 @@ def main(argv=None):
               f"{pc['tokens_skipped']} prompt tokens skipped, "
               f"{pc['cow_copies']} COW copies, "
               f"{pc['evictions']} evictions, {pc['entries']} entries")
+    if obs_on:
+        telemetry.snapshot_engine(engine)
+        if args.trace_out:
+            write_trace(tracer, args.trace_out)
+            print(f"trace written to {args.trace_out} "
+                  f"(open in ui.perfetto.dev)")
+        if args.metrics_out:
+            write_metrics(args.metrics_out, registry=registry,
+                          tracer=tracer)
+            print(f"metrics written to {args.metrics_out}")
     print("sample:", seqs[0, :16].tolist())
     return seqs
 

@@ -13,7 +13,7 @@ Example (quickstart equivalent):
 from __future__ import annotations
 
 import argparse
-import time
+from repro.obs.clock import now
 
 import jax
 import jax.numpy as jnp
@@ -88,7 +88,7 @@ def main(argv=None):
         p, _ = split_axes(T.init(jax.random.PRNGKey(args.seed), cfg))
         return {"params": p, "opt": adamw_init(p)}
 
-    t0 = time.time()
+    t0 = now()
     if args.ckpt_dir:
         sup = TrainSupervisor(
             SupervisorConfig(ckpt_dir=args.ckpt_dir,
@@ -100,7 +100,7 @@ def main(argv=None):
         state["params"] = params
         for step in range(args.steps):
             state = one_step(state, step)
-    dt = time.time() - t0
+    dt = now() - t0
     print(f"done: {args.steps} steps in {dt:.1f}s; "
           f"loss {losses[0]:.4f} -> {np.mean(losses[-10:]):.4f}")
     return losses

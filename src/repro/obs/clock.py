@@ -1,0 +1,20 @@
+"""The one clock every span, bench, and serving loop shares.
+
+Interval timing in this repo goes through :func:`now` — a thin alias for
+``time.perf_counter`` — never ``time.time``. Wall-clock is not monotonic
+(NTP slews and steps it), so a TTFT or a bench interval measured with
+``time.time`` can come out negative or wildly wrong exactly when the
+machine is busiest; ``perf_counter`` is monotonic, highest-resolution, and
+its zero is arbitrary, which is all interval math needs. Spans and benches
+sharing this helper also share one timebase, so a Perfetto trace and a
+bench row from the same run line up.
+
+``now()`` returns seconds as a float. It is host-only and touches no jax
+values — safe inside decode loops (the host-sync analyzer whitelists it).
+"""
+
+from __future__ import annotations
+
+import time
+
+now = time.perf_counter

@@ -1,0 +1,325 @@
+"""repro.obs: metrics registry, request spans, trace export, load harness.
+
+The contract under test is the one docs/OBSERVABILITY.md states: telemetry
+rides the serving loop's existing one-step-deferred drain (no new host
+syncs, certified by the ``gqa-paged-tele`` analysis cell), an idle engine
+reports zeros (never NaN/None), and turning observability on keeps the
+devloop timing within the 5% overhead budget.
+"""
+
+import dataclasses
+import json
+
+import jax
+import numpy as np
+import pytest
+
+from repro.distributed.sharding import split_axes
+from repro.engine import SOIEngine
+from repro.engine.step import step_metrics
+from repro.launch.bench import validate_bench
+from repro.models import transformer as T
+from repro.obs import (EngineTelemetry, MetricsRegistry, Tracer, chrome_trace,
+                       make_trace, now, percentile, run_load, write_metrics,
+                       write_trace)
+
+
+def _cfg(mode="pp"):
+    import repro.configs.qwen3_1_7b as Q
+    return dataclasses.replace(Q.smoke_config(soi=mode), dtype="float32")
+
+
+def _params(cfg):
+    params, _ = split_axes(T.init(jax.random.PRNGKey(0), cfg))
+    return params
+
+
+# ------------------------------------------------------------- registry
+
+def test_registry_get_or_create_and_kind_conflict():
+    reg = MetricsRegistry()
+    c = reg.counter("a.b")
+    c.inc(3)
+    assert reg.counter("a.b") is c and c.value == 3
+    with pytest.raises(TypeError):
+        reg.gauge("a.b")
+    with pytest.raises(ValueError):
+        c.inc(-1)
+
+
+def test_registry_as_dict_flattens_histograms():
+    reg = MetricsRegistry()
+    reg.gauge("g").set(2.5)
+    h = reg.histogram("lat")
+    for v in (1.0, 2.0, 3.0):
+        h.observe(v)
+    d = reg.as_dict()
+    assert d["g"] == 2.5
+    assert d["lat.count"] == 3 and d["lat.mean"] == 2.0
+    assert d["lat.p50"] == 2.0
+    # the flat shape is BENCH-valid as-is
+    assert validate_bench(d, "test") == []
+
+
+def test_percentile_empty_is_zero():
+    assert percentile([], 50) == 0.0
+    assert percentile([], 99) == 0.0
+
+
+# ------------------------------------------------------ device metrics
+
+def test_step_metrics_layout():
+    t = np.array([0, 1, 2, 5], np.int32)      # phases 0,1,0,1 at stride 2
+    active = np.array([True, True, True, False])
+    met = np.asarray(step_metrics(t, active, 2))
+    # [occ_p0, occ_p1, mid_fired, n_active]; inactive slot 3 not counted
+    assert met.tolist() == [2, 1, 1, 3]
+    # all active slots off-phase: the middle's cond must not fire
+    met = np.asarray(step_metrics(np.array([1, 3], np.int32),
+                                  np.array([True, True]), 2))
+    assert met.tolist() == [0, 2, 0, 2]
+    # stride 1 (non-SOI): every step fires
+    met = np.asarray(step_metrics(np.array([4], np.int32), None, 1))
+    assert met.tolist() == [1, 1, 1]
+
+
+def test_engine_telemetry_refuses_device_arrays():
+    class Fake:
+        metrics = jax.numpy.zeros((4,), jax.numpy.int32)
+        accepted_idx = None
+
+    with pytest.raises(TypeError, match="DRAINED"):
+        EngineTelemetry(2).observe_result(Fake())
+
+
+def test_engine_telemetry_stride_mismatch():
+    class Fake:
+        metrics = np.zeros(5, np.int32)
+        accepted_idx = None
+
+    with pytest.raises(ValueError, match="stride"):
+        EngineTelemetry(2).observe_result(Fake())
+
+
+def test_engine_telemetry_accumulates():
+    tel = EngineTelemetry(2)
+    steps = [
+        np.array([1, 1, 1, 2], np.int32),   # mixed phases: mid fires
+        np.array([0, 2, 0, 2], np.int32),   # all off-phase: skipped
+        np.array([2, 0, 1, 2], np.int32),   # aligned phase 0
+        np.array([0, 1, 0, 1], np.int32),   # occupancy 1, off-phase
+    ]
+    for met in steps:
+        class R:
+            metrics = met
+            accepted_idx = None
+        tel.observe_result(R())
+    d = tel.registry.as_dict()
+    assert d["engine.steps"] == 4
+    assert d["engine.mid_fired_steps"] == 2
+    assert d["engine.off_phase_steps"] == 2
+    assert d["engine.phase_occupancy.p0"] == 3
+    assert d["engine.phase_occupancy.p1"] == 4
+    assert tel.off_phase_rate_by_occupancy() == {1: 1.0, 2: 1.0 / 3.0}
+
+
+# -------------------------------------------------------------- spans
+
+def test_request_trace_latency_math():
+    tr = Tracer(t0=0.0).request("r1", tenant=3, t_queued=1.0)
+    tr.mark_prefill_start(16, t=2.0)
+    tr.mark_prefill_end(cache_hit=True, tokens_skipped=8, t=3.0)
+    tr.mark_inserted(t=3.5)
+    tr.mark_first_token(t=3.5)
+    tr.mark_decode(1, t=4.5)
+    tr.mark_decode(3, t=5.5)
+    tr.mark_done(t=5.5)
+    assert tr.queue_wait_s == 1.0
+    assert tr.ttft_s == 2.5
+    assert tr.decode_tokens == 4
+    assert tr.tpot_s == pytest.approx((5.5 - 3.5) / 4)
+
+
+def test_tracer_idle_summary_all_zero():
+    s = Tracer(t0=0.0).summary()
+    assert s["requests"] == 0 and s["completed"] == 0
+    for k, v in s.items():
+        assert v == 0, k
+
+
+def test_tracer_duplicate_rid_rejected():
+    tracer = Tracer(t0=0.0)
+    tracer.request(1)
+    with pytest.raises(ValueError):
+        tracer.request(1)
+
+
+def test_chrome_trace_shape(tmp_path):
+    tracer = Tracer(t0=0.0)
+    tr = tracer.request(0, tenant=1, t_queued=0.0)
+    tr.mark_prefill_start(8, t=0.5)
+    tr.mark_prefill_end(t=1.0)
+    tr.mark_inserted(t=1.0)
+    tr.mark_first_token(t=1.0)
+    tr.mark_decode(2, t=2.0)
+    tr.mark_done(t=2.0)
+    doc = chrome_trace(tracer)
+    kinds = [e["ph"] for e in doc["traceEvents"]]
+    assert kinds.count("M") == 1 and kinds.count("i") == 1
+    names = {e["name"] for e in doc["traceEvents"] if e["ph"] == "X"}
+    assert names == {"queued", "prefill", "decode"}
+    for e in doc["traceEvents"]:
+        if e["ph"] == "X":
+            assert e["dur"] >= 0.0
+    p = tmp_path / "trace.json"
+    write_trace(tracer, p)
+    assert json.loads(p.read_text())["traceEvents"]
+    m = tmp_path / "metrics.json"
+    write_metrics(m, registry=MetricsRegistry(), tracer=tracer,
+                  extra={"x": 1})
+    doc = json.loads(m.read_text())
+    assert doc["trace.completed"] == 1 and doc["x"] == 1
+
+
+# ------------------------------------------------------------ loadgen
+
+def test_make_trace_reproducible_and_shaped():
+    a = make_trace(40, 100, n_tenants=4, seed=3)
+    b = make_trace(40, 100, n_tenants=4, seed=3)
+    assert len(a) == 40
+    for ra, rb in zip(a, b):
+        assert ra.arrival_s == rb.arrival_s and ra.tenant == rb.tenant
+        assert np.array_equal(ra.tokens, rb.tokens)
+    # arrivals sorted, prefixes shared per tenant
+    arr = [r.arrival_s for r in a]
+    assert arr == sorted(arr)
+    by_tenant = {}
+    for r in a:
+        head = r.tokens[:r.prefix_len].tobytes()
+        assert by_tenant.setdefault(r.tenant, head) == head
+    # Zipf: tenant 0 must dominate over 40 draws
+    counts = np.bincount([r.tenant for r in a], minlength=4)
+    assert counts[0] == counts.max()
+
+
+def test_run_load_end_to_end_with_telemetry():
+    cfg = _cfg("pp")
+    params = _params(cfg)
+    eng = SOIEngine(cfg, max_concurrent_decodes=2, max_len=96, paged=True,
+                    page_size=16, prefill_chunk=16, prefix_cache=True,
+                    n_pages=48, n_pages_mid=24, telemetry=True)
+    reqs = make_trace(5, cfg.vocab, n_tenants=2, prefix_len=32,
+                      suffix_lens=(4, 8), gen_lens=(1, 6), seed=1)
+    res = run_load(eng, params, reqs)
+    s = res.summary
+    assert s["completed"] == 5
+    assert s["decode_tokens"] > 0 and s["tok_s"] > 0
+    assert s["ttft_p99_s"] >= s["ttft_p50_s"] >= 0.0
+    assert 0.0 <= s["hit_rate"] <= 1.0
+    # the device metrics vector reached the host through the drain
+    d = res.telemetry.registry.as_dict()
+    assert d["engine.steps"] == s["steps"] > 0
+    assert d["engine.mid_fired_steps"] + d["engine.off_phase_steps"] <= \
+        d["engine.steps"]
+    occ = res.telemetry.off_phase_rate_by_occupancy()
+    assert occ and all(0.0 <= v <= 1.0 for v in occ.values())
+    # snapshot gauges landed (pool residency, drain budget)
+    assert d["engine.pages.outer.high_water"] > 0
+    assert d["engine.sanctioned_drains"] > 0
+    # all summary scalars are BENCH-valid (finite, flat)
+    assert validate_bench(s, "test") == []
+
+
+# ------------------------------------------------- idle-stats regressions
+
+def test_idle_engine_stats_are_zero_not_nan():
+    cfg = _cfg("pp")
+    eng = SOIEngine(cfg, max_concurrent_decodes=2, max_len=96, paged=True,
+                    page_size=16, prefill_chunk=16, prefix_cache=True,
+                    speculate=2)
+    sp = eng.spec_accept_stats()
+    assert sp["accept_rate"] == 0.0
+    assert sp["tokens_per_window"] == 0.0
+    pc = eng.prefix_cache_stats
+    assert pc["hit_rate"] == 0.0
+    tel = EngineTelemetry(cfg.soi.stride)
+    tel.snapshot_engine(eng)
+    for k, v in tel.registry.as_dict().items():
+        assert np.isfinite(v), k
+
+
+# --------------------------------------------------- bench schema gate
+
+def test_serving_trace_bench_required_keys():
+    good = {"hit_rate": 0.5, "ttft_p50_s": 1.0, "ttft_p99_s": 2.0,
+            "tpot_p50_s": 0.1, "tpot_p99_s": 0.2, "tok_s": 9.0,
+            "off_phase_by_occ": {"occ1": 0.5}}
+    assert validate_bench(good, "BENCH_serving_trace.json") == []
+    bad = dict(good)
+    del bad["tpot_p99_s"]
+    errs = validate_bench(bad, "BENCH_serving_trace.json")
+    assert any("tpot_p99_s" in e for e in errs)
+    # other bench files are not held to this key set
+    assert validate_bench({"a": 1}, "BENCH_other.json") == []
+
+
+# ----------------------------------------------- contracts + overhead
+
+def test_telemetry_target_passes_analysis():
+    """The telemetry-on engine cell stays inside the hot-path contracts:
+    no new host syncs, donations intact, single program, stable dtypes.
+    (Cost rows for this cell live in cost_baseline.json like every other
+    matrix cell; the full-matrix gate runs in test_analysis/CI.)"""
+    from repro.analysis import analyze
+    report = analyze(["gqa-paged-tele"])
+    assert report.findings == []
+
+
+def test_telemetry_overhead_within_budget():
+    """Registry+telemetry on stays within 5% of telemetry-off devloop
+    timing. Interleaved min-of-trials: the minimum strips scheduler noise,
+    interleaving strips thermal/load drift."""
+    cfg = _cfg("pp")
+    params = _params(cfg)
+
+    def build(tele):
+        eng = SOIEngine(cfg, max_concurrent_decodes=2, max_len=160,
+                        paged=True, page_size=16, telemetry=tele)
+        ds = eng.init_decode_state(params)
+        prompt = jax.random.randint(jax.random.PRNGKey(2), (2, 8), 0,
+                                    cfg.vocab)
+        for slot in range(2):
+            ds = eng.insert(eng.prefill(params, prompt[slot]), ds, slot)
+        return eng, ds
+
+    def trial(eng, ds, tel):
+        t0 = now()
+        pending = None
+        for _ in range(16):
+            ds, res = eng.generate(params, ds)
+            if pending is not None:
+                r = pending.convert_to_numpy()
+                if tel is not None:
+                    tel.observe_result(r)
+            pending = res
+        r = pending.convert_to_numpy()
+        if tel is not None:
+            tel.observe_result(r)
+        return now() - t0, ds
+
+    eng_off, ds_off = build(False)
+    eng_on, ds_on = build(True)
+    tel = EngineTelemetry(cfg.soi.stride)
+    # warm both compiled programs (the state is donated through generate,
+    # so every trial must carry the returned state forward)
+    _, ds_off = trial(eng_off, ds_off, None)
+    _, ds_on = trial(eng_on, ds_on, tel)
+    t_off = t_on = float("inf")
+    for _ in range(8):
+        dt, ds_off = trial(eng_off, ds_off, None)
+        t_off = min(t_off, dt)
+        dt, ds_on = trial(eng_on, ds_on, tel)
+        t_on = min(t_on, dt)
+    assert t_on <= 1.05 * t_off, (
+        f"telemetry overhead {t_on / t_off - 1:.1%} exceeds the 5% budget "
+        f"(on {t_on:.4f}s vs off {t_off:.4f}s)")
