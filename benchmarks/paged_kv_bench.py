@@ -113,6 +113,29 @@ def run(csv=False, out_json="BENCH_paged_kv.json"):
     mid_paged = sum(x.nbytes for x in jax.tree.leaves(ds_p["model"]["mid"]))
     t_dense = _time_steps(dense, params, ds_d)
     t_paged = _time_steps(paged, params, ds_p)
+
+    # kernel-vs-ref row: the same paged serving schedule through the
+    # Pallas dispatch path. On TPU that times the real scalar-prefetch
+    # kernels; on the CPU container it times the interpret-mode emulator
+    # (kernel_backend records which), so the row is about code-path parity
+    # there — the wallclock flip is only meaningful on the pallas backend.
+    from repro.kernels import ops as kops
+    prev_mode = kops.FORCE_MODE
+    on_tpu = jax.default_backend() == "tpu"
+    kops.FORCE_MODE = "pallas" if on_tpu else "interpret"
+    try:
+        k_steps, k_iters = (20, 20) if on_tpu else (4, 3)
+        paged_k = SOIEngine(cfg, max_concurrent_decodes=slots,
+                            max_len=max_len, paged=True, page_size=page,
+                            n_pages=resident * per_outer + 1,
+                            n_pages_mid=resident * per_mid + 1)
+        out_k, ds_k = _drive(paged_k, params, tokens, resident,
+                             steps=k_steps)
+        t_paged_kernel = _time_steps(paged_k, params, ds_k, n=k_iters)
+    finally:
+        kops.FORCE_MODE = prev_mode
+    kernel_matches = bool(np.allclose(out_k, out_p[:k_steps],
+                                      rtol=2e-4, atol=1e-4))
     dense_bytes_acc, dense_peak = _measured_mem(dense, params, ds_d)
     paged_bytes_acc, paged_peak = _measured_mem(paged, params, ds_p)
     rows = {
@@ -130,6 +153,9 @@ def run(csv=False, out_json="BENCH_paged_kv.json"):
         "bit_exact_vs_dense": bool(np.array_equal(out_d, out_p)),
         "wallclock_step_dense_s": t_dense,
         "wallclock_step_paged_s": t_paged,
+        "wallclock_step_paged_kernel_s": t_paged_kernel,
+        "kernel_backend": "pallas" if on_tpu else "interpret",
+        "kernel_matches_ref": kernel_matches,
         # XLA-measured memory axes of the compiled generate steps: the
         # 2.67 vs 2.25 ms/step gap gets a bytes-level explanation here,
         # and repro.launch.plan checks its static predictions against them

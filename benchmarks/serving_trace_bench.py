@@ -19,7 +19,14 @@ Reported into ``BENCH_serving_trace.json``:
 * decode throughput (tok/s, prefill-produced first tokens excluded);
 * ``off_phase_by_occ``: fraction of decode steps that skipped the
   compressed middle, split by slot occupancy — the paper's partial-state
-  saving surviving (or washing out) as the batch fills with mixed phases.
+  saving surviving (or washing out) as the batch fills with mixed phases;
+* the same trace replayed under **phase-aligned admission**
+  (``run_load(..., phase_align=True)`` -> ``engine.can_insert(...,
+  phase_align=True)``): inserts deferred at most stride-1 steps so slots
+  cluster on one ``t % stride`` class — ``off_phase_by_occ_aligned``
+  shows the skip rate recovering at occupancy >= 3, and
+  ``phase_deferred`` / ``ttft_p99_s_aligned`` price what the alignment
+  delay cost.
 
 ``--smoke`` shrinks the trace (CI-friendly) but writes the same schema;
 ``--trace-out``/``--metrics-out`` additionally export the Perfetto trace
@@ -51,26 +58,45 @@ N_REQ_SMOKE = 8
 N_TENANTS = 4
 
 
-def run(csv=False, out_json="BENCH_serving_trace.json", smoke=False,
-        trace_out=None, metrics_out=None):
-    cfg = dataclasses.replace(Q.smoke_config(soi="pp"), dtype="float32")
-    params, _ = split_axes(T.init(jax.random.PRNGKey(0), cfg))
-    n_req = N_REQ_SMOKE if smoke else N_REQ
+def _session(cfg, params, reqs, *, phase_align, trace_out=None,
+             metrics_out=None):
+    """One load replay on a fresh engine; returns (summary, telemetry)."""
     # pools sized generously: admission pressure is loadgen's own knob
     # (deferred_admissions reports it); the bench measures steady serving
     eng = SOIEngine(cfg, max_concurrent_decodes=SLOTS, max_len=MAX_LEN,
                     paged=True, page_size=PAGE, prefill_chunk=CHUNK,
                     prefix_cache=True, n_pages=64, n_pages_mid=32,
                     telemetry=True)
-    reqs = make_trace(n_req, cfg.vocab, n_tenants=N_TENANTS,
-                      prefix_len=PREFIX, suffix_lens=(8, 16),
-                      gen_lens=(8, 16), seed=0)
     registry = MetricsRegistry()
     telemetry = EngineTelemetry(cfg.soi.stride, registry=registry)
     res = run_load(eng, params, reqs, tracer=Tracer(t0=0.0),
-                   telemetry=telemetry, registry=registry)
+                   telemetry=telemetry, registry=registry,
+                   phase_align=phase_align)
+    if trace_out:
+        write_trace(res.tracer, trace_out)
+    if metrics_out:
+        write_metrics(metrics_out, registry=registry, tracer=res.tracer)
+    return res.summary, res.telemetry
 
-    s = res.summary
+
+def run(csv=False, out_json="BENCH_serving_trace.json", smoke=False,
+        trace_out=None, metrics_out=None):
+    cfg = dataclasses.replace(Q.smoke_config(soi="pp"), dtype="float32")
+    params, _ = split_axes(T.init(jax.random.PRNGKey(0), cfg))
+    n_req = N_REQ_SMOKE if smoke else N_REQ
+    reqs = make_trace(n_req, cfg.vocab, n_tenants=N_TENANTS,
+                      prefix_len=PREFIX, suffix_lens=(8, 16),
+                      gen_lens=(8, 16), seed=0)
+    # the SAME trace replays twice: first-come admission (the baseline
+    # whose off-phase savings wash out as occupancy mixes phases), then
+    # phase-aligned admission (inserts deferred <= stride-1 steps so slots
+    # cluster on one t % stride class and the lax.cond middle keeps
+    # skipping) — off_phase_by_occ vs off_phase_by_occ_aligned is the
+    # scheduling win, ttft_p99_s_aligned its bounded latency cost
+    s, tel = _session(cfg, params, reqs, phase_align=False,
+                      trace_out=trace_out, metrics_out=metrics_out)
+    sa, tela = _session(cfg, params, reqs, phase_align=True)
+
     rows = {
         "arch": cfg.name, "soi": "pp", "stride": cfg.soi.stride,
         "requests": n_req, "tenants": N_TENANTS, "slots": SLOTS,
@@ -89,13 +115,21 @@ def run(csv=False, out_json="BENCH_serving_trace.json", smoke=False,
         # the trajectory keeps one row per occupancy level
         "off_phase_by_occ": {
             f"occ{occ}": rate for occ, rate in
-            sorted(res.telemetry.off_phase_rate_by_occupancy().items())},
+            sorted(tel.off_phase_rate_by_occupancy().items())},
+        "off_phase_by_occ_aligned": {
+            f"occ{occ}": rate for occ, rate in
+            sorted(tela.off_phase_rate_by_occupancy().items())},
+        # phase-aligned session extras: admission deferrals it spent, the
+        # coherence it bought, and the latency it cost
+        "phase_deferred": sa["phase_deferred"],
+        "phase_coherent_rate": tel.phase_coherence()["coherent_step_rate"],
+        "phase_coherent_rate_aligned":
+            tela.phase_coherence()["coherent_step_rate"],
+        "ttft_p99_s_aligned": sa["ttft_p99_s"],
+        "tpot_p50_s_aligned": sa["tpot_p50_s"],
+        "tok_s_aligned": sa["tok_s"],
     }
     write_bench(rows, out_json)
-    if trace_out:
-        write_trace(res.tracer, trace_out)
-    if metrics_out:
-        write_metrics(metrics_out, registry=registry, tracer=res.tracer)
 
     if csv:
         for k in ("hit_rate", "ttft_p50_s", "ttft_p99_s", "tpot_p50_s",
@@ -113,10 +147,15 @@ def run(csv=False, out_json="BENCH_serving_trace.json", smoke=False,
               f"TPOT p50/p99 {s['tpot_p50_s'] * 1e3:.0f}/"
               f"{s['tpot_p99_s'] * 1e3:.0f} ms   "
               f"{s['tok_s']:.1f} tok/s decode")
-        occ = rows["off_phase_by_occ"]
-        line = "  middle skipped: " + ", ".join(
-            f"{k}: {100 * v:.0f}% of steps" for k, v in occ.items())
-        print(line)
+        for label, grp in (("first-come", rows["off_phase_by_occ"]),
+                           ("phase-aligned",
+                            rows["off_phase_by_occ_aligned"])):
+            print(f"  middle skipped ({label}): " + ", ".join(
+                f"{k}: {100 * v:.0f}% of steps" for k, v in grp.items()))
+        print(f"  phase-aligned: {rows['phase_deferred']} deferrals, "
+              f"coherence {100 * rows['phase_coherent_rate']:.0f}% -> "
+              f"{100 * rows['phase_coherent_rate_aligned']:.0f}% of steps, "
+              f"TTFT p99 {sa['ttft_p99_s'] * 1e3:.0f} ms")
         print(f"  -> {out_json}")
     return rows
 

@@ -177,6 +177,29 @@ def run(csv=False, out_json="BENCH_soi_lm.json"):
     # honesty target for repro.launch.plan's per-phase composition
     t_aligned_dev = _time_device_loop(cfg_soi, params_soi, st_p0, None)
 
+    # kernel-vs-ref row: the SOI step re-jitted through the Pallas dispatch
+    # path (backend dispatch is resolved at trace time, so a fresh jit is
+    # required). On TPU this times the real kernels; on the CPU container
+    # it times the interpret-mode emulator (kernel_backend records which) —
+    # there the row certifies code-path parity, not speed.
+    from repro.kernels import ops as kops
+    prev_mode = kops.FORCE_MODE
+    on_tpu = jax.default_backend() == "tpu"
+    kops.FORCE_MODE = "pallas" if on_tpu else "interpret"
+    try:
+        jker = jax.jit(soi_step)
+        st = state_soi
+        lg, st = jker(params_soi, st, tok)    # compile
+        jax.block_until_ready(lg)
+        n_k = 20 if on_tpu else 5
+        t0 = now()
+        for _ in range(n_k):
+            lg, st = jker(params_soi, st, tok)
+        jax.block_until_ready(lg)
+        t_soi_kernel = (now() - t0) / n_k
+    finally:
+        kops.FORCE_MODE = prev_mode
+
     # measured memory axes of the two compiled steps (XLA's own numbers)
     soi_bytes, soi_peak = _measured_mem(soi_step, params_soi, state_soi, tok)
     std_bytes, std_peak = _measured_mem(std_step, params_std, state_std, tok)
@@ -196,6 +219,8 @@ def run(csv=False, out_json="BENCH_soi_lm.json"):
     }
     rows["wallclock_step_std_s"] = t_std
     rows["wallclock_step_soi_s"] = t_soi
+    rows["wallclock_step_soi_kernel_s"] = t_soi_kernel
+    rows["kernel_backend"] = "pallas" if on_tpu else "interpret"
     rows["wallclock_step_soi_phase0_s"] = t_phase0
     rows["wallclock_step_soi_offphase_s"] = t_offphase
     rows["offphase_speedup_vs_phase0_x"] = t_phase0 / t_offphase
@@ -235,7 +260,8 @@ def run(csv=False, out_json="BENCH_soi_lm.json"):
     else:
         print("\n== SOI scattered decode (LM, engine step, smoke scale) ==")
         for k, v in rows.items():
-            print(f"  {k:24s} {v:,.1f}")
+            print(f"  {k:24s} {v:,.1f}" if isinstance(v, (int, float))
+                  else f"  {k:24s} {v}")
         print(f"  wall-clock/step: std {t_std*1e3:.1f} ms vs "
               f"SOI unified {t_soi*1e3:.1f} ms (CPU, directional)")
     return rows

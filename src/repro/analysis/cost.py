@@ -87,6 +87,20 @@ def _peak_bytes(compiled) -> float:
 _COST_CACHE: dict = {}
 
 
+def _require_priced(where: str, *analyses) -> None:
+    """Raise if any analysis saw a kernel custom-call with no registered
+    closed-form cost. An unpriced Pallas kernel is an opaque custom-call:
+    its FLOPs/bytes would silently vanish from every COST bound."""
+    unpriced: set = set()
+    for a in analyses:
+        unpriced |= set(a.get("unpriced_custom_calls", ()))
+    if unpriced:
+        raise ValueError(
+            f"{where}: kernel custom-calls with no registered closed-form "
+            f"cost: {sorted(unpriced)} — add them to "
+            f"src/repro/kernels/costs.py (KERNEL_COSTS)")
+
+
 def measure_target(target) -> dict:
     """entry name -> :class:`EntryCost` for every jitted entry of the
     target's engine. Lower+compile only — nothing executes, so donation
@@ -99,6 +113,7 @@ def measure_target(target) -> dict:
         txt = compiled.as_text()
         cmax = hlo_analyze(txt, cond="max")
         cmin = hlo_analyze(txt, cond="min")
+        _require_priced(f"{target.name}.{e.name}", cmax, cmin)
         out[e.name] = EntryCost(
             flops=cmax["flops"], flops_min=cmin["flops"],
             bytes=cmax["bytes"], bytes_min=cmin["bytes"],

@@ -39,6 +39,10 @@ import math
 import re
 from collections import defaultdict
 
+# Pure-python registry (no jax import — this module must keep serving
+# stored HLO artifacts): closed-form costs for the repo's Pallas kernels.
+from repro.kernels import costs as kernel_costs
+
 _DTYPE_BYTES = {
     "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2,
     "s32": 4, "u32": 4, "s64": 8, "u64": 8, "f8e4m3fn": 1, "f8e5m2": 1,
@@ -63,6 +67,49 @@ _DIRECTION_RE = re.compile(r"direction=(\w+)")
 
 COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
                "collective-permute")
+
+# A Pallas/Mosaic kernel lowers to ONE opaque custom-call: XLA sees no dots
+# inside it, so without pricing, a kernel cell would silently drop its
+# FLOPs/bytes from the cost certification. Custom-calls with these targets
+# MUST resolve to a registered closed-form cost (repro.kernels.costs);
+# anything else (Sharding, threefry, ...) is outside the kernel contract
+# and stays uncharged, as before.
+_KERNEL_CC_TARGETS = ("tpu_custom_call", "mosaic", "triton")
+_CC_TARGET_RE = re.compile(r'custom_call_target="([^"]+)"')
+_CC_NAME_RE = re.compile(r"name=([\w\-]+)")
+
+
+def _price_custom_call(ins, shapes):
+    """(flops/bytes dict | None, unpriced-name | None) for a custom-call.
+
+    (None, None): not a kernel custom-call — ignore. The kernel name is the
+    ``pallas_call(name=...)`` string, carried in the op metadata; when
+    metadata is stripped, any registered name appearing verbatim in the
+    instruction text still matches."""
+    mt = _CC_TARGET_RE.search(ins.rest)
+    target = mt.group(1) if mt else ""
+    if not any(t in target for t in _KERNEL_CC_TARGETS):
+        return None, None
+    names = _CC_NAME_RE.findall(ins.rest)
+    name = next((n for n in names if n in kernel_costs.KERNEL_COSTS), None)
+    if name is None:
+        name = next((n for n in kernel_costs.KERNEL_COSTS
+                     if n in ins.rest), None)
+    if name is None:
+        return None, names[0] if names else target
+
+    def _shape(type_str):
+        dtype, dims = shape_dims(type_str)
+        return kernel_costs.Shape(dtype or "f32", dims,
+                                  shape_bytes(type_str))
+
+    ops = [_shape(shapes[o]) for o in ins.operands if o in shapes]
+    try:
+        return kernel_costs.price(name, _shape(ins.type_str), ops), None
+    except (IndexError, ValueError, ZeroDivisionError):
+        # operand list didn't match the kernel contract (e.g. a rewrite
+        # reordered inputs): surface as unpriced rather than mischarging
+        return None, name
 
 
 def shape_bytes(type_str: str) -> int:
@@ -337,9 +384,9 @@ def analyze(text: str, *, num_partitions: int | None = None,
             return memo[name]
         memo[name] = zero = {"flops": 0.0, "bytes": 0.0,
                              "coll_bytes": defaultdict(float),
-                             "wire_bytes": 0.0}
+                             "wire_bytes": 0.0, "unpriced": set()}
         agg = {"flops": 0.0, "bytes": 0.0, "coll_bytes": defaultdict(float),
-               "wire_bytes": 0.0}
+               "wire_bytes": 0.0, "unpriced": set()}
         instrs = comps.get(name, ())
         shapes = {i.name: i.type_str for i in instrs}
 
@@ -347,6 +394,7 @@ def analyze(text: str, *, num_partitions: int | None = None,
             agg["flops"] += sub["flops"] * mult
             agg["bytes"] += sub["bytes"] * mult
             agg["wire_bytes"] += sub["wire_bytes"] * mult
+            agg["unpriced"] |= sub["unpriced"]
             for k, v in sub["coll_bytes"].items():
                 agg["coll_bytes"][k] += v * mult
 
@@ -385,6 +433,13 @@ def analyze(text: str, *, num_partitions: int | None = None,
                     sub = comp_cost(m.group(1))
                     agg["flops"] += sub["flops"]   # dots inside fusions
                     # fusion bytes counted at the fusion boundary below
+            if op == "custom-call":
+                priced, missing = _price_custom_call(ins, shapes)
+                if priced is not None:
+                    agg["flops"] += priced["flops"]
+                    agg["bytes"] += priced["bytes"]
+                elif missing is not None:
+                    agg["unpriced"].add(missing)
             if op == "dot":
                 agg["flops"] += _dot_flops(ins, shapes)
             elif op == "convolution":
@@ -438,9 +493,14 @@ def analyze(text: str, *, num_partitions: int | None = None,
         return agg
 
     out = comp_cost(entry) if entry else {"flops": 0, "bytes": 0,
-                                          "coll_bytes": {}, "wire_bytes": 0}
+                                          "coll_bytes": {}, "wire_bytes": 0,
+                                          "unpriced": set()}
     out = dict(out)
     out["coll_bytes"] = dict(out["coll_bytes"])
+    # kernel custom-calls (Pallas/Mosaic targets) with no registered cost:
+    # consumers (repro.analysis.cost) fail loudly on a non-empty list — an
+    # unpriced kernel would silently vanish from the certification
+    out["unpriced_custom_calls"] = sorted(out.pop("unpriced"))
     out["num_partitions"] = num_partitions
     return out
 

@@ -255,9 +255,34 @@ the engine's host-side stats (compile counters, ``prefix_cache_stats``,
 gauges; ``repro.obs.Tracer`` records per-request lifecycle spans.
 Schema and Perfetto how-to: ``docs/OBSERVABILITY.md``.
 
+Phase-aligned admission
+-----------------------
+
+Slots advance together, so a slot's phase class ``t % stride`` is fixed
+at insert — a batch that mixes classes pays the middle nearly every step
+and the off-phase saving collapses as occupancy grows. Admission can
+prevent that: ``can_insert(true_length, slot, phase_align=True)`` returns
+False while the insert would land off the batch's modal phase
+(``batch_phase()`` / ``phase_gap(true_length)``); each per-token decode
+step rotates the batch phase by one, so the gap self-resolves within
+stride − 1 steps (``phase_align=<int>`` caps the wait tighter). Serving
+loops (``launch/serve.py --phase-align``, ``obs.loadgen
+run_load(phase_align=True)``) defer or re-order pending inserts on it;
+``EngineTelemetry.phase_coherence`` is the scoreboard and
+``BENCH_serving_trace.json`` replays the same trace both ways.
+
+Pallas hot-path kernels (``repro.kernels``)
+-------------------------------------------
+
+The attention reads above (chunked prefill, dense/paged decode, MLA
+absorbed), the batched COW page copy, and the STMC/LRU streaming ops have
+hand-written Pallas TPU kernels behind ``repro.kernels.ops`` dispatch
+(ref path off-TPU; ``FORCE_MODE`` pins it). Per-kernel shape/masking
+contracts, exactness classes, and the custom-call cost registry that
+keeps them visible to the static cost gate: ``docs/KERNELS.md``.
+
 Follow-ons recorded in ROADMAP.md: multi-host prefill/generate
-disaggregation, phase-aligned slot scheduling, cross-engine prefix-cache
-persistence.
+disaggregation, cross-engine prefix-cache persistence.
 """
 
 from repro.engine.api import Engine, Prefix, ResultTokens, SlotData

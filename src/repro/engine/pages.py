@@ -73,6 +73,12 @@ class PageTable:
         # repro.obs pool gauges); never resets — it describes the pool's
         # whole lifetime
         self.high_water = 0
+        # bumped on every ``map`` mutation. The engine keys its device copy
+        # of the map on this, so steady-state decode steps (no boundary
+        # crossing, no insert/free) skip the per-step host->device upload
+        # entirely — refcount-only changes (pin/unpin of still-mapped
+        # pages) deliberately don't bump it.
+        self.version = 0
 
     @property
     def free_pages(self) -> int:
@@ -91,6 +97,7 @@ class PageTable:
                 f"for the resident token population")
         pid = self._free.pop()
         self.map[slot, idx] = pid
+        self.version += 1
         self.refs[pid] = 1
         if self.used_pages > self.high_water:
             self.high_water = self.used_pages
@@ -118,6 +125,7 @@ class PageTable:
         if self.map[slot, idx]:
             raise RuntimeError(f"slot {slot} map entry {idx} already backed")
         self.map[slot, idx] = pid
+        self.version += 1
         self.refs[pid] += 1
 
     def pin(self, pid: int):
@@ -196,6 +204,7 @@ class PageTable:
         if pid == 0:
             return False
         self.map[slot, idx] = 0
+        self.version += 1
         return self._decref(pid)
 
     def cow(self, slot: int, idx: int) -> tuple:
@@ -224,6 +233,7 @@ class PageTable:
             if pid > 0 and self._decref(int(pid)):
                 freed[i] = pid
         self.map[slot] = 0
+        self.version += 1
         return freed
 
 

@@ -252,6 +252,29 @@ def _copy_group_page(seg_caches, segs, src, dst):
     return out
 
 
+def _copy_group_pages(seg_caches, segs, srcs, dsts):
+    """Batched :func:`_copy_group_page`: apply a whole step's COW pair set
+    (``srcs``/``dsts`` fixed-length int32 vectors, (0, 0) null-page pairs as
+    padding) to every attention pool of a cache group in one dispatch."""
+    out = []
+    for seg_c, seg in zip(seg_caches, segs):
+        axis = 1 if seg.scan else 0
+
+        def cp(blk):
+            if "attn" not in blk:
+                return blk
+            a = {name: (pl.at[:, dsts].set(pl[:, srcs]) if axis
+                        else kops.copy_pages(pl, srcs, dsts))
+                 for name, pl in blk["attn"].items()}
+            return dict(blk, attn=a)
+
+        if seg.scan:
+            out.append({k: cp(v) for k, v in seg_c.items()})
+        else:
+            out.append([cp(b) for b in seg_c])
+    return out
+
+
 class SOIEngine(Engine):
     """Engine over the unified step; handles SOI and plain configs alike.
 
@@ -517,21 +540,25 @@ class SOIEngine(Engine):
                                                  rows["mid"], n_frames)
             return out
 
-        def _cow_outer(ds, src, dst):
+        has_mid = self._paged and bool(getattr(self, "_mid_len", 0))
+
+        def _cow_batch(ds, srcs, dsts, m_srcs, m_dsts):
+            # ONE dispatch covers the whole step's COW set across every
+            # cache group: outer pairs hit the full-rate pools, mid pairs
+            # the compressed-middle pools. Vectors are fixed-length and
+            # (0, 0)-padded (null-page self-copies are no-ops), so one
+            # compiled program serves every COW count.
             m = dict(ds["model"])
             if cfg.soi is None:
-                m["segments"] = _copy_group_page(m["segments"], cfg.segments,
-                                                 src, dst)
+                m["segments"] = _copy_group_pages(m["segments"],
+                                                  cfg.segments, srcs, dsts)
             else:
-                pre, _, post = soi_partition(cfg)
-                m["pre"] = _copy_group_page(m["pre"], pre, src, dst)
-                m["post"] = _copy_group_page(m["post"], post, src, dst)
-            return dict(ds, model=m)
-
-        def _cow_mid(ds, src, dst):
-            _, mid, _ = soi_partition(cfg)
-            m = dict(ds["model"])
-            m["mid"] = _copy_group_page(m["mid"], mid, src, dst)
+                pre, mid, post = soi_partition(cfg)
+                m["pre"] = _copy_group_pages(m["pre"], pre, srcs, dsts)
+                m["post"] = _copy_group_pages(m["post"], post, srcs, dsts)
+                if has_mid:
+                    m["mid"] = _copy_group_pages(m["mid"], mid, m_srcs,
+                                                 m_dsts)
             return dict(ds, model=m)
 
         # donate the decode state: the per-slot KV caches dominate serving
@@ -549,8 +576,16 @@ class SOIEngine(Engine):
         self._release_fn = checked_jit(_release, donate_argnums=(0,))
         self._scrub_fn = checked_jit(_scrub_pages, donate_argnums=(0,))
         self._hydrate_fn = checked_jit(_hydrate, donate_argnums=(0,))
-        self._cow_outer_fn = checked_jit(_cow_outer, donate_argnums=(0,))
-        self._cow_mid_fn = checked_jit(_cow_mid, donate_argnums=(0,))
+        self._cow_batch_fn = checked_jit(_cow_batch, donate_argnums=(0,))
+        # COW pairs discovered while backing this step's writes, flushed as
+        # ONE _cow_batch_fn dispatch right before the compiled step (or
+        # before any eviction scrub, which could otherwise free-and-scrub a
+        # pending source page first)
+        self._cow_pending = {"outer": [], "mid": []}
+        # PageTable.version of the last device upload per group: unchanged
+        # maps ride along inside the decode state across steps, so
+        # steady-state tokens skip the host->device map transfer
+        self._pm_version = {"outer": -1, "mid": -1}
 
     def _resolve_buckets(self, policy):
         """Prefill bucket lengths: None (exact-length, one compile per
@@ -623,9 +658,53 @@ class SOIEngine(Engine):
         maps = {}
         if self._pt_outer is not None:
             maps["outer"] = jnp.asarray(self._pt_outer.map)
+            self._pm_version["outer"] = self._pt_outer.version
         if self._pt_mid is not None:
             maps["mid"] = jnp.asarray(self._pt_mid.map)
+            self._pm_version["mid"] = self._pt_mid.version
         return maps
+
+    def _refresh_page_maps(self, model: dict) -> dict:
+        """Re-upload only the page-map matrices whose host table mutated
+        since their last upload. Unchanged maps are already inside the
+        decode state (the compiled step passes "pages" through, so the
+        previous step handed them straight back) — a steady-state token
+        costs zero host->device transfers here, which measured as ~0.5ms
+        of the paged-vs-dense per-step gap on the CPU container."""
+        pages = dict(model["pages"])
+        stale = False
+        for name, pt in (("outer", self._pt_outer), ("mid", self._pt_mid)):
+            if pt is not None and self._pm_version[name] != pt.version:
+                pages[name] = jnp.asarray(pt.map)
+                self._pm_version[name] = pt.version
+                stale = True
+        return dict(model, pages=pages) if stale else model
+
+    def _flush_cow(self, decode_state):
+        """Dispatch every pending COW copy as one compiled call. Pair
+        vectors are padded to a fixed multiple of the slot count so the
+        program compiles once; overflow (speculative windows can COW
+        several pages per slot) just dispatches again."""
+        po, pm_ = self._cow_pending["outer"], self._cow_pending["mid"]
+        if not po and not pm_:
+            return decode_state
+        self._cow_pending = {"outer": [], "mid": []}
+        width = self._slots
+        for i in range(0, max(len(po), len(pm_), 1), width):
+            o, m = po[i:i + width], pm_[i:i + width]
+            o_src = np.zeros(width, np.int32)
+            o_dst = np.zeros(width, np.int32)
+            m_src = np.zeros(width, np.int32)
+            m_dst = np.zeros(width, np.int32)
+            if o:
+                o_src[:len(o)], o_dst[:len(o)] = zip(*o)
+            if m:
+                m_src[:len(m)], m_dst[:len(m)] = zip(*m)
+            decode_state = self._cow_batch_fn(
+                decode_state, jnp.asarray(o_src), jnp.asarray(o_dst),
+                jnp.asarray(m_src), jnp.asarray(m_dst))
+        self._live = decode_state
+        return decode_state
 
     def init_decode_state(self, params):
         enc0 = None
@@ -648,6 +727,7 @@ class SOIEngine(Engine):
         self._clock = np.zeros(self._slots, np.int64)
         self._spec_slots = np.zeros(self._slots, bool)
         self._spec_pending = [[] for _ in range(self._slots)]
+        self._cow_pending = {"outer": [], "mid": []}
         # a fresh decode state invalidates every resident page: the prefix
         # index — and the serving counters that describe it — restart with it
         self._prefix_index = PrefixIndex()
@@ -689,6 +769,10 @@ class SOIEngine(Engine):
     def _evict_entry(self, decode_state):
         """Drop the LRU prefix-index entry; scrub any page this was the
         last reference to."""
+        # pending COW copies must land first: eviction can free (and
+        # scrub) the last reference to a pending pair's SOURCE page, and a
+        # flush after that would copy scrubbed garbage into the new page
+        decode_state = self._flush_cow(decode_state)
         e = self._prefix_index.pop_lru()
         if e is None:
             return decode_state
@@ -803,13 +887,62 @@ class SOIEngine(Engine):
                 pins[pid] = pins.get(pid, 0) + 1
         return sum(1 for pid, c in pins.items() if pt.refs[pid] == c)
 
-    def can_insert(self, true_length: int, slot: int | None = None) -> bool:
+    # -- phase-aligned admission ------------------------------------------
+
+    def batch_phase(self) -> int | None:
+        """SOI phase class of the current batch: the modal value of
+        ``clock % stride`` over active slots (ties break to the lowest
+        phase). Slots advance together, so this class rotates by one per
+        generate step but membership is fixed at insert. None when the
+        config has no SOI schedule (every step fires the full stack) or no
+        slot is active — the next insert then *defines* the class."""
+        soi = self.cfg.soi
+        if soi is None or soi.stride <= 1:
+            return None
+        occ = np.nonzero(self._occupied)[0]
+        if len(occ) == 0:
+            return None
+        phases, counts = np.unique(self._clock[occ] % soi.stride,
+                                   return_counts=True)
+        return int(phases[np.argmax(counts)])
+
+    def phase_gap(self, true_length: int) -> int:
+        """Generate steps to wait before inserting a ``true_length``-token
+        request so its slot lands in the batch's phase class. Inserting
+        now starts the slot clock at ``true_length``; relative phases are
+        frozen from then on (slots step together), so alignment must
+        happen AT insert: wait ``(true_length - batch_phase) % stride``
+        steps and the batch phase comes around to match. 0 when there is
+        nothing to align with (no SOI middle, or no active slots)."""
+        bp = self.batch_phase()
+        if bp is None:
+            return 0
+        return int((int(true_length) - bp) % self.cfg.soi.stride)
+
+    def can_insert(self, true_length: int, slot: int | None = None,
+                   phase_align=False) -> bool:
         """Admission check for serving loops: can a prompt of
         ``true_length`` real tokens be backed right now — counting free
         pages, pages ``slot``'s eviction would release (if given and
         occupied), and pages LRU eviction of the prefix index would free?
         Conservative (a prefix hit only reduces the real need); ``insert``
-        remains the authority."""
+        remains the authority.
+
+        ``phase_align`` adds the scheduling half: defer an insert whose
+        slot would land off the batch's SOI phase class, so the middle's
+        ``lax.cond`` keeps skipping at high occupancy instead of firing
+        for a lone misphased slot. ``True`` bounds the deferral by the
+        worst-case gap (stride - 1 steps); an int is a tighter SLO bound —
+        a request whose gap exceeds it is admitted misaligned NOW (waiting
+        could not align it within the bound, so burning latency on a
+        partial wait buys nothing). Deferral never deadlocks: with no
+        active slots the gap is 0 by definition."""
+        if phase_align:
+            cap = (self.cfg.soi.stride - 1
+                   if phase_align is True and self.cfg.soi is not None
+                   else int(phase_align))
+            if 0 < self.phase_gap(true_length) <= cap:
+                return False
         if not self._paged or self._pt_outer is None:
             return True
         needs = [(self._pt_outer, "outer", true_length)]
@@ -975,6 +1108,7 @@ class SOIEngine(Engine):
             return ds
         # pages cover the TRUE prompt only: a bucketed/chunked prefix's pad
         # rows map to the null page (masked on read, discarded on write)
+        decode_state = self._flush_cow(decode_state)   # see free_slot
         true_len = prefix.true_length
         frames = (-(-true_len // self.cfg.soi.stride)
                   if self.cfg.soi is not None else 0)
@@ -1092,13 +1226,10 @@ class SOIEngine(Engine):
                 decode_state = self._make_room(pt, 1, decode_state)
             if pt.refs[pid] > 1:   # eviction may have just unshared it
                 old, new = pt.cow(slot, idx)
-                fn = (self._cow_outer_fn if group == "outer"
-                      else self._cow_mid_fn)
-                decode_state = fn(decode_state,
-                                  jnp.asarray(old, jnp.int32),
-                                  jnp.asarray(new, jnp.int32))
+                # deferred: the whole step's COW set flushes as ONE
+                # _cow_batch_fn dispatch before the compiled step runs
+                self._cow_pending[group].append((old, new))
                 self._pc_stats["cow_copies"] += 1
-                self._live = decode_state
         return decode_state, None
 
     def generate(self, params, decode_state):
@@ -1117,11 +1248,14 @@ class SOIEngine(Engine):
                 if self._pt_mid is not None and t % st == 0:
                     decode_state, _ = self._back_write_page(
                         decode_state, self._pt_mid, slot, t // st, "mid")
+            decode_state = self._flush_cow(decode_state)
             decode_state = dict(decode_state)
-            model = dict(decode_state["model"])
-            model["pages"] = self._page_maps()
-            decode_state["model"] = model
-            self._clock[self._occupied] += 1
+            decode_state["model"] = self._refresh_page_maps(
+                decode_state["model"])
+        # the host mirror of every slot's decode clock advances for paged
+        # AND dense engines: phase-aligned admission (phase_gap) reads it,
+        # not just the paged backing loop above
+        self._clock[self._occupied] += 1
         new_ds, data, logits, met = self._gen(params, decode_state)
         self._live = new_ds
         return new_ds, ResultTokens(data=data, logits=logits, metrics=met)
@@ -1201,14 +1335,17 @@ class SOIEngine(Engine):
                 decode_state = self._back_spec_window(decode_state)
             except Exception:
                 # transactional: a failed backing (pool exhausted mid-loop)
-                # must not leak the pages already grown for this window
+                # must not leak the pages already grown for this window;
+                # COW pairs already recorded still describe real map state,
+                # so land their copies on the surviving live state
                 for slot in range(self._slots):
                     self._drop_spec_pending(slot)
+                self._live = self._flush_cow(self._live)
                 raise
+            decode_state = self._flush_cow(decode_state)
             decode_state = dict(decode_state)
-            model = dict(decode_state["model"])
-            model["pages"] = self._page_maps()
-            decode_state["model"] = model
+            decode_state["model"] = self._refresh_page_maps(
+                decode_state["model"])
         spec_mask = jnp.asarray(self._spec_slots)
         new_ds, data, logits, met = self._specgen(params, decode_state,
                                                   spec_mask)
@@ -1277,6 +1414,10 @@ class SOIEngine(Engine):
             raise ValueError(
                 f"free_slot({s_i}): slot is not occupied — it was never "
                 f"inserted into, or already freed (double-free)")
+        # an aborted backing (pool exhausted mid-loop) can leave COW pairs
+        # pending; land them before this release can recycle a pair's
+        # destination page
+        decode_state = self._flush_cow(decode_state)
         self._occupied[s_i] = False
         self._spec_slots[s_i] = False
         # a freed request's in-flight speculative window leaves nothing
@@ -1420,13 +1561,9 @@ class SOIEngine(Engine):
                 carry=(0, None),
                 cost={"role": "hydrate", "tokens": self._chunk,
                       "stride": stride}))
-            src_p = jnp.asarray(1, jnp.int32)
-            dst_p = jnp.asarray(2, jnp.int32)
+            pair = jnp.zeros(self._slots, jnp.int32)
             entries.append(JitEntry(
-                "cow_outer", self._cow_outer_fn, (ds, src_p, dst_p),
+                "cow_batch", self._cow_batch_fn, (ds, pair, pair, pair,
+                                                  pair),
                 donate=(0,), state_args=(0,), carry=(0, None)))
-            if self._pt_mid is not None:
-                entries.append(JitEntry(
-                    "cow_mid", self._cow_mid_fn, (ds, src_p, dst_p),
-                    donate=(0,), state_args=(0,), carry=(0, None)))
         return entries

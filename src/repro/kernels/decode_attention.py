@@ -13,6 +13,12 @@ BlockSpec index map sends block (bi, hi, ki) straight to pool row
 ``page_map[bi, ki]`` — the K/V pages stream from HBM exactly like the dense
 ring blocks, with no gathered intermediate. Null-page entries (id 0) are
 masked inside the kernel body.
+
+``paged_mla_decode_attention`` extends that walk to MLA-absorbed decode:
+the latent/rope pools carry no head axis (every q head reads the same
+(P, L) latent page), so the grid is just (slot, page) and the whole head
+block rides in VMEM — replacing the reference path's per-step gather of a
+dense (B, S_logical, L) view with a direct page-list traversal.
 """
 
 from __future__ import annotations
@@ -84,6 +90,7 @@ def decode_attention(q, k_cache, v_cache, cache_positions, q_position, *,
     kernel = functools.partial(_kernel, scale=scale, n_k=n_k, window=window)
     out = pl.pallas_call(
         kernel,
+        name="decode_attention",
         grid=(b, hkv, n_k),
         in_specs=[
             pl.BlockSpec((1, 1, g, dh), lambda bi, hi, ki: (bi, hi, 0, 0)),
@@ -187,8 +194,100 @@ def paged_decode_attention(q, k_pool, v_pool, pos_pool, page_map, q_position,
     )
     out = pl.pallas_call(
         kernel,
+        name="paged_decode_attention",
         grid_spec=grid_spec,
         out_shape=jax.ShapeDtypeStruct((b, hkv, g, dh), q.dtype),
         interpret=interpret,
     )(pm, qg, k_pool, v_pool, pos_pool, qp)
     return out.reshape(b, h, dh)
+
+
+def _paged_mla_kernel(pm_ref, ql_ref, qr_ref, lat_ref, rope_ref, pos_ref,
+                      t_ref, o_ref, m_scr, l_scr, acc_scr, *, scale, n_k):
+    bi = pl.program_id(0)
+    ki = pl.program_id(1)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    ql = ql_ref[0].astype(jnp.float32)            # (H, L)
+    qr = qr_ref[0].astype(jnp.float32)            # (H, R)
+    lat = lat_ref[0].astype(jnp.float32)          # (page_size, L)
+    rp = rope_ref[0].astype(jnp.float32)          # (page_size, R)
+    pos = pos_ref[0]                              # (page_size,)
+    t = t_ref[0]
+
+    s = (jax.lax.dot_general(ql, lat, (((1,), (1,)), ((), ())))
+         + jax.lax.dot_general(qr, rp, (((1,), (1,)), ((), ())))) * scale
+    # null-page entries are dead even though the null page itself absorbs
+    # discarded writes (its pos lane can hold live-looking values)
+    allow = (pos >= 0) & (pos <= t) & (pm_ref[bi, ki] > 0)
+    s = jnp.where(allow[None, :], s, NEG_INF)     # (H, page_size)
+
+    m_prev = m_scr[...]
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=1))
+    p = jnp.exp(s - m_new[:, None])
+    corr = jnp.exp(m_prev - m_new)
+    l_scr[...] = corr * l_scr[...] + jnp.sum(p, axis=1)
+    acc_scr[...] = (corr[:, None] * acc_scr[...]
+                    + jax.lax.dot_general(p, lat, (((1,), (0,)), ((), ()))))
+    m_scr[...] = m_new
+
+    @pl.when(ki == n_k - 1)
+    def _finalize():
+        denom = jnp.maximum(l_scr[...], 1e-30)[:, None]
+        o_ref[0] = (acc_scr[...] / denom).astype(o_ref.dtype)
+
+
+def paged_mla_decode_attention(q_lat, q_rope, lat_pool, rope_pool, pos_pool,
+                               page_map, q_position, *, scale, out_dtype=None,
+                               interpret=False):
+    """MLA-absorbed single-token attention over paged latent pools.
+
+    q_lat: (B, H, L); q_rope: (B, H, R); pools: (n_pages, page_size, L/R)
+    and (n_pages, page_size) positions; page_map: (B, n_pp) int32 (0 = null
+    page); q_position: (B,). Returns o_lat (B, H, L).
+
+    One grid step per (slot, page): the page id is scalar-prefetched into
+    the latent/rope/pos index maps, so each step DMAs exactly one latent
+    page — no dense (B, S_logical, L) view is ever materialized.
+    """
+    b, h, lat_d = q_lat.shape
+    p_sz = lat_pool.shape[1]
+    n_pp = page_map.shape[1]
+    r = q_rope.shape[-1]
+    out_dtype = q_lat.dtype if out_dtype is None else out_dtype
+    qp = jnp.broadcast_to(jnp.asarray(q_position, jnp.int32), (b,))
+    pm = jnp.asarray(page_map, jnp.int32)
+
+    kernel = functools.partial(_paged_mla_kernel, scale=scale, n_k=n_pp)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(b, n_pp),
+        in_specs=[
+            pl.BlockSpec((1, h, lat_d), lambda bi, ki, pm_: (bi, 0, 0)),
+            pl.BlockSpec((1, h, r), lambda bi, ki, pm_: (bi, 0, 0)),
+            pl.BlockSpec((1, p_sz, lat_d),
+                         lambda bi, ki, pm_: (pm_[bi, ki], 0, 0)),
+            pl.BlockSpec((1, p_sz, r),
+                         lambda bi, ki, pm_: (pm_[bi, ki], 0, 0)),
+            pl.BlockSpec((1, p_sz), lambda bi, ki, pm_: (pm_[bi, ki], 0)),
+            pl.BlockSpec((1,), lambda bi, ki, pm_: (bi,)),
+        ],
+        out_specs=pl.BlockSpec((1, h, lat_d), lambda bi, ki, pm_: (bi, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((h,), jnp.float32),
+            pltpu.VMEM((h,), jnp.float32),
+            pltpu.VMEM((h, lat_d), jnp.float32),
+        ],
+    )
+    return pl.pallas_call(
+        kernel,
+        name="paged_mla_decode_attention",
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((b, h, lat_d), out_dtype),
+        interpret=interpret,
+    )(pm, q_lat, q_rope, lat_pool, rope_pool, pos_pool, qp)

@@ -96,6 +96,7 @@ def flash_attention(q, k, v, *, causal=True, q_offset=0, scale=None,
         sk=sk)
     out = pl.pallas_call(
         kernel,
+        name="flash_attention",
         grid=(b * h, n_q, n_k),
         in_specs=[
             pl.BlockSpec((1, block_q, dh), lambda bh, qi, ki: (bh, qi, 0)),

@@ -54,6 +54,7 @@ def lru_scan(a, x, h0=None, *, block_s=256, block_d=128, interpret=False):
     kernel = functools.partial(_kernel, block_s=block_s, has_h0=has_h0)
     out = pl.pallas_call(
         kernel,
+        name="lru_scan",
         grid=grid,
         in_specs=[
             pl.BlockSpec((1, block_s, block_d), lambda bi, di, si: (bi, si, di)),

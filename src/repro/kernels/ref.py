@@ -334,6 +334,49 @@ def decode_attention(q, k_cache, v_cache, cache_positions, q_position, *,
     return out.reshape(b, h, dh).astype(q.dtype)
 
 
+def mla_chunk_attention(q_lat, q_rope, latent, rope, q_positions,
+                        k_positions, *, scale, out_dtype=None):
+    """Absorbed-matmul MLA chunk oracle: scores over the latent cache
+    directly (q already carries W_UK), value product against the latent
+    pool. The einsum sequence is the historical inline `_mla_chunk` path
+    verbatim — it anchors the bit-exact paged-vs-dense contract, so keep
+    the op order untouched.
+
+    q_lat: (B, C, H, L); q_rope: (B, C, H, R); latent: (B, Sk, L);
+    rope: (B, Sk, R); positions absolute, -1 = empty. Returns (B, C, H, L).
+    """
+    scores = (jnp.einsum("bshl,bkl->bhsk", q_lat.astype(jnp.float32),
+                         latent.astype(jnp.float32))
+              + jnp.einsum("bshk,bek->bhse", q_rope.astype(jnp.float32),
+                           rope.astype(jnp.float32))) * scale
+    allow = ((k_positions[:, None] >= 0)
+             & (k_positions[:, None] <= q_positions[..., None]))
+    scores = jnp.where(allow[:, None], scores, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1)
+    o_lat = jnp.einsum("bhsk,bkl->bshl", probs, latent.astype(jnp.float32))
+    return o_lat.astype(out_dtype if out_dtype is not None else q_lat.dtype)
+
+
+def mla_decode_attention(q_lat, q_rope, latent, rope, positions, q_position,
+                         *, scale, out_dtype=None):
+    """Single-token absorbed-matmul MLA oracle (decode analogue of
+    :func:`mla_chunk_attention`; same inline-path einsum order).
+
+    q_lat: (B, H, L); q_rope: (B, H, R); latent: (B, S, L); rope: (B, S, R);
+    positions: (B, S) absolute with -1 empties; q_position: (B,).
+    Returns o_lat (B, H, L).
+    """
+    scores = (jnp.einsum("bhl,bsl->bhs", q_lat.astype(jnp.float32),
+                         latent.astype(jnp.float32))
+              + jnp.einsum("bhk,bsk->bhs", q_rope.astype(jnp.float32),
+                           rope.astype(jnp.float32))) * scale
+    allow = (positions >= 0) & (positions <= q_position[:, None])
+    scores = jnp.where(allow[:, None], scores, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1)
+    o_lat = jnp.einsum("bhs,bsl->bhl", probs, latent.astype(jnp.float32))
+    return o_lat.astype(out_dtype if out_dtype is not None else q_lat.dtype)
+
+
 def stmc_conv(window, w, b=None):
     """Streaming conv contraction oracle: (B,K,Cin) x (K,Cin,Cout) -> (B,Cout)."""
     y = jnp.einsum("bkc,kcd->bd", window, w)

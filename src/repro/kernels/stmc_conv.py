@@ -53,6 +53,7 @@ def stmc_conv(window, w, b=None, *, block_b=128, block_n=128,
 
     out = pl.pallas_call(
         kernel,
+        name="stmc_conv",
         grid=grid,
         in_specs=in_specs,
         out_specs=pl.BlockSpec((block_b, block_n), lambda i, j: (i, j)),

@@ -34,7 +34,17 @@ import pathlib
 REQUIRED_KEYS = {
     "BENCH_serving_trace.json": (
         "hit_rate", "ttft_p50_s", "ttft_p99_s", "tpot_p50_s", "tpot_p99_s",
-        "tok_s", "off_phase_by_occ"),
+        "tok_s", "off_phase_by_occ", "off_phase_by_occ_aligned",
+        "phase_coherent_rate_aligned"),
+    # kernel-vs-ref timing rows: the trend reader compares the Pallas
+    # hot-path implementations against the pure-JAX references, so a bench
+    # regeneration that silently drops the kernel column must fail loudly
+    "BENCH_paged_kv.json": (
+        "wallclock_step_dense_s", "wallclock_step_paged_s",
+        "wallclock_step_paged_kernel_s", "kernel_backend"),
+    "BENCH_soi_lm.json": (
+        "wallclock_step_soi_s", "wallclock_step_soi_kernel_s",
+        "kernel_backend"),
 }
 
 

@@ -110,6 +110,13 @@ def main(argv=None):
     ap.add_argument("--mixed-spec", action="store_true",
                     help="with --speculate: opt every second request out of "
                          "speculation (mixed speculative/plain batch)")
+    ap.add_argument("--phase-align", action="store_true",
+                    help="phase-aligned admission: delay each insert (at "
+                         "most stride-1 decode steps) until its slot lands "
+                         "in the batch's t %% stride phase class, so the "
+                         "compressed middle keeps skipping at high "
+                         "occupancy instead of firing for a lone misphased "
+                         "slot (engine.can_insert(..., phase_align=True))")
     ap.add_argument("--trace-out", default=None, metavar="PATH",
                     help="write a Perfetto-openable Chrome-trace JSON of "
                          "per-request lifecycle spans; implies engine "
@@ -159,17 +166,11 @@ def main(argv=None):
     traces = {}
 
     t0 = now()
-    first = {}
     admitted = []
-    for slot in range(b):
-        tr = traces[slot] = tracer.request(slot, t_queued=t0)
-        # admission: a request the page pool cannot back right now is
-        # deferred, not crashed into a half-released slot mid-insert
-        if not engine.can_insert(plens[slot], slot):
-            print(f"request {slot} deferred: page pool cannot admit "
-                  f"{plens[slot]} tokens (size --paged pools for the "
-                  f"resident population)")
-            continue
+    out = {}
+
+    def admit(slot, state):
+        tr = traces[slot]
         tr.mark_prefill_start(plens[slot])
         hits0 = (engine.prefix_cache_stats["hits"] if args.prefix_cache
                  else 0)
@@ -182,26 +183,57 @@ def main(argv=None):
                 else None)
         state = engine.insert(prefix, state, slot, speculate=spec)
         tr.mark_inserted()
-        first[slot] = int(prefix.first_token[0])
+        out[slot] = [int(prefix.first_token[0])]
         tr.mark_first_token()
         admitted.append(slot)
+        return state
+
+    pendq = []
+    for slot in range(b):
+        traces[slot] = tracer.request(slot, t_queued=t0)
+        # admission: a request the page pool cannot back right now is
+        # deferred, not crashed into a half-released slot mid-insert
+        if not engine.can_insert(plens[slot], slot):
+            print(f"request {slot} deferred: page pool cannot admit "
+                  f"{plens[slot]} tokens (size --paged pools for the "
+                  f"resident population)")
+            continue
+        pendq.append(slot)
+
+    def admit_ready(state):
+        # pick-slot scheduling: admit every pending request whose slot
+        # would land in the batch's phase class right now; the rest wait
+        # for the phase to come around (each decode step closes a gap by
+        # one, so every request admits within stride-1 steps). Without
+        # --phase-align this admits everything immediately.
+        for slot in list(pendq):
+            if args.phase_align and not engine.can_insert(
+                    plens[slot], slot, phase_align=True):
+                continue
+            pendq.remove(slot)
+            state = admit(slot, state)
+        return state
+
+    state = admit_ready(state)
     t_prefill = now() - t0
-    if not admitted:
+    if not admitted and not pendq:
         print(f"arch={cfg.name}: no request admitted — the paged pools "
               f"cannot back a single prompt; grow n_pages or shrink "
               f"--prompt-len")
         return np.zeros((0, args.gen_len), np.int64)
 
-    out = {slot: [first[slot]] for slot in admitted}
     n_steps = args.gen_len - 1   # every slot gains >= one token per call
 
-    def drain(res, state, done):
+    def drain(res, snapshot, state, done):
         # ONE batched explicit device->host copy per step (host_get under
-        # convert_to_numpy); token extraction below runs on host numpy
+        # convert_to_numpy); token extraction below runs on host numpy.
+        # ``snapshot`` is the admitted set at dispatch: a slot admitted
+        # AFTER this step ran was not active in it, and its result row is
+        # garbage
         res = res.convert_to_numpy()
         if obs_on:
             telemetry.observe_result(res)
-        for slot in admitted:
+        for slot in snapshot:
             if len(out[slot]) < args.gen_len:
                 sd = res.get_result_at_slot(slot)
                 # per-token engines commit their one token; speculative
@@ -220,8 +252,14 @@ def main(argv=None):
 
     t0 = now()
     done = 0
-    pending = None     # the previous step's still-on-device ResultTokens
-    for _ in range(n_steps):
+    pending = None     # the previous step's (ResultTokens, admitted set)
+    # phase-aligned admission can hold each request up to stride-1 extra
+    # steps; bound the loop accordingly (it exits as soon as every
+    # admitted request completes)
+    stride = cfg.soi.stride if cfg.soi is not None else 1
+    for _ in range(n_steps + (len(pendq) + 1) * stride):
+        state = admit_ready(state)
+        snapshot = list(admitted)
         state, result = engine.generate(params, state)
         # drain the PREVIOUS step's tokens while this step runs on device:
         # deferring the copy by one step overlaps host extraction with
@@ -229,13 +267,18 @@ def main(argv=None):
         # (a finished slot is then freed one step late; its ring/page
         # writes stay confined to buffers the free will scrub)
         if pending is not None:
-            state, done = drain(pending, state, done)
-            if done == len(admitted):
+            state, done = drain(*pending, state, done)
+            if done == len(admitted) and not pendq:
                 pending = None
                 break
-        pending = result
+        pending = (result, snapshot)
     if pending is not None:
-        state, done = drain(pending, state, done)
+        state, done = drain(*pending, state, done)
+    for slot in pendq:
+        # reachable only when clocks advanced past every alignment window
+        # (e.g. speculative windows committing variable token counts)
+        print(f"request {slot} not admitted within the phase-align "
+              f"step budget")
     dt = now() - t0
     total = sum(len(v) for v in out.values())
     # each slot's FIRST token came from prefill (before the decode clock
@@ -268,6 +311,11 @@ def main(argv=None):
               f"{pc['evictions']} evictions, {pc['entries']} entries")
     if obs_on:
         telemetry.snapshot_engine(engine)
+        coh = telemetry.phase_coherence()
+        print(f"phase coherence: {100 * coh['coherent_step_rate']:.0f}% of "
+              f"active steps fully aligned (modal-bucket slot fraction "
+              f"{coh['modal_fraction_mean']:.2f}; "
+              f"--phase-align {'on' if args.phase_align else 'off'})")
         if args.trace_out:
             write_trace(tracer, args.trace_out)
             print(f"trace written to {args.trace_out} "

@@ -456,15 +456,8 @@ def _mla_chunk(p, cfg: AttnCfg, x, cache, positions, true_length, *,
 
     q_lat = jnp.einsum("bshk,lhk->bshl", q_nope, p["wuk"])
     scale = (cfg.qk_nope + cfg.qk_rope) ** -0.5
-    scores = (jnp.einsum("bshl,bkl->bhsk", q_lat.astype(jnp.float32),
-                         lat_all.astype(jnp.float32))
-              + jnp.einsum("bshk,bek->bhse", q_rope.astype(jnp.float32),
-                           rope_all.astype(jnp.float32))) * scale
-    allow = (kp[:, None] >= 0) & (kp[:, None] <= qp[..., None])
-    scores = jnp.where(allow[:, None], scores, -1e30)
-    probs = jax.nn.softmax(scores, axis=-1)
-    o_lat = jnp.einsum("bhsk,bkl->bshl", probs,
-                       lat_all.astype(jnp.float32)).astype(x.dtype)
+    o_lat = kops.mla_chunk_attention(q_lat, q_rope, lat_all, rope_all, qp,
+                                     kp, scale=scale, out_dtype=x.dtype)
     out = jnp.einsum("bshl,lhk->bshk", o_lat, p["wuv"])
     y = jnp.einsum("bshk,hkd->bsd", out, p["wo"])
     end = jnp.minimum(positions[0] + c, jnp.asarray(true_length, jnp.int32))
@@ -546,31 +539,23 @@ def _mla_decode(p, cfg: AttnCfg, x, cache, t, *, norm_eps, pages=None,
                         eps=norm_eps)
     k_rope = apply_rope(dkv[:, None, cfg.kv_lora:], tb[:, None],
                         theta=cfg.rope_theta)[:, 0]
-    if pages is not None:
-        cache = _paged_cache_write(cache, pages, t, latent=latent,
-                                   rope=k_rope)
-        # XLA-gathered dense view per step: correct everywhere, but on TPU
-        # this re-materializes the slot's logical cache each token — a
-        # scalar-prefetch paged kernel for the absorbed latent attention
-        # (like the GQA one) is the ROADMAP follow-on before serving MLA
-        # paged at scale
-        view = paged_view(cache, pages)
-    else:
-        cache = _cache_write(cache, t, latent=latent, rope=k_rope)
-        view = cache
-
     # absorb W_UK into q: scores over the latent cache directly
     q_lat = jnp.einsum("bhk,lhk->bhl", q_nope, p["wuk"])
     scale = (cfg.qk_nope + cfg.qk_rope) ** -0.5
-    scores = (jnp.einsum("bhl,bsl->bhs", q_lat.astype(jnp.float32),
-                         view["latent"].astype(jnp.float32))
-              + jnp.einsum("bhk,bsk->bhs", q_rope.astype(jnp.float32),
-                           view["rope"].astype(jnp.float32))) * scale
-    allow = (view["pos"] >= 0) & (view["pos"] <= tb[:, None])
-    scores = jnp.where(allow[:, None], scores, -1e30)
-    probs = jax.nn.softmax(scores, axis=-1)
-    o_lat = jnp.einsum("bhs,bsl->bhl", probs,
-                       view["latent"].astype(jnp.float32)).astype(x.dtype)
+    if pages is not None:
+        cache = _paged_cache_write(cache, pages, t, latent=latent,
+                                   rope=k_rope)
+        # on TPU this walks the page list with scalar prefetch; the ref
+        # path gathers the slot's dense logical view per step (the old
+        # ``paged_view`` read, kept bit-exact vs the dense layout)
+        o_lat = kops.paged_mla_decode_attention(
+            q_lat, q_rope, cache["latent"], cache["rope"], cache["pos"],
+            pages, tb, scale=scale, out_dtype=x.dtype)
+    else:
+        cache = _cache_write(cache, t, latent=latent, rope=k_rope)
+        o_lat = kops.mla_decode_attention(
+            q_lat, q_rope, cache["latent"], cache["rope"], cache["pos"],
+            tb, scale=scale, out_dtype=x.dtype)
     out = jnp.einsum("bhl,lhk->bhk", o_lat, p["wuv"])
     y = jnp.einsum("bhk,hkd->bd", out, p["wo"])
     return y, cache

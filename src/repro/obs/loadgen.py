@@ -110,7 +110,7 @@ def _engine_stride(engine) -> int:
 def run_load(engine, params, requests, *, tracer: Tracer | None = None,
              telemetry: EngineTelemetry | None = None,
              registry: MetricsRegistry | None = None,
-             max_steps: int = 100_000) -> LoadResult:
+             phase_align=False, max_steps: int = 100_000) -> LoadResult:
     """Serve ``requests`` (a :func:`make_trace` list) through ``engine``.
 
     ``telemetry`` defaults to a fresh :class:`EngineTelemetry` at the
@@ -119,6 +119,13 @@ def run_load(engine, params, requests, *, tracer: Tracer | None = None,
     stats are collected). The tracer runs on the virtual clock (epoch
     0.0), so exported trace timestamps line up with the trace's arrival
     times.
+
+    ``phase_align`` turns on phase-aligned admission: an insert whose slot
+    would land off the batch's SOI phase class is deferred until the batch
+    phase comes around to it (``engine.can_insert(..., phase_align=...)``;
+    ``True`` = worst-case stride - 1 steps, an int = tighter SLO bound).
+    Phase deferrals are counted separately (``phase_deferred``) from pool
+    deferrals and add at most stride - 1 decode steps of queue wait.
     """
     if registry is None:
         registry = MetricsRegistry()
@@ -140,8 +147,10 @@ def run_load(engine, params, requests, *, tracer: Tracer | None = None,
     free_slots = deque(range(engine.max_concurrent_decodes))
     active: dict = {}    # slot -> {"req", "tr", "out"}
     pending = None       # (ResultTokens, {slot: rid at dispatch})
-    steps = deferred = 0
+    steps = deferred = phase_deferred = 0
+    phase_streak = 0     # consecutive phase deferrals of the head request
     decoded_tokens = 0
+    stride = _engine_stride(engine)
 
     def drain(pend, state):
         nonlocal decoded_tokens
@@ -197,6 +206,21 @@ def run_load(engine, params, requests, *, tracer: Tracer | None = None,
             if not engine.can_insert(len(req.tokens), slot):
                 deferred += 1
                 break       # head-of-line: pool pressure defers admission
+            if (phase_align and phase_streak < 2 * stride
+                    and not engine.can_insert(
+                        len(req.tokens), slot, phase_align=phase_align)):
+                # the pool can back it but the slot would land off the
+                # batch phase: wait for the phase to come around (each
+                # per-token decode step closes the gap by one, so this
+                # self-resolves within stride - 1 steps). The streak cap
+                # is drift insurance: speculative windows advance clocks
+                # by variable accepted counts and can hop OVER the
+                # alignment point — after 2*stride consecutive misses the
+                # request admits misaligned rather than starve
+                phase_deferred += 1
+                phase_streak += 1
+                break
+            phase_streak = 0
             waiting.popleft()
             free_slots.popleft()
             tr.mark_prefill_start(len(req.tokens), t=clock())
@@ -250,9 +274,12 @@ def run_load(engine, params, requests, *, tracer: Tracer | None = None,
     summary.update({
         "steps": steps,
         "deferred_admissions": deferred,
+        "phase_deferred": phase_deferred,
         "elapsed_s": elapsed,
         "tok_s": decoded_tokens / elapsed,
     })
+    for k, v in telemetry.phase_coherence().items():
+        summary[f"phase_{k}"] = v
     if getattr(engine, "prefix_cache_enabled", False):
         summary["hit_rate"] = engine.prefix_cache_stats["hit_rate"]
     return LoadResult(summary=summary, tracer=tracer, telemetry=telemetry)

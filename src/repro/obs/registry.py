@@ -174,6 +174,23 @@ class EngineTelemetry:
         self.registry = registry if registry is not None else MetricsRegistry()
         # per-occupancy-level step/off-phase counts: {n_active: [steps, off]}
         self._by_occ: dict = {}
+        # phase-coherence accumulators over active steps: how clustered the
+        # batch sits on the t % stride circle (modal-bucket slot fraction).
+        # The counter handle is resolved once — observe_result runs per
+        # decode step and sits inside the serving loop's telemetry budget
+        self._coh_steps = 0
+        self._coh_full = 0
+        self._coh_modal = 0.0
+        reg = self.registry
+        self._coh_counter = reg.counter("engine.phase_coherent_steps")
+        # the rest of the per-step counter handles, resolved once for the
+        # same reason (name formatting + dict lookup per decode step was
+        # the bulk of observe_result's cost)
+        self._c_steps = reg.counter("engine.steps")
+        self._c_occ = [reg.counter(f"engine.phase_occupancy.p{p}")
+                       for p in range(self.stride)]
+        self._c_mid = reg.counter("engine.mid_fired_steps")
+        self._c_off = reg.counter("engine.off_phase_steps")
 
     # -- per-step ----------------------------------------------------------
 
@@ -192,17 +209,27 @@ class EngineTelemetry:
             occ = [int(x) for x in met[:s]]
             mid_fired = int(met[s])
             n_active = int(met[s + 1])
-            reg.counter("engine.steps").inc()
-            for p, n in enumerate(occ):
-                reg.counter(f"engine.phase_occupancy.p{p}").inc(n)
+            self._c_steps.inc()
+            for c, n in zip(self._c_occ, occ):
+                c.inc(n)
             if mid_fired:
-                reg.counter("engine.mid_fired_steps").inc()
+                self._c_mid.inc()
             elif n_active > 0:
-                reg.counter("engine.off_phase_steps").inc()
+                self._c_off.inc()
             if n_active > 0:
                 steps_off = self._by_occ.setdefault(n_active, [0, 0])
                 steps_off[0] += 1
                 steps_off[1] += 0 if mid_fired else 1
+                # coherence: every active slot in ONE t % stride bucket is
+                # the state phase-aligned admission maintains — a coherent
+                # batch pays the middle once per stride instead of (nearly)
+                # every step
+                self._coh_steps += 1
+                modal = max(occ)
+                self._coh_modal += modal / n_active
+                if modal == n_active:
+                    self._coh_full += 1
+                    self._coh_counter.inc()
         if result.accepted_idx is not None:
             data = _require_numpy(result.data, "result data")
             lo, hi = result.accepted_idx
@@ -217,6 +244,19 @@ class EngineTelemetry:
         middle was skipped}. Empty until the first active step."""
         return {occ: (off / steps if steps else 0.0)
                 for occ, (steps, off) in sorted(self._by_occ.items())}
+
+    def phase_coherence(self) -> dict:
+        """How clustered the batch sat on the ``t % stride`` circle, over
+        active steps: ``coherent_step_rate`` is the fraction of steps with
+        EVERY active slot in one phase bucket (those steps skip the middle
+        stride-1 times out of stride); ``modal_fraction_mean`` the mean
+        share of active slots in the step's most-populated bucket (1.0 =
+        perfectly aligned, ~1/stride = phases uniformly scattered). Zeros
+        before the first active step."""
+        if not self._coh_steps:
+            return {"coherent_step_rate": 0.0, "modal_fraction_mean": 0.0}
+        return {"coherent_step_rate": self._coh_full / self._coh_steps,
+                "modal_fraction_mean": self._coh_modal / self._coh_steps}
 
     # -- between steps (host-side state, no device access) -----------------
 

@@ -275,3 +275,66 @@ def test_offphase_cheaper_than_phase0(name):
     assert c.flops - c.flops_min >= floor, (
         f"{name}.{ename}: gap {c.flops - c.flops_min:,.0f} below middle "
         f"floor {floor:,.0f}")
+
+
+# Hand-written HLO: a Pallas chunk-attention kernel after TPU lowering is
+# ONE opaque custom-call — no dots for the parser to count. Pricing goes
+# through the repro.kernels.costs registry, keyed on the pallas_call name
+# carried in the op metadata. Shapes: q (2,16,4,16), k/v (2,48,2,16).
+KERNEL_CC_HLO = """\
+HloModule kernel_cc_fixture
+
+ENTRY %main (q: f32[2,16,4,16], k: f32[2,48,2,16], v: f32[2,48,2,16], qp: s32[2,16], kp: s32[2,48]) -> f32[2,16,4,16] {
+  %q = f32[2,16,4,16] parameter(0)
+  %k = f32[2,48,2,16] parameter(1)
+  %v = f32[2,48,2,16] parameter(2)
+  %qp = s32[2,16] parameter(3)
+  %kp = s32[2,48] parameter(4)
+  ROOT %cc = f32[2,16,4,16] custom-call(f32[2,16,4,16] %q, f32[2,48,2,16] %k, f32[2,48,2,16] %v, s32[2,16] %qp, s32[2,48] %kp), custom_call_target="tpu_custom_call", metadata={op_name="jit(step)/pallas_call[name=chunk_attention]"}
+}
+"""
+
+
+def test_kernel_custom_call_priced():
+    """A registered kernel custom-call is charged its closed-form cost —
+    the same 4*q_elems*Sk the reference attention would be billed."""
+    got = analyze(KERNEL_CC_HLO)
+    q_elems = 2 * 16 * 4 * 16
+    assert got["flops"] == 4.0 * q_elems * 48
+    io = 2 * (q_elems * 4) + 2 * (2 * 48 * 2 * 16 * 4) \
+        + 2 * 16 * 4 + 2 * 48 * 4
+    assert got["bytes"] == io
+    assert got["unpriced_custom_calls"] == []
+
+
+def test_kernel_custom_call_unpriced_reported():
+    """A Pallas-target custom-call with an unknown name lands in
+    unpriced_custom_calls; non-kernel targets (Sharding etc.) stay exempt."""
+    txt = KERNEL_CC_HLO.replace("name=chunk_attention", "name=mystery_fuse")
+    got = analyze(txt)
+    assert got["flops"] == 0
+    assert got["unpriced_custom_calls"] == ["mystery_fuse"]
+    with pytest.raises(ValueError, match="mystery_fuse"):
+        cost._require_priced("cell.generate", got)
+    benign = txt.replace('custom_call_target="tpu_custom_call"',
+                         'custom_call_target="Sharding"')
+    assert analyze(benign)["unpriced_custom_calls"] == []
+
+
+def test_kernel_cost_registry_matches_hlo_convention():
+    """Registry formulas follow the parser's 2*out*contracted dot pricing:
+    the stmc_conv kernel's closed form equals the flops the parser counts
+    for the equivalent plain dot."""
+    from repro.kernels import costs as kcosts
+
+    def sh(dtype, *dims):
+        per = {"f32": 4, "s32": 4, "bf16": 2}[dtype]
+        elems = 1
+        for d in dims:
+            elems *= d
+        return kcosts.Shape(dtype, tuple(dims), elems * per)
+
+    out = kcosts.price("stmc_conv", sh("f32", 8, 32),
+                       [sh("f32", 8, 96), sh("f32", 96, 32)])
+    assert out["flops"] == flops_of(
+        lambda a, b: a @ b, jnp.zeros((8, 96)), jnp.zeros((96, 32)))

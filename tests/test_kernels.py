@@ -133,3 +133,117 @@ def test_mla_shaped_attention_dv_neq_dk():
                                      block_k=8)
     assert o1.shape == (b, s, h, 16)
     assert jnp.max(jnp.abs(o1 - o2)) < 2e-5
+
+
+# --- chunked-prefill / MLA / paged-decode kernels (this PR's hot path) -----
+#
+# Exactness classes (docs/KERNELS.md): the blocked online-softmax kernels
+# reorder the GEMM + softmax reductions, so outputs match the reference to
+# f32 ULP noise (~1e-6 per element, 2e-5 tolerance here), NOT bit-exactly —
+# the contract downstream is argmax stability of the resulting logits.
+# copy_pages moves raw rows and must be bit-exact.
+
+from repro.kernels import chunk_attention as CA
+from repro.kernels import page_copy as PC
+
+
+def _ring_positions(b, sk, filled):
+    """Absolute positions for a ring with ``filled`` live rows (rest -1)."""
+    pos = jnp.broadcast_to(jnp.arange(sk)[None], (b, sk))
+    return jnp.where(pos < filled, pos, -1)
+
+
+@pytest.mark.parametrize("hq,hkv,win,cap,c", [
+    (4, 2, None, None, 16),
+    (4, 4, 12, None, 16),
+    (8, 2, None, 25.0, 16),
+    (4, 2, 12, 25.0, 13),      # ragged chunk vs block_q
+])
+def test_chunk_attention_kernel(hq, hkv, win, cap, c):
+    b, sk, dh = 2, 48, 16
+    q = jax.random.normal(RNG(1), (b, c, hq, dh))
+    k = jax.random.normal(RNG(2), (b, sk, hkv, dh))
+    v = jax.random.normal(RNG(3), (b, sk, hkv, dh))
+    kp = _ring_positions(b, sk, 40)
+    qp = jnp.broadcast_to(24 + jnp.arange(c)[None], (b, c))
+    got = CA.chunk_attention(q, k, v, qp, kp, window=win, logit_softcap=cap,
+                             block_q=8, block_k=16, interpret=True)
+    want = ref.naive_attention(q, k, v, causal=True, window=win,
+                               q_positions=qp, k_positions=kp,
+                               logit_softcap=cap)
+    assert jnp.max(jnp.abs(got - want)) < 2e-5
+
+
+def test_chunk_attention_argmax_stable():
+    """The ULP-level drift must not move downstream token argmax: project
+    both outputs through one readout and compare the picked tokens."""
+    b, c, h, dh, sk, vocab = 2, 16, 4, 16, 48, 64
+    q = jax.random.normal(RNG(1), (b, c, h, dh))
+    k = jax.random.normal(RNG(2), (b, sk, h, dh))
+    v = jax.random.normal(RNG(3), (b, sk, h, dh))
+    kp = _ring_positions(b, sk, 40)
+    qp = jnp.broadcast_to(24 + jnp.arange(c)[None], (b, c))
+    got = CA.chunk_attention(q, k, v, qp, kp, block_q=8, block_k=16,
+                             interpret=True)
+    want = ref.naive_attention(q, k, v, causal=True, q_positions=qp,
+                               k_positions=kp)
+    w = jax.random.normal(RNG(9), (h * dh, vocab))
+    lg_got = got.reshape(b, c, -1) @ w
+    lg_want = want.reshape(b, c, -1) @ w
+    assert jnp.array_equal(jnp.argmax(lg_got, -1), jnp.argmax(lg_want, -1))
+
+
+@pytest.mark.parametrize("c,lat_d,r", [(16, 32, 8), (13, 16, 4)])
+def test_mla_chunk_attention_kernel(c, lat_d, r):
+    b, h, sk = 2, 4, 48
+    ql = jax.random.normal(RNG(1), (b, c, h, lat_d))
+    qr = jax.random.normal(RNG(2), (b, c, h, r))
+    lat = jax.random.normal(RNG(3), (b, sk, lat_d))
+    rp = jax.random.normal(RNG(4), (b, sk, r))
+    kp = _ring_positions(b, sk, 40)
+    qp = jnp.broadcast_to(24 + jnp.arange(c)[None], (b, c))
+    got = CA.mla_chunk_attention(ql, qr, lat, rp, qp, kp, scale=0.125,
+                                 block_q=8, block_k=16, interpret=True)
+    want = ref.mla_chunk_attention(ql, qr, lat, rp, qp, kp, scale=0.125)
+    assert jnp.max(jnp.abs(got - want)) < 2e-5
+
+
+def test_paged_mla_decode_attention_kernel():
+    b, h, lat_d, r = 2, 4, 32, 8
+    n_pages, p_sz, n_pp = 9, 8, 3
+    lat_pool = jax.random.normal(RNG(1), (n_pages, p_sz, lat_d))
+    rope_pool = jax.random.normal(RNG(2), (n_pages, p_sz, r))
+    # page 0 is the reserved null page: pos -1 everywhere
+    pos_pool = jnp.tile(jnp.arange(p_sz)[None], (n_pages, 1))
+    pos_pool = pos_pool.at[0].set(-1)
+    pos_pool = pos_pool + 8 * (jnp.arange(n_pages)[:, None] - 1)
+    pos_pool = jnp.where(jnp.arange(n_pages)[:, None] == 0, -1, pos_pool)
+    page_map = jnp.asarray([[1, 2, 0], [3, 4, 5]], jnp.int32)
+    ql = jax.random.normal(RNG(3), (b, h, lat_d))
+    qr = jax.random.normal(RNG(4), (b, h, r))
+    t = jnp.asarray([11, 13])
+    got = DA.paged_mla_decode_attention(ql, qr, lat_pool, rope_pool,
+                                        pos_pool, page_map, t, scale=0.125,
+                                        interpret=True)
+    # oracle: the gathered dense view the ref dispatch path uses
+    lat = lat_pool[page_map].reshape(b, n_pp * p_sz, lat_d)
+    rp = rope_pool[page_map].reshape(b, n_pp * p_sz, r)
+    pos = pos_pool[page_map].reshape(b, n_pp * p_sz)
+    pos = jnp.where(jnp.repeat(page_map > 0, p_sz, axis=1), pos, -1)
+    want = ref.mla_decode_attention(ql, qr, lat, rp, pos, t, scale=0.125)
+    assert jnp.max(jnp.abs(got - want)) < 2e-5
+
+
+@pytest.mark.parametrize("tail", [(), (4,), (2, 3)])
+def test_copy_pages_bitexact(tail):
+    """Raw row moves: the kernel must be BIT-exact vs the scatter, across
+    pool ranks, with (0, 0) null-page padding pairs as no-ops."""
+    n_pages, p_sz = 7, 8
+    pool = jax.random.normal(RNG(1), (n_pages, p_sz) + tail)
+    srcs = jnp.asarray([1, 3, 0, 0], jnp.int32)
+    dsts = jnp.asarray([5, 6, 0, 0], jnp.int32)
+    got = PC.copy_pages(pool, srcs, dsts, interpret=True)
+    want = pool.at[dsts].set(pool[srcs])
+    assert jnp.array_equal(got, want)
+    # untouched rows identical to the input (the alias really is in-place)
+    assert jnp.array_equal(got[1:5], pool[1:5])
